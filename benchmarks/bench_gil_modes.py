@@ -1,0 +1,66 @@
+"""Paper Table 3 / Fig 10: Python-version & GIL-mode sensitivity.
+
+The container has exactly one interpreter (CPython 3.13, GIL enabled), so
+the 3.12/3.13/3.13t sweep cannot be run.  What we CAN measure is the
+mechanism the paper attributes the win to: whether a worker thread's
+GIL-releasing work overlaps a GIL-holding main thread.  We run a
+pure-python spin on the main thread while a worker does (a) zstd decode
+(releases) vs (b) pure-python decode (holds), and report the slowdown each
+inflicts on the main thread — the Fig 2 "operations get slower as threads
+are added" effect, isolated.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.data.codec import decode_sample, encode_sample, py_decode
+
+
+def _main_thread_spin(n: int = 250_000) -> float:
+    t0 = time.monotonic()
+    acc = 0
+    for i in range(n):
+        acc = (acc + i * i) % 1000003
+    return time.monotonic() - t0
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    sample = encode_sample(rng.integers(0, 256, (512, 512, 3), dtype=np.uint8))
+    rows = []
+    gil = getattr(sys, "_is_gil_enabled", lambda: True)()
+    rows.append(("table3_python", 0.0, f"{sys.version_info.major}.{sys.version_info.minor};gil_enabled={gil}"))
+
+    base = min(_main_thread_spin() for _ in range(3))
+
+    for label, fn in [("zstd_release", decode_sample), ("pure_py_hold", py_decode)]:
+        stop = threading.Event()
+
+        def worker():
+            while not stop.is_set():
+                fn(sample)
+
+        th = threading.Thread(target=worker, daemon=True)
+        th.start()
+        time.sleep(0.05)
+        dt = min(_main_thread_spin() for _ in range(3))
+        stop.set()
+        th.join()
+        rows.append(
+            (
+                f"table3_main_thread_vs_{label}",
+                dt * 1e6,
+                f"slowdown_x{dt / base:.2f}_vs_idle",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

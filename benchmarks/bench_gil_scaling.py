@@ -1,0 +1,81 @@
+"""Paper Fig 1/2: thread- vs process-pool scaling of media decode, and the
+GIL-contention mechanism.
+
+Three decode variants over the same encoded samples:
+  - ``zstd+numpy``  : releases the GIL (SPDL-style C-extension path)
+  - ``pure-python`` : holds the GIL (Pillow-like interpreter work)
+  - ``simulated-io``: sleeps (network-style, always releases)
+
+NOTE: this container has ONE CPU core, so CPU-bound *parallel speedup* is
+physically capped at 1×; what the sweep still demonstrates is the paper's
+Fig 2 contention effect — pure-python decode *degrades* as threads are
+added (GIL churn), while GIL-releasing decode does not — and the IO-bound
+stage scales with threads even on one core.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+
+import numpy as np
+
+from repro.data.codec import decode_sample, encode_sample, py_decode, resize_nearest
+
+N_SAMPLES = 48
+HW = (128, 128)
+
+
+def _samples():
+    rng = np.random.default_rng(0)
+    return [
+        encode_sample(rng.integers(0, 256, (*HW, 3), dtype=np.uint8))
+        for _ in range(N_SAMPLES)
+    ]
+
+
+def _decode_zstd(data: bytes) -> np.ndarray:
+    return resize_nearest(decode_sample(data), (64, 64))
+
+
+def _decode_py(data: bytes) -> np.ndarray:
+    return resize_nearest(py_decode(data), (64, 64))
+
+
+def _decode_io(data: bytes) -> np.ndarray:
+    time.sleep(0.004)
+    return decode_sample(data)
+
+
+def _throughput(executor_cls, fn, samples, workers: int) -> float:
+    with executor_cls(max_workers=workers) as ex:
+        t0 = time.monotonic()
+        list(ex.map(fn, samples))
+        dt = time.monotonic() - t0
+    return len(samples) / dt
+
+
+def run() -> list[tuple[str, float, str]]:
+    samples = _samples()
+    rows = []
+    for label, fn in [("zstd", _decode_zstd), ("pure_py", _decode_py), ("sim_io", _decode_io)]:
+        base = _throughput(ThreadPoolExecutor, fn, samples, 1)
+        for w in (1, 2, 4, 8):
+            fps = _throughput(ThreadPoolExecutor, fn, samples, w)
+            rows.append(
+                (f"fig1_thread_{label}_w{w}", 1e6 / fps, f"{fps:.0f}fps;x{fps / base:.2f}_vs_w1")
+            )
+    # process pool for the GIL-holding variant (the paper's workaround)
+    for w in (1, 2):
+        fps = _throughput(ProcessPoolExecutor, _mp_decode, samples, w)
+        rows.append((f"fig1_process_pure_py_w{w}", 1e6 / fps, f"{fps:.0f}fps"))
+    return rows
+
+
+def _mp_decode(data: bytes) -> int:  # picklable process-pool task
+    return _decode_py(data).shape[0]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

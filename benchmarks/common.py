@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, **kw):
+    t0 = time.monotonic()
+    out = fn(*args, **kw)
+    return time.monotonic() - t0, out
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def consume(iterable, n: int | None = None) -> int:
+    cnt = 0
+    for _ in iterable:
+        cnt += 1
+        if n is not None and cnt >= n:
+            break
+    return cnt

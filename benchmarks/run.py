@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract).  The roofline
+rows are derived from the dry-run artifacts under experiments/dryrun (run
+``python -m repro.launch.dryrun`` first to refresh them).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_e2e,
+        bench_first_batch,
+        bench_gil_modes,
+        bench_gil_scaling,
+        bench_loader_throughput,
+        bench_resources,
+        bench_video,
+        bench_wire_format,
+        roofline,
+    )
+
+    modules = [
+        ("fig1/2 GIL scaling", bench_gil_scaling),
+        ("fig5 loader throughput", bench_loader_throughput),
+        ("table2 first batch", bench_first_batch),
+        ("fig6/7 resources", bench_resources),
+        ("fig8/9 e2e inference+training", bench_e2e),
+        ("table3 GIL modes", bench_gil_modes),
+        ("appC video/decord", bench_video),
+        ("wire format (beyond-paper)", bench_wire_format),
+        ("roofline (dry-run derived)", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{label.replace(' ', '_')}_FAILED,0,{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Checkpointing: async, atomic, and inclusive of data-pipeline state.
+
+The checkpoint is (params, opt_state, step, **sampler state**) — saving the
+sampler cursor is what the paper's §3 says process-based loaders cannot do
+cleanly; with the thread-based pipeline it is a dict read.  Writes happen on
+a background thread from a host snapshot (training continues), into a temp
+dir renamed atomically, so a preemption mid-write never corrupts the latest
+complete checkpoint — the fault-tolerance contract the trainer relies on.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(tree: Any, flat: dict[str, np.ndarray]) -> Any:
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        target_dtype = leaf.dtype
+        leaves.append(arr.astype(target_dtype) if arr.dtype != target_dtype else arr)
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), leaves)
+
+
+def save_checkpoint(
+    ckpt_dir: str | pathlib.Path,
+    step: int,
+    params: Any,
+    opt_state: Any | None = None,
+    sampler_state: dict | None = None,
+    extra: dict | None = None,
+) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    blobs = {f"params{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blobs.update({f"opt{k}": v for k, v in _flatten(opt_state).items()})
+    # bf16 is not npy-native: stash as uint16 raw with a dtype manifest
+    manifest = {}
+    store = {}
+    for k, v in blobs.items():
+        manifest[k] = str(v.dtype)
+        store[k] = v.view(np.uint16) if v.dtype.name == "bfloat16" else v
+    np.savez(tmp / "arrays.npz", **store)
+    meta = {
+        "step": step,
+        "dtypes": manifest,
+        "sampler": sampler_state,
+        "extra": extra or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    ckpt_dir: str | pathlib.Path,
+    params_template: Any,
+    opt_template: Any | None = None,
+    step: int | None = None,
+) -> dict:
+    """Restore into the given pytree templates (shape/dtype authority)."""
+    import ml_dtypes
+
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        raw = {k: z[k] for k in z.files}
+    for k, dt in meta["dtypes"].items():
+        if dt == "bfloat16":
+            raw[k] = raw[k].view(ml_dtypes.bfloat16)
+    params = _unflatten_into(
+        params_template, {k[len("params"):]: v for k, v in raw.items() if k.startswith("params")}
+    )
+    out = {"step": meta["step"], "params": params, "sampler": meta["sampler"], "extra": meta["extra"]}
+    if opt_template is not None:
+        out["opt_state"] = _unflatten_into(
+            opt_template, {k[len("opt"):]: v for k, v in raw.items() if k.startswith("opt")}
+        )
+    return out
+
+
+class CheckpointManager:
+    """Periodic async checkpoints with retention; ``wait()`` before exit."""
+
+    def __init__(self, ckpt_dir: str | pathlib.Path, *, every: int = 100, keep: int = 3):
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.every = every
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def maybe_save(self, step: int, params, opt_state, sampler_state=None, extra=None) -> bool:
+        if step % self.every:
+            return False
+        self.wait()  # at most one write in flight
+        # snapshot on the caller thread (host copies); write in background
+        params_host = jax.tree.map(np.asarray, params)
+        opt_host = jax.tree.map(np.asarray, opt_state)
+
+        def _write():
+            try:
+                save_checkpoint(self.ckpt_dir, step, params_host, opt_host, sampler_state, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True, name="ckpt-writer")
+        self._thread.start()
+        return True
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.ckpt_dir.iterdir()
+            if p.name.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,26 @@
+"""repro.core — the SPDL pipeline engine (the paper's contribution).
+
+Public API mirrors the paper's Listing 1: ``PipelineBuilder`` chains plain
+Python functions into a thread-pool-backed, queue-connected pipeline driven
+by an asyncio event loop on a dedicated scheduler thread.
+"""
+
+from .autotune import Suggestion, autotune, suggest
+from .builder import PipelineBuilder
+from .errors import OnError, PipelineFailure, PipelineStopped
+from .pipeline import Pipeline
+from .stats import ResourceSampler, StageStatsSnapshot, format_stats
+
+__all__ = [
+    "PipelineBuilder",
+    "autotune",
+    "suggest",
+    "Suggestion",
+    "Pipeline",
+    "OnError",
+    "PipelineFailure",
+    "PipelineStopped",
+    "ResourceSampler",
+    "StageStatsSnapshot",
+    "format_stats",
+]

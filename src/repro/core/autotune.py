@@ -1,0 +1,85 @@
+"""Pipeline auto-tuning: turn the visibility stats into concurrency changes.
+
+The paper's principles make the loop explicit: *Visibility* tells you which
+stage is the bottleneck, *Tunability* lets you widen exactly that stage.
+``suggest()`` reads a live pipeline's stats and returns a concrete new
+stage-concurrency map; ``autotune()`` re-builds the pipeline via a factory
+until the sink stays ahead of the consumer or improvements stall.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .pipeline import Pipeline
+
+
+@dataclasses.dataclass(frozen=True)
+class Suggestion:
+    stage: str | None  # None -> nothing to do
+    concurrency: int
+    reason: str
+
+
+def suggest(pipeline: Pipeline, *, max_concurrency: int = 16) -> Suggestion:
+    """Pick the stage to widen: the busiest pipe stage that is neither
+    starved (upstream problem) nor backpressured (downstream problem)."""
+    stats = [s for s in pipeline.stats() if s.name not in ("source",)]
+    if not stats:
+        return Suggestion(None, 0, "no stages")
+    work = [s for s in stats if s.avg_task_time > 0]
+    if not work:
+        return Suggestion(None, 0, "no measurable work yet")
+    bottleneck = max(work, key=lambda s: s.occupancy)
+    if bottleneck.occupancy < 0.5:
+        return Suggestion(
+            None, bottleneck.concurrency,
+            f"busiest stage {bottleneck.name!r} only {bottleneck.occupancy:.0%} occupied: "
+            "pipeline is not the limiter",
+        )
+    if bottleneck.put_wait > bottleneck.get_wait * 2:
+        return Suggestion(
+            None, bottleneck.concurrency,
+            f"{bottleneck.name!r} is backpressured (put_wait {bottleneck.put_wait:.2f}s): "
+            "the consumer, not the pipeline, is the limiter",
+        )
+    new = min(max_concurrency, bottleneck.concurrency * 2)
+    if new == bottleneck.concurrency:
+        return Suggestion(None, new, f"{bottleneck.name!r} already at max_concurrency")
+    return Suggestion(
+        bottleneck.name, new,
+        f"{bottleneck.name!r} occupied {bottleneck.occupancy:.0%} with low waits: widen "
+        f"{bottleneck.concurrency} -> {new}",
+    )
+
+
+def autotune(
+    factory: Callable[[dict[str, int]], Pipeline],
+    probe: Callable[[Pipeline], float],
+    *,
+    initial: dict[str, int] | None = None,
+    rounds: int = 3,
+    min_gain: float = 0.05,
+) -> tuple[dict[str, int], list[dict]]:
+    """Iterate: build pipeline with the concurrency map → probe throughput →
+    apply the suggestion; stop on < min_gain improvement or no suggestion.
+
+    ``factory(conc_map)`` builds a fresh pipeline; ``probe`` consumes some
+    of it and returns items/s.  Returns (best_map, log)."""
+    conc = dict(initial or {})
+    log: list[dict] = []
+    best = -1.0
+    for r in range(rounds):
+        pipe = factory(conc)
+        with pipe.auto_stop():
+            rate = probe(pipe)
+            s = suggest(pipe)
+        log.append({"round": r, "conc": dict(conc), "rate": rate, "suggestion": s.reason})
+        if rate < best * (1.0 + min_gain) and r > 0:
+            break
+        best = max(best, rate)
+        if s.stage is None:
+            break
+        conc[s.stage] = s.concurrency
+    return conc, log

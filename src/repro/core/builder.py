@@ -1,0 +1,133 @@
+"""PipelineBuilder — the paper's user-facing construction API (§5.9.1).
+
+No DSL: stages are plain Python callables (sync or async).  Example::
+
+    pipeline = (
+        PipelineBuilder()
+        .add_source(source())
+        .pipe(download, concurrency=12)
+        .pipe(decode, concurrency=4)
+        .aggregate(32)
+        .pipe(batch_transfer)
+        .add_sink(buffer_size=3)
+        .build(num_threads=16)
+    )
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Executor
+from typing import Any, AsyncIterable, Callable, Iterable
+
+from .engine import StageSpec
+from .errors import OnError
+from .pipeline import Pipeline
+
+
+class PipelineBuilder:
+    def __init__(self) -> None:
+        self._specs: list[StageSpec] = []
+        self._sink_buffer_size: int | None = None
+
+    # ------------------------------------------------------------------
+    def add_source(self, source: Iterable | AsyncIterable, name: str = "source") -> "PipelineBuilder":
+        if self._specs:
+            raise ValueError("add_source must be the first stage")
+        if not (hasattr(source, "__iter__") or hasattr(source, "__aiter__")):
+            raise TypeError("source must be Iterable or AsyncIterable")
+        self._specs.append(StageSpec(kind="source", name=name, source=source))
+        return self
+
+    def pipe(
+        self,
+        fn: Callable[[Any], Any],
+        *,
+        concurrency: int = 1,
+        executor: Executor | None = None,
+        name: str | None = None,
+        output_order: str = "input",
+        on_error: str | OnError = OnError.SKIP,
+        timeout: float | None = None,
+        queue_size: int = 2,
+    ) -> "PipelineBuilder":
+        """Chain a processing stage.
+
+        Args:
+          fn: sync or async callable applied to each item.  Sync callables
+            run on the pipeline thread pool (or ``executor`` if given), so
+            they should release the GIL to scale; async callables run on the
+            event loop (never GIL-bound).
+          concurrency: max in-flight tasks for this stage.
+          executor: optional executor override; pass a
+            ``ProcessPoolExecutor`` for GIL-holding third-party code (§5.8).
+          output_order: "input" preserves input order; "completion" emits as
+            tasks finish.
+          on_error: "skip" (robust, default) or "fail" (fail-fast).
+          timeout: optional per-item timeout in seconds.
+          queue_size: output queue bound (backpressure granularity).
+        """
+        self._require_source()
+        if concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+        if output_order not in ("input", "completion"):
+            raise ValueError("output_order must be 'input' or 'completion'")
+        self._specs.append(
+            StageSpec(
+                kind="pipe",
+                name=name or getattr(fn, "__name__", "pipe"),
+                fn=fn,
+                concurrency=concurrency,
+                executor=executor,
+                output_order=output_order,
+                on_error=OnError(on_error),
+                timeout=timeout,
+                queue_size=queue_size,
+            )
+        )
+        return self
+
+    def aggregate(self, num_items: int, *, drop_last: bool = False, name: str | None = None) -> "PipelineBuilder":
+        """Group consecutive items into lists of ``num_items`` (§5.9.1)."""
+        self._require_source()
+        if num_items < 1:
+            raise ValueError("num_items must be >= 1")
+        self._specs.append(
+            StageSpec(
+                kind="aggregate",
+                name=name or f"aggregate({num_items})",
+                agg_size=num_items,
+                drop_last=drop_last,
+            )
+        )
+        return self
+
+    def disaggregate(self, name: str | None = None) -> "PipelineBuilder":
+        """Flatten iterable items back into single elements."""
+        self._require_source()
+        self._specs.append(StageSpec(kind="disaggregate", name=name or "disaggregate"))
+        return self
+
+    def add_sink(self, buffer_size: int = 3) -> "PipelineBuilder":
+        """Terminal buffer the consumer thread reads from."""
+        self._require_source()
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        if self._sink_buffer_size is not None:
+            raise ValueError("add_sink already called")
+        self._sink_buffer_size = buffer_size
+        return self
+
+    # ------------------------------------------------------------------
+    def build(self, *, num_threads: int = 8) -> Pipeline:
+        self._require_source()
+        if len(self._specs) < 2:
+            raise ValueError("pipeline needs at least a source and one stage")
+        return Pipeline(
+            list(self._specs),
+            num_threads=num_threads,
+            sink_buffer_size=self._sink_buffer_size or 3,
+        )
+
+    def _require_source(self) -> None:
+        if not self._specs:
+            raise ValueError("call add_source first")

@@ -1,0 +1,259 @@
+"""Stage runners: the coroutines that make up a pipeline (paper §5.5).
+
+Each stage is a coroutine scheduled on the event loop that runs on the
+scheduler thread.  A stage pulls items from its input ``MonitoredQueue``,
+applies its function with up to ``concurrency`` tasks in flight, and pushes
+results to its output queue.  Synchronous functions are delegated to the
+executor (thread pool by default, user-supplied process pool optionally) via
+``loop.run_in_executor`` — this is where GIL-releasing functions actually run
+concurrently.  Coroutine functions are awaited on the loop itself and never
+touch the pool (paper §5.2: coroutines are not constrained by the GIL).
+
+EOF protocol: exactly one ``EOF`` sentinel traverses each queue.  On the
+normal path a stage *blocks* putting EOF (downstream is draining, so this
+terminates).  On the exceptional path (fail-fast error or cancellation) it
+*force-puts* EOF without blocking so teardown can never deadlock on a full
+queue whose consumer is already dead.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import inspect
+import logging
+import time
+from concurrent.futures import Executor
+from typing import Any, AsyncIterable, Callable, Iterable
+
+from .errors import OnError, PipelineFailure
+from .queues import EOF, MonitoredQueue
+from .stats import StageStats
+
+logger = logging.getLogger("repro.core")
+
+
+def _is_async_callable(fn: Callable) -> bool:
+    if inspect.iscoroutinefunction(fn):
+        return True
+    call = getattr(fn, "__call__", None)  # noqa: B004 - callables/partials
+    return call is not None and inspect.iscoroutinefunction(call)
+
+
+@dataclasses.dataclass
+class StageSpec:
+    """One entry built by ``PipelineBuilder``."""
+
+    kind: str  # "source" | "pipe" | "aggregate" | "disaggregate"
+    name: str
+    fn: Callable | None = None
+    source: Iterable | AsyncIterable | None = None
+    concurrency: int = 1
+    executor: Executor | None = None  # None -> pipeline default thread pool
+    output_order: str = "input"  # "input" | "completion"
+    on_error: OnError = OnError.SKIP
+    timeout: float | None = None
+    agg_size: int = 0
+    drop_last: bool = False
+    queue_size: int = 2  # output queue bound (per stage)
+
+
+class StageRuntime:
+    """Binds a StageSpec to queues/stats and runs it."""
+
+    def __init__(
+        self,
+        spec: StageSpec,
+        in_q: MonitoredQueue | None,
+        out_q: MonitoredQueue,
+        default_executor: Executor,
+    ):
+        self.spec = spec
+        self.in_q = in_q
+        self.out_q = out_q
+        self.default_executor = default_executor
+        self.stats = StageStats(name=spec.name, concurrency=spec.concurrency)
+        if in_q is not None:
+            in_q.consumer_stats = self.stats
+        out_q.producer_stats = self.stats
+
+    # ------------------------------------------------------------------
+    async def _call(self, item: Any) -> Any:
+        """Invoke the stage function for one item (async- or executor-path)."""
+        fn = self.spec.fn
+        assert fn is not None
+        if _is_async_callable(fn):
+            coro = fn(item)
+        else:
+            loop = asyncio.get_running_loop()
+            ex = self.spec.executor or self.default_executor
+            coro = loop.run_in_executor(ex, fn, item)
+        if self.spec.timeout is not None:
+            return await asyncio.wait_for(coro, self.spec.timeout)
+        return await coro
+
+    async def _guarded(self, item: Any) -> tuple[bool, Any]:
+        """Run one task; returns (ok, result). Raises only in fail-fast mode."""
+        t0 = time.monotonic()
+        try:
+            result = await self._call(item)
+            self.stats.record_task(time.monotonic() - t0)
+            return True, result
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:
+            self.stats.record_task(time.monotonic() - t0)
+            self.stats.record_failure(e)
+            logger.warning("stage %s failed on item: %r", self.spec.name, e)
+            if self.spec.on_error is OnError.FAIL:
+                raise PipelineFailure(self.spec.name, e) from e
+            return False, None
+
+    async def _emit(self, item: Any) -> None:
+        await self.out_q.put(item)
+        self.stats.record_out()
+
+    # -- top-level runner --------------------------------------------------
+    async def run(self) -> None:
+        """Run the stage body with the EOF teardown protocol."""
+        body = {
+            "source": self._run_source,
+            "pipe": self._run_pipe,
+            "aggregate": self._run_aggregate,
+            "disaggregate": self._run_disaggregate,
+        }[self.spec.kind]
+        try:
+            await body()
+            await self.out_q.put(EOF)  # normal path: block until accepted
+        except BaseException:
+            self.out_q.put_nowait_force(EOF)  # teardown path: never block
+            raise
+
+    # -- stage bodies ----------------------------------------------------
+    async def _run_source(self) -> None:
+        src = self.spec.source
+        if hasattr(src, "__aiter__"):
+            async for item in src:  # type: ignore[union-attr]
+                await self._emit(item)
+        else:
+            # A synchronous iterable is advanced on the loop thread.  The
+            # per-item cost of sources (paths / indices) is tiny; blocking
+            # sources should be wrapped in an async generator or offloaded
+            # with a pipe stage instead.
+            for item in src:  # type: ignore[union-attr]
+                await self._emit(item)
+
+    async def _run_pipe(self) -> None:
+        if self.spec.output_order == "completion":
+            await self._run_pipe_unordered()
+        else:
+            await self._run_pipe_ordered()
+
+    async def _run_pipe_ordered(self) -> None:
+        """Input-order-preserving concurrent map.
+
+        A reader creates up to ``concurrency`` in-flight tasks; an emitter
+        awaits them in FIFO order, so results come out in input order while
+        up to N items are processed concurrently.  The bounded task queue is
+        the concurrency limiter, so backpressure from out_q stalls the reader.
+        """
+        assert self.in_q is not None
+        # ``sem`` is the true in-flight bound; ``task_q`` only parks tasks
+        # (running or completed) in FIFO order for the emitter, so completed
+        # results buffered ahead of a backpressured emitter stay bounded too.
+        sem = asyncio.Semaphore(self.spec.concurrency)
+        task_q: asyncio.Queue[Any] = asyncio.Queue(self.spec.concurrency)
+
+        async def guarded_release(item: Any) -> tuple[bool, Any]:
+            try:
+                return await self._guarded(item)
+            finally:
+                sem.release()
+
+        async def reader() -> None:
+            try:
+                while True:
+                    item = await self.in_q.get()
+                    if item is EOF:
+                        break
+                    await sem.acquire()
+                    t = asyncio.ensure_future(guarded_release(item))
+                    try:
+                        await task_q.put(t)
+                    except BaseException:
+                        t.cancel()
+                        raise
+                await task_q.put(EOF)
+            except BaseException:
+                # Emitter is failed/cancelled (or we are); never block here.
+                try:
+                    task_q.put_nowait(EOF)
+                except asyncio.QueueFull:
+                    pass
+                raise
+
+        async def emitter() -> None:
+            while True:
+                t = await task_q.get()
+                if t is EOF:
+                    return
+                ok, result = await t
+                if ok:
+                    await self._emit(result)
+
+        try:
+            async with asyncio.TaskGroup() as tg:
+                tg.create_task(reader(), name=f"{self.spec.name}:reader")
+                tg.create_task(emitter(), name=f"{self.spec.name}:emitter")
+        except BaseException:
+            while not task_q.empty():  # cancel still-pending work
+                t = task_q.get_nowait()
+                if t is not EOF:
+                    t.cancel()
+            raise
+
+    async def _run_pipe_unordered(self) -> None:
+        """Completion-order concurrent map (lower latency, no ordering)."""
+        assert self.in_q is not None
+        sem = asyncio.Semaphore(self.spec.concurrency)
+
+        async def worker(item: Any) -> None:
+            try:
+                ok, result = await self._guarded(item)
+                if ok:
+                    await self._emit(result)
+            finally:
+                sem.release()
+
+        async with asyncio.TaskGroup() as tg:
+            while True:
+                item = await self.in_q.get()
+                if item is EOF:
+                    break
+                await sem.acquire()
+                tg.create_task(worker(item))
+            # TaskGroup's __aexit__ awaits outstanding workers before we
+            # return to run(), which then emits EOF downstream.
+
+    async def _run_aggregate(self) -> None:
+        assert self.in_q is not None
+        buf: list[Any] = []
+        while True:
+            item = await self.in_q.get()
+            if item is EOF:
+                break
+            buf.append(item)
+            if len(buf) >= self.spec.agg_size:
+                await self._emit(buf)
+                buf = []
+        if buf and not self.spec.drop_last:
+            await self._emit(buf)
+
+    async def _run_disaggregate(self) -> None:
+        assert self.in_q is not None
+        while True:
+            item = await self.in_q.get()
+            if item is EOF:
+                break
+            for sub in item:
+                await self._emit(sub)

@@ -1,0 +1,33 @@
+"""Error types and per-sample failure policies for the pipeline engine.
+
+The paper's "Robustness" principle (§5.4): sample-level failures (bad media,
+flaky network) must not kill the pipeline; they are logged, counted, and
+skipped.  A pipeline can opt into fail-fast semantics instead.
+"""
+
+from __future__ import annotations
+
+import enum
+
+
+class OnError(str, enum.Enum):
+    """What a stage does when its function raises for one item."""
+
+    SKIP = "skip"  # log + count + drop the item, keep going (paper default)
+    FAIL = "fail"  # cancel the whole pipeline, surface the error to the iterator
+
+
+class PipelineFailure(RuntimeError):
+    """Raised in the consumer thread when a fail-fast stage errored.
+
+    The original exception is available as ``__cause__``.
+    """
+
+    def __init__(self, stage: str, cause: BaseException):
+        super().__init__(f"pipeline stage {stage!r} failed: {cause!r}")
+        self.stage = stage
+        self.__cause__ = cause
+
+
+class PipelineStopped(RuntimeError):
+    """Raised when interacting with a pipeline that has been stopped."""

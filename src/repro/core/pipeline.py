@@ -1,0 +1,251 @@
+"""Pipeline: the user-facing object (paper §5.5, Listing 1).
+
+Running an asyncio event loop is itself blocking, so it cannot live on the
+main thread; a dedicated *scheduler thread* runs the loop (paper §5.5.2) and
+the loop dispatches stage work to the worker thread pool.  The main thread
+only ever touches the sink queue — GIL competition is confined to the main
+thread and the scheduler thread, which is the paper's central scaling trick.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import contextlib
+import logging
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Iterator
+
+from .engine import StageRuntime, StageSpec
+from .errors import PipelineFailure, PipelineStopped
+from .queues import EOF, MonitoredQueue
+from .stats import StageStatsSnapshot, format_stats
+
+logger = logging.getLogger("repro.core")
+
+
+class Pipeline:
+    """A built, runnable data pipeline.
+
+    Iterate it from the consumer thread::
+
+        with pipeline.auto_stop():
+            for batch in pipeline:
+                ...
+
+    The pipeline starts lazily on first iteration (or explicitly via
+    ``start()``).  ``stop()`` cancels all stages, joins the scheduler thread
+    and shuts down the default thread pool.
+    """
+
+    def __init__(self, specs: list[StageSpec], num_threads: int, sink_buffer_size: int):
+        self._specs = specs
+        self._num_threads = num_threads
+        self._sink_buffer_size = sink_buffer_size
+
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._executor: ThreadPoolExecutor | None = None
+        self._root_fut: concurrent.futures.Future | None = None
+        self._root_task: asyncio.Task | None = None
+        self._runtimes: list[StageRuntime] = []
+        self._sink_q: MonitoredQueue | None = None
+        self._started = False
+        self._stopped = False
+        self._loop_ready = threading.Event()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "Pipeline":
+        if self._started:
+            return self
+        if self._stopped:
+            raise PipelineStopped("pipeline already stopped")
+        self._started = True
+        self._executor = ThreadPoolExecutor(
+            max_workers=self._num_threads, thread_name_prefix="repro-worker"
+        )
+        self._thread = threading.Thread(
+            target=self._thread_main, daemon=True, name="repro-scheduler"
+        )
+        self._thread.start()
+        self._loop_ready.wait()
+        assert self._loop is not None
+        self._root_fut = asyncio.run_coroutine_threadsafe(self._root(), self._loop)
+        return self
+
+    def _thread_main(self) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        self._loop_ready.set()
+        try:
+            loop.run_forever()
+        finally:
+            # Cancel anything still pending, then close.
+            pending = asyncio.all_tasks(loop)
+            for t in pending:
+                t.cancel()
+            if pending:
+                loop.run_until_complete(
+                    asyncio.gather(*pending, return_exceptions=True)
+                )
+            loop.close()
+
+    async def _root(self) -> None:
+        """Wire queues to stages and run them all under one TaskGroup."""
+        self._root_task = asyncio.current_task()
+        assert self._executor is not None
+        queues: list[MonitoredQueue] = []
+        runtimes: list[StageRuntime] = []
+        in_q: MonitoredQueue | None = None
+        for i, spec in enumerate(self._specs):
+            size = self._sink_buffer_size if i == len(self._specs) - 1 else spec.queue_size
+            out_q = MonitoredQueue(max(1, size), name=f"q:{spec.name}")
+            queues.append(out_q)
+            runtimes.append(StageRuntime(spec, in_q, out_q, self._executor))
+            in_q = out_q
+        self._runtimes = runtimes
+        self._sink_q = queues[-1]
+        async with asyncio.TaskGroup() as tg:
+            for rt in runtimes:
+                tg.create_task(rt.run(), name=f"stage:{rt.spec.name}")
+
+    def stop(self) -> None:
+        """Cancel all stages and release every resource. Idempotent."""
+        if self._stopped:
+            return
+        self._stopped = True
+        if not self._started:
+            return
+        assert self._loop is not None
+        if self._root_fut is not None and not self._root_fut.done():
+
+            def _cancel() -> None:
+                if self._root_task is not None:
+                    self._root_task.cancel()
+
+            self._loop.call_soon_threadsafe(_cancel)
+            with contextlib.suppress(BaseException):
+                self._root_fut.result(timeout=30)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+        if self._executor is not None:
+            self._executor.shutdown(wait=False, cancel_futures=True)
+
+    @contextlib.contextmanager
+    def auto_stop(self) -> Iterator["Pipeline"]:
+        """Context manager that guarantees background threads are torn down
+        (paper §5.9.1: non-daemonic threads must not outlive the program)."""
+        try:
+            yield self.start()
+        finally:
+            self.stop()
+
+    # -- consumption --------------------------------------------------------
+    async def _anext(self) -> Any:
+        """Runs on the loop: next sink item, or raise if the pipeline died."""
+        assert self._sink_q is not None and self._root_task is not None
+        get_t = asyncio.ensure_future(self._sink_q.get())
+        done, _ = await asyncio.wait(
+            {get_t, self._root_task}, return_when=asyncio.FIRST_COMPLETED
+        )
+        if get_t in done:
+            item = get_t.result()
+            if item is EOF:
+                # Close the EOF-vs-error race: surface fail-fast errors.
+                await asyncio.wait({self._root_task})
+                self._reraise_root()
+            return item
+        get_t.cancel()
+        self._reraise_root()
+        # Root finished cleanly: the EOF is guaranteed to be in the sink.
+        return await self._sink_q.get()
+
+    @staticmethod
+    def _unwrap(exc: BaseException) -> BaseException:
+        """Dig the most informative leaf out of (nested) ExceptionGroups:
+        prefer PipelineFailure, then any non-cancel leaf, then anything."""
+
+        def leaves(e: BaseException):
+            if isinstance(e, BaseExceptionGroup):
+                for sub in e.exceptions:
+                    yield from leaves(sub)
+            else:
+                yield e
+
+        all_leaves = list(leaves(exc))
+        for leaf in all_leaves:
+            if isinstance(leaf, PipelineFailure):
+                return leaf
+        for leaf in all_leaves:
+            if not isinstance(leaf, asyncio.CancelledError):
+                return leaf
+        return all_leaves[0] if all_leaves else exc
+
+    def _reraise_root(self) -> None:
+        assert self._root_task is not None
+        if not self._root_task.done() or self._root_task.cancelled():
+            return
+        exc = self._root_task.exception()
+        if exc is None:
+            return
+        raise self._unwrap(exc)
+
+    def get_item(self, timeout: float | None = None) -> Any:
+        """Fetch one item from the sink (blocking the consumer thread).
+
+        Raises ``StopIteration`` on EOF, ``PipelineFailure`` on fail-fast
+        errors, ``concurrent.futures.TimeoutError`` on timeout.
+        """
+        if not self._started:
+            self.start()
+        if self._stopped:
+            raise PipelineStopped("pipeline stopped")
+        assert self._loop is not None
+        # The root task is created via run_coroutine_threadsafe; wait until
+        # it has installed the sink queue.
+        while self._sink_q is None or self._root_task is None:
+            if self._root_fut is not None and self._root_fut.done():
+                self._root_fut.result()  # surfaces setup errors
+            threading.Event().wait(0.001)
+        fut = asyncio.run_coroutine_threadsafe(self._anext(), self._loop)
+        item = fut.result(timeout)
+        if item is EOF:
+            raise StopIteration
+        return item
+
+    def __iter__(self) -> Iterator[Any]:
+        if not self._started:
+            self.start()
+        while True:
+            try:
+                yield self.get_item()
+            except StopIteration:
+                return
+
+    # -- visibility ----------------------------------------------------------
+    def stats(self) -> list[StageStatsSnapshot]:
+        return [rt.stats.snapshot() for rt in self._runtimes]
+
+    def format_stats(self) -> str:
+        return format_stats(self.stats())
+
+    def queue_depths(self) -> dict[str, tuple[int, int]]:
+        """{queue_name: (qsize, maxsize)} — instantaneous congestion map."""
+        out: dict[str, tuple[int, int]] = {}
+        for rt in self._runtimes:
+            out[rt.out_q.name] = (rt.out_q.qsize(), rt.out_q.maxsize)
+        return out
+
+    @property
+    def sink_occupancy(self) -> float:
+        """Fraction of the sink buffer currently filled.
+
+        ~1.0 means the loader is ahead of the consumer (healthy); ~0.0 under
+        a consuming trainer means the trainer is data-starved.  The trainer's
+        straggler monitor keys off this."""
+        if self._sink_q is None or self._sink_q.maxsize == 0:
+            return 0.0
+        return self._sink_q.qsize() / self._sink_q.maxsize

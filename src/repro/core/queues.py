@@ -1,0 +1,89 @@
+"""Bounded, instrumented inter-stage queues (paper §5.5.3).
+
+Stages communicate exclusively through bounded ``asyncio.Queue``s.  A full
+output queue blocks the producing task, so congestion propagates from the
+sink (the training loop) upstream to the source, and resolves from the sink
+downward as soon as the consumer drains one item — the paper's backpressure
+mechanism.  The wrapper records how long producers/consumers were blocked;
+those two numbers are the core of the visibility story.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Any
+
+from .stats import StageStats
+
+
+class _Sentinel:
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<{self.name}>"
+
+
+#: End-of-stream marker.  Exactly one EOF traverses each queue, placed by a
+#: stage after all of its in-flight tasks completed.
+EOF = _Sentinel("EOF")
+
+
+class MonitoredQueue:
+    """A bounded asyncio.Queue that attributes blocking time to stages.
+
+    ``put`` blocking is charged to the *producer* stage (backpressure);
+    ``get`` blocking is charged to the *consumer* stage (starvation).
+    """
+
+    def __init__(self, maxsize: int, name: str = "q"):
+        self._q: asyncio.Queue[Any] = asyncio.Queue(maxsize)
+        self.name = name
+        self.producer_stats: StageStats | None = None
+        self.consumer_stats: StageStats | None = None
+
+    # ------------------------------------------------------------------
+    async def put(self, item: Any) -> None:
+        if self._q.full():
+            t0 = time.monotonic()
+            await self._q.put(item)
+            if self.producer_stats is not None:
+                self.producer_stats.put_wait += time.monotonic() - t0
+        else:
+            self._q.put_nowait(item)
+
+    async def get(self) -> Any:
+        if self._q.empty():
+            t0 = time.monotonic()
+            item = await self._q.get()
+            if self.consumer_stats is not None:
+                self.consumer_stats.get_wait += time.monotonic() - t0
+        else:
+            item = self._q.get_nowait()
+        if self.consumer_stats is not None and item is not EOF:
+            self.consumer_stats.num_in += 1
+        return item
+
+    # non-blocking helpers used by the pipeline runner -------------------
+    def put_nowait_force(self, item: Any) -> None:
+        """Best-effort put that never blocks (used to flush EOF on failure)."""
+        try:
+            self._q.put_nowait(item)
+        except asyncio.QueueFull:
+            # Drop one item to make room for the sentinel; the pipeline is
+            # tearing down anyway.
+            try:
+                self._q.get_nowait()
+            except asyncio.QueueEmpty:  # pragma: no cover - race safety
+                pass
+            self._q.put_nowait(item)
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+    @property
+    def maxsize(self) -> int:
+        return self._q.maxsize

@@ -1,0 +1,166 @@
+"""Per-stage visibility (paper §5.4 "Visibility").
+
+Every stage keeps cheap monotonic-clock counters: items in/out, failures,
+task latency, and how long tasks were blocked putting into a full output
+queue (the backpressure signal) or waiting on an empty input queue (the
+starvation signal).  ``Pipeline.stats()`` snapshots them; ``format_stats``
+renders the dashboard used to find the bottleneck stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+@dataclasses.dataclass
+class StageStats:
+    """Mutable counters for one stage. Updated from the event-loop thread."""
+
+    name: str
+    concurrency: int = 1
+    num_in: int = 0  # items pulled from the input queue
+    num_out: int = 0  # items emitted to the output queue
+    num_failed: int = 0
+    task_time: float = 0.0  # seconds spent inside the stage function
+    get_wait: float = 0.0  # seconds blocked waiting for input (starved)
+    put_wait: float = 0.0  # seconds blocked waiting for output space (backpressured)
+    first_out_t: float | None = None  # monotonic time of first emitted item
+    last_error: str | None = None
+    _t_start: float = dataclasses.field(default_factory=time.monotonic)
+
+    # -- recording ---------------------------------------------------------
+    def record_task(self, dt: float) -> None:
+        self.task_time += dt
+
+    def record_out(self) -> None:
+        self.num_out += 1
+        if self.first_out_t is None:
+            self.first_out_t = time.monotonic()
+
+    def record_failure(self, err: BaseException) -> None:
+        self.num_failed += 1
+        self.last_error = repr(err)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def elapsed(self) -> float:
+        return time.monotonic() - self._t_start
+
+    @property
+    def qps(self) -> float:
+        return self.num_out / self.elapsed if self.elapsed > 0 else 0.0
+
+    @property
+    def avg_task_time(self) -> float:
+        n = self.num_out + self.num_failed
+        return self.task_time / n if n else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of wall time the stage's workers were busy (per-worker)."""
+        if self.elapsed <= 0 or self.concurrency <= 0:
+            return 0.0
+        return self.task_time / (self.elapsed * self.concurrency)
+
+    def snapshot(self) -> "StageStatsSnapshot":
+        return StageStatsSnapshot(
+            name=self.name,
+            concurrency=self.concurrency,
+            num_in=self.num_in,
+            num_out=self.num_out,
+            num_failed=self.num_failed,
+            qps=self.qps,
+            avg_task_time=self.avg_task_time,
+            occupancy=self.occupancy,
+            get_wait=self.get_wait,
+            put_wait=self.put_wait,
+            last_error=self.last_error,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StageStatsSnapshot:
+    name: str
+    concurrency: int
+    num_in: int
+    num_out: int
+    num_failed: int
+    qps: float
+    avg_task_time: float
+    occupancy: float
+    get_wait: float
+    put_wait: float
+    last_error: str | None
+
+
+def format_stats(snaps: list[StageStatsSnapshot]) -> str:
+    """Render the visibility dashboard.
+
+    A stage with high ``put_wait`` is backpressured (downstream is the
+    bottleneck); a stage with high ``get_wait`` is starved (upstream is the
+    bottleneck); the bottleneck stage itself shows high occupancy and low
+    waits.
+    """
+    hdr = (
+        f"{'stage':<24}{'conc':>5}{'in':>9}{'out':>9}{'fail':>6}"
+        f"{'qps':>10}{'task_ms':>9}{'occ%':>6}{'get_w':>8}{'put_w':>8}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for s in snaps:
+        lines.append(
+            f"{s.name:<24}{s.concurrency:>5}{s.num_in:>9}{s.num_out:>9}"
+            f"{s.num_failed:>6}{s.qps:>10.1f}{s.avg_task_time * 1e3:>9.2f}"
+            f"{s.occupancy * 100:>6.1f}{s.get_wait:>8.2f}{s.put_wait:>8.2f}"
+        )
+    return "\n".join(lines)
+
+
+class ResourceSampler:
+    """Background sampler of process CPU time and RSS (for the paper's
+    Fig 6/7-style resource benchmarks).  Samples from /proc/self."""
+
+    def __init__(self, interval: float = 0.2):
+        self.interval = interval
+        self.samples: list[tuple[float, float, int]] = []  # (t, cpu_s, rss_bytes)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    @staticmethod
+    def _read() -> tuple[float, int]:
+        with open("/proc/self/stat") as f:
+            parts = f.read().split()
+        tick = 100.0  # USER_HZ; universal on linux
+        cpu_s = (int(parts[13]) + int(parts[14])) / tick  # utime + stime
+        with open("/proc/self/statm") as f:
+            rss_pages = int(f.read().split()[1])
+        return cpu_s, rss_pages * 4096
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval):
+            cpu, rss = self._read()
+            self.samples.append((time.monotonic(), cpu, rss))
+
+    def __enter__(self) -> "ResourceSampler":
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True, name="rsrc-sampler")
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+
+    def summary(self) -> dict[str, float]:
+        if len(self.samples) < 2:
+            cpu, rss = self._read()
+            return {"cpu_util": 0.0, "peak_rss_mb": rss / 2**20, "avg_rss_mb": rss / 2**20}
+        (t0, c0, _), (t1, c1, _) = self.samples[0], self.samples[-1]
+        rss = [s[2] for s in self.samples]
+        return {
+            "cpu_util": (c1 - c0) / (t1 - t0) if t1 > t0 else 0.0,
+            "peak_rss_mb": max(rss) / 2**20,
+            "avg_rss_mb": sum(rss) / len(rss) / 2**20,
+        }

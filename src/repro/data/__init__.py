@@ -1,0 +1,17 @@
+from .codec import decode_sample, encode_sample
+from .dataset import ArrayDataset, SyntheticImageDataset, SyntheticTokenDataset
+from .loader import build_image_loader, build_lm_loader
+from .sampler import CheckpointableSampler
+from .tokenizer import ByteTokenizer
+
+__all__ = [
+    "encode_sample",
+    "decode_sample",
+    "ArrayDataset",
+    "SyntheticImageDataset",
+    "SyntheticTokenDataset",
+    "CheckpointableSampler",
+    "ByteTokenizer",
+    "build_image_loader",
+    "build_lm_loader",
+]

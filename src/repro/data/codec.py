@@ -1,0 +1,82 @@
+"""Array codec: the container's stand-in for JPEG/FFmpeg "media" decode.
+
+``zstandard`` (C extension) releases the GIL during (de)compression and
+numpy releases it for large array ops — exactly the property the paper's
+thread-pool design exploits (§4: "functions that release the GIL entirely").
+A ``py_decode`` pure-Python variant is provided as the GIL-HOLDING
+counterpart for the Fig 1/2-style contention benchmarks.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+import zstandard
+
+_MAGIC = b"RPR1"
+_DTYPES = {0: np.uint8, 1: np.int32, 2: np.float32, 3: np.uint16}
+_DTYPE_IDS = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+# per-thread compressor/decompressor reuse (they are not thread-safe)
+import threading
+
+_tls = threading.local()
+
+
+def _cctx() -> zstandard.ZstdCompressor:
+    if not hasattr(_tls, "cctx"):
+        _tls.cctx = zstandard.ZstdCompressor(level=1)
+    return _tls.cctx
+
+
+def _dctx() -> zstandard.ZstdDecompressor:
+    if not hasattr(_tls, "dctx"):
+        _tls.dctx = zstandard.ZstdDecompressor()
+    return _tls.dctx
+
+
+def encode_sample(arr: np.ndarray) -> bytes:
+    """Header (magic, dtype, ndim, dims) + zstd-compressed payload."""
+    arr = np.ascontiguousarray(arr)
+    hdr = _MAGIC + struct.pack(
+        "<BB", _DTYPE_IDS[arr.dtype], arr.ndim
+    ) + struct.pack(f"<{arr.ndim}I", *arr.shape)
+    return hdr + _cctx().compress(arr.tobytes())
+
+
+def decode_sample(data: bytes) -> np.ndarray:
+    """GIL-releasing decode (zstd C ext + numpy frombuffer)."""
+    if data[:4] != _MAGIC:
+        raise ValueError("bad magic: corrupt sample")
+    dt_id, ndim = struct.unpack_from("<BB", data, 4)
+    shape = struct.unpack_from(f"<{ndim}I", data, 6)
+    off = 6 + 4 * ndim
+    payload = _dctx().decompress(data[off:])
+    return np.frombuffer(payload, dtype=_DTYPES[dt_id]).reshape(shape)
+
+
+def py_decode(data: bytes) -> np.ndarray:
+    """Pure-Python (GIL-holding) decode — the 'Pillow-like' baseline for the
+    GIL-contention benchmark.  Byte-by-byte checksum walk keeps the
+    interpreter busy the way PIL's Python layers do."""
+    if data[:4] != _MAGIC:
+        raise ValueError("bad magic")
+    arr = decode_sample(data)
+    acc = 0
+    for bb in data[:: max(1, len(data) // 2048)]:  # interpreter-bound loop
+        acc = (acc * 31 + bb) & 0xFFFFFFFF
+    return arr if acc >= 0 else arr
+
+
+def resize_nearest(img: np.ndarray, hw: tuple[int, int]) -> np.ndarray:
+    """Nearest-neighbour resize with pure numpy (releases the GIL)."""
+    h, w = hw
+    ih, iw = img.shape[:2]
+    yi = np.clip((np.arange(h) * ih / h).astype(np.int64), 0, ih - 1)
+    xi = np.clip((np.arange(w) * iw / w).astype(np.int64), 0, iw - 1)
+    return img[yi][:, xi]
+
+
+def normalize_to_float(img: np.ndarray) -> np.ndarray:
+    return img.astype(np.float32) / 255.0

@@ -1,0 +1,122 @@
+"""High-level loaders: SPDL pipelines wired for the two workload families.
+
+``build_image_loader``  — the paper's benchmark pipeline: sample indices →
+read bytes (I/O) → decode+resize (GIL-releasing CPU) → collate into one
+contiguous batch → device transfer (concurrency=1).
+
+``build_lm_loader``     — the LM-training pipeline used by the trainer:
+index batches → read docs → decode → tokenize/pack into (seq_len,) rows
+with segment ids → collate → shard-aware device placement.
+
+Every stage's concurrency is tunable (paper "Tunability"); stats from
+``Pipeline.stats()`` expose the bottleneck stage (paper "Visibility").
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from ..core import Pipeline, PipelineBuilder
+from .codec import decode_sample, resize_nearest
+from .packing import SequencePacker, collate
+from .sampler import CheckpointableSampler
+from .transfer import DeviceTransfer
+
+
+def build_image_loader(
+    dataset,
+    *,
+    batch_size: int = 32,
+    hw: tuple[int, int] = (224, 224),
+    read_concurrency: int = 4,
+    decode_concurrency: int = 4,
+    num_threads: int = 8,
+    sink_buffer: int = 3,
+    shardings: Any | None = None,
+    uint8_wire: bool = True,
+    sampler: CheckpointableSampler | None = None,
+    epochs: int | None = 1,  # None = stream forever (training);  N = bounded
+) -> Pipeline:
+    sampler = sampler or CheckpointableSampler(len(dataset), batch_size=1, shuffle=False)
+
+    def indices():
+        limit = None if epochs is None else sampler.batches_per_epoch() * epochs
+        for k, batch in enumerate(sampler):
+            if limit is not None and k >= limit:
+                return
+            yield from batch
+
+    def read(i: int) -> bytes:
+        return dataset.read_bytes(i)
+
+    def decode(data: bytes) -> np.ndarray:
+        img = decode_sample(data)
+        return resize_nearest(img, hw)
+
+    def make_batch(imgs: list[np.ndarray]) -> dict:
+        out = np.empty((len(imgs), *imgs[0].shape), imgs[0].dtype)
+        for j, im in enumerate(imgs):
+            out[j] = im
+        return {"images": out}
+
+    transfer = DeviceTransfer(shardings, uint8_wire=uint8_wire)
+    return (
+        PipelineBuilder()
+        .add_source(indices(), name="sampler")
+        .pipe(read, concurrency=read_concurrency, name="read")
+        .pipe(decode, concurrency=decode_concurrency, name="decode")
+        .aggregate(batch_size, drop_last=True, name="batch")
+        .pipe(make_batch, name="collate")
+        .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
+        .add_sink(buffer_size=sink_buffer)
+        .build(num_threads=num_threads)
+    )
+
+
+def build_lm_loader(
+    dataset,
+    *,
+    seq_len: int,
+    batch_size: int,
+    sampler: CheckpointableSampler | None = None,
+    read_concurrency: int = 4,
+    decode_concurrency: int = 4,
+    num_threads: int = 8,
+    sink_buffer: int = 2,
+    shardings: Any | None = None,
+    seed: int = 0,
+) -> tuple[Pipeline, CheckpointableSampler]:
+    """Returns (pipeline, sampler) — the sampler is checkpointed alongside
+    model state (fault tolerance; see runtime/trainer.py)."""
+    sampler = sampler or CheckpointableSampler(
+        len(dataset), batch_size=8, seed=seed, shuffle=True
+    )
+    packer = SequencePacker(seq_len)
+
+    def doc_ids():
+        for batch in sampler:
+            yield from batch
+
+    def read(i: int) -> bytes:
+        return dataset.read_bytes(i)
+
+    def pack(data: bytes) -> list[dict]:
+        doc = decode_sample(data)
+        return packer.add(doc)  # 0..k completed rows
+
+    transfer = DeviceTransfer(shardings)
+    pipe = (
+        PipelineBuilder()
+        .add_source(doc_ids(), name="sampler")
+        .pipe(read, concurrency=read_concurrency, name="read")
+        .pipe(pack, concurrency=1, name="decode+pack")  # packer is stateful
+        .disaggregate(name="rows")
+        .aggregate(batch_size, drop_last=True, name="batch")
+        .pipe(collate, concurrency=decode_concurrency, name="collate")
+        .pipe(transfer, concurrency=1, name="transfer")
+        .add_sink(buffer_size=sink_buffer)
+        .build(num_threads=num_threads)
+    )
+    return pipe, sampler

@@ -1,0 +1,77 @@
+"""Sequence packing: pack variable-length docs into fixed (seq_len,) rows.
+
+Emits the packed tokens + next-token labels + positions (restarting per
+document) + segment ids (for the block-diagonal causal mask the attention
+layers honor via ``segment_ids``) — no cross-document attention leakage,
+no padding waste beyond row tails.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class SequencePacker:
+    def __init__(self, seq_len: int, pad_id: int = 0):
+        self.seq_len = seq_len
+        self.pad_id = pad_id
+        self._buf: list[np.ndarray] = []
+        self._buf_len = 0
+
+    def add(self, doc: np.ndarray) -> list[dict]:
+        """Feed one document; returns zero or more completed rows."""
+        out = []
+        self._buf.append(doc.astype(np.int32))
+        self._buf_len += len(doc)
+        while self._buf_len >= self.seq_len + 1:  # +1 for the label shift
+            out.append(self._emit())
+        return out
+
+    def _emit(self) -> dict:
+        need = self.seq_len + 1
+        taken: list[np.ndarray] = []
+        seg_ids = []
+        positions = []
+        seg = 0
+        while need > 0:
+            head = self._buf[0]
+            use = min(len(head), need)
+            taken.append(head[:use])
+            seg_ids.append(np.full(use, seg, np.int32))
+            positions.append(np.arange(use, dtype=np.int32))
+            if use == len(head):
+                self._buf.pop(0)
+                self._buf_len -= use
+                seg += 1
+            else:
+                # keep the remainder; overlap 1 token so labels stay aligned
+                self._buf[0] = head[use - 1 :]
+                self._buf_len -= use - 1
+            need -= use
+        toks = np.concatenate(taken)
+        segs = np.concatenate(seg_ids)
+        pos = np.concatenate(positions)
+        tokens = toks[: self.seq_len]
+        labels = toks[1 : self.seq_len + 1].copy()
+        # mask labels that cross a segment boundary (next token is a new doc)
+        same_seg = segs[1 : self.seq_len + 1] == segs[: self.seq_len]
+        labels = np.where(same_seg, labels, -1)
+        return {
+            "tokens": tokens,
+            "labels": labels,
+            "positions": pos[: self.seq_len],
+            "segment_ids": segs[: self.seq_len],
+        }
+
+
+def collate(rows: list[dict]) -> dict:
+    """Stack rows into a batch, writing into one contiguous allocation per
+    key (the paper's §2.1 batching rule: allocate once, copy once)."""
+    out = {}
+    for key in rows[0]:
+        first = np.asarray(rows[0][key])
+        batch = np.empty((len(rows), *first.shape), first.dtype)
+        for i, r in enumerate(rows):
+            batch[i] = r[key]
+        out[key] = batch
+    return out

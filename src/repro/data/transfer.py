@@ -1,0 +1,40 @@
+"""Device transfer stage (paper §5.7.2, adapted to JAX/TPU — DESIGN §2).
+
+``DeviceTransfer`` is the terminal pipe stage: it places a host batch onto
+devices with the training step's input sharding via ``jax.device_put`` —
+JAX dispatches asynchronously, so with the pipeline keeping ≥1 batch in the
+sink the H2D copy overlaps the running step (the CUDA-side "separate
+stream" of the paper).  Per §2.1 there must be at most ONE transfer task:
+build the stage with ``concurrency=1`` (the loader does).
+
+``uint8_wire=True`` sends image payloads as uint8 and lets the device-side
+``dequant_normalize`` kernel expand to bf16 on-chip — 4× fewer host→device
+bytes than f32 (beyond-paper optimization, kernels/dequant_normalize.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+class DeviceTransfer:
+    def __init__(self, shardings: Any | None = None, *, uint8_wire: bool = False):
+        self.shardings = shardings
+        self.uint8_wire = uint8_wire
+        self.bytes_moved = 0
+
+    def __call__(self, batch: dict) -> dict:
+        if self.uint8_wire:
+            batch = {
+                k: (v if (isinstance(v, np.ndarray) and v.dtype == np.uint8) else v)
+                for k, v in batch.items()
+            }
+        self.bytes_moved += sum(
+            v.nbytes for v in batch.values() if hasattr(v, "nbytes")
+        )
+        if self.shardings is None:
+            return jax.device_put(batch)
+        return jax.device_put(batch, self.shardings)

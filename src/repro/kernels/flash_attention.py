@@ -1,0 +1,137 @@
+"""Pallas TPU flash attention (causal, GQA) — forward kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) with the kv axis
+sequential ("arbitrary"); online-softmax state (m, l, acc) lives in VMEM
+scratch and persists across the kv grid steps.  GQA is handled with a
+BlockSpec index_map (kv head = q head // group) so K/V are never repeated
+in HBM.  Fully-masked causal blocks are skipped with ``pl.when`` — the
+2× causal win the jnp fallback cannot express.
+
+Block sizes default to 128×128 (MXU-aligned); VMEM per step ≈
+q(128·hd) + k/v(128·hd) + scores(128·128·4B) ≈ well under 1 MiB.
+
+TARGET: TPU.  In this container it is validated with ``interpret=True``
+against ``ref.flash_attention_ref`` (see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, 1, bq, hd), (1, 1, bk, hd), (1, 1, bk, hd)
+    o_ref,  # (1, 1, bq, hd)
+    m_ref, l_ref, acc_ref,  # VMEM scratch: (bq,), (bq,), (bq, hd)
+    *,
+    block_q: int,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+    q_offset: int,  # skv - sq: decode-style windows right-align q to kv end
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip blocks strictly above the (offset) diagonal
+    q_start = qi * block_q + q_offset
+    k_start = kj * block_k
+    should_run = (not causal) or (q_start + block_q - 1 >= k_start)
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0]  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        s = s * sm_scale
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, Hkv, Skv, hd)
+    v: jax.Array,  # (B, Hkv, Skv, hd)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    assert not causal or sq <= skv, "causal requires sq <= skv (right-aligned)" 
+    group = h // hkv
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = 1.0 / (hd**0.5)
+    nq, nk = sq // block_q, skv // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        sm_scale=sm_scale,
+        causal=causal,
+        q_offset=skv - sq,
+    )
+    grid = (b, h, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, qi, kj: (b_, h_ // group, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, qi, kj: (b_, h_ // group, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, qi, kj: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

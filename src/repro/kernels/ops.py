@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+``use_pallas="auto"`` (default) selects the Pallas kernel on TPU and the
+jnp reference path elsewhere (CPU dry-run / tests), so model code can call
+these unconditionally.  ``use_pallas=True`` with ``interpret=True`` runs
+the kernel body in Python on CPU — the validation mode used by the kernel
+test sweeps.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dequant_normalize import dequant_normalize as _dequant_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: bool | str) -> tuple[bool, bool]:
+    """→ (use_kernel, interpret)."""
+    if use_pallas == "auto":
+        return (_on_tpu(), False)
+    if use_pallas == "interpret":
+        return (True, True)
+    return (bool(use_pallas), not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("causal", "use_pallas", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, use_pallas="auto", block_q=128, block_k=128):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _flash_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interp
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan(x, dt, a, b, c, *, chunk=128, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _ssd_pallas(x, dt, a, b, c, chunk=chunk, interpret=interp)
+    from ..models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, a, b, c, chunk=chunk)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def dequant_normalize(x, mean, std, *, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _dequant_pallas(x, mean, std, interpret=interp)
+    return ref.dequant_normalize_ref(x, mean, std)

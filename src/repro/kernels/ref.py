@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """q (B,H,Sq,hd); k/v (B,Hkv,Skv,hd) — full-materialization attention."""
+    bq, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, h // hkv, axis=1)
+    v = jnp.repeat(v, h // hkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.arange(sq)[:, None] + (skv - sq) >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask, s, -2.0**30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, b, c, h0=None):
+    """Stepwise SSD recurrence; see models/ssm.ssd_recurrent (re-exported
+    here so kernel tests depend only on kernels/)."""
+    from ..models.ssm import ssd_recurrent
+
+    return ssd_recurrent(x, dt, a, b, c, h0)
+
+
+def dequant_normalize_ref(x, mean, std, *, out_dtype=jnp.bfloat16):
+    """x (N,H,W,C) uint8 → (N,C,H,W) normalized."""
+    y = x.astype(jnp.float32) / 255.0
+    y = (y - mean[None, None, None, :]) / std[None, None, None, :]
+    return y.transpose(0, 3, 1, 2).astype(out_dtype)

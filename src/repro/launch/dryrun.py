@@ -1,0 +1,165 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape × mesh) cell this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod) on
+     512 forced host devices,
+  2. lowers + compiles the jitted step with full shardings,
+  3. records memory_analysis(), cost_analysis(), and the collective-op
+     byte/op census parsed from the compiled SPMD module,
+  4. writes one JSON per cell under experiments/dryrun/ — the roofline
+     report (benchmarks/roofline.py) is derived from these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3-671b --shape train_4k
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path) -> dict:
+    import jax
+
+    from ..configs import SHAPES, get_config, shape_applicable
+    from .mesh import make_production_mesh
+    from .steps import build_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "skip" if not ok else "pending",
+    }
+    if not ok:
+        rec["skip_reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    bundle = build_step(cfg, mesh, shape)
+    with mesh:
+        lowered = bundle.jitted.lower(*bundle.in_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in sorted(ca.items()) if not any(c.isdigit() for c in k)})
+    from .hlo_census import census as hlo_census
+
+    census = hlo_census(compiled.as_text())
+
+    rec.update(
+        status="ok",
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost_analysis_flops=ca.get("flops", 0.0),  # NB: loop bodies ×1
+        cost_analysis_bytes=ca.get("bytes accessed", 0.0),
+        flops_per_device=census["dot_flops"],  # trip-count-corrected
+        bytes_per_device=census["bytes_accessed"],
+        tpu_bytes_per_device=census["tpu_bytes"],
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        collectives={
+            "per_kind": census["collectives"],
+            "collective_bytes": census["collective_bytes"],
+            "collective_count": census["collective_count"],
+        },
+        plan={
+            "fsdp": bundle.plan.fsdp,
+            "kv_repeat": bundle.plan.kv_repeat,
+            "shard_heads": bundle.plan.shard_heads,
+            "seq_shard_cache": bundle.plan.seq_shard_cache,
+        },
+        param_count=bundle.model.param_count(),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import SHAPES, all_archs
+
+    archs = all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                cell = f"{arch}__{shape}__{mesh_kind}"
+                path = out_dir / f"{cell}.json"
+                print(f"=== {cell} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, out_dir)
+                except Exception as e:  # a failing cell is a bug — record it
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": mesh_kind,
+                        "status": "fail",
+                        "error": repr(e),
+                    }
+                    if args.fail_fast:
+                        path.write_text(json.dumps(rec, indent=2))
+                        raise
+                path.write_text(json.dumps(rec, indent=2))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_fail += st == "fail"
+                print(
+                    f"--- {cell}: {st}"
+                    + (
+                        f" (compile {rec.get('compile_s')}s, "
+                        f"{rec.get('collectives', {}).get('collective_count', 0)} collectives)"
+                        if st == "ok"
+                        else ""
+                    ),
+                    flush=True,
+                )
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+"""Trip-count-aware census of a compiled SPMD HLO module.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless for
+scan-over-layers programs (a 16-layer scan undercounts flops 16×).  The
+compiled HLO text, however, carries ``backend_config={"known_trip_count":
+{"n":"16"}}`` on every while op, so we walk the call graph (entry → while
+bodies × trip count → fusions → ops) and accumulate:
+
+  - dot flops           : 2 · prod(result dims) · prod(contracting dims)
+  - bytes accessed      : Σ (result + operand bytes) per top-level op — the
+                          same traffic model XLA's own cost analysis uses,
+                          but trip-count-corrected
+  - collective bytes/ops: per kind, with result-size accounting
+
+All numbers are PER DEVICE (the module is the per-partition SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+#: ops that don't touch HBM meaningfully (metadata / aliasing / control)
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "copy-done", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "async-done", "domain", "opt-barrier",
+    "get-dimension-size",
+}
+
+_SHAPE_RE = re.compile(r"(pred|[subfc]\d+|bf16|f16|token)\[([\d,]*)\]")
+# result type: a (possibly /*index=N*/-commented) tuple, or a single token
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[^\s(]+)\s+([\w\-]+)\("
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+#: source-scope buckets for attributing dot flops/bytes (hillclimb accounting)
+BUCKETS = {
+    "attention": ("attention", "_sdpa", "flash", "kv_scan"),
+    "ssd": ("ssd", "chunk_body", "_ssd"),
+    "moe": ("apply_moe", "moe"),
+}
+
+
+def _bucket_of(raw: str) -> str | None:
+    m = _METADATA_RE.search(raw)
+    if not m:
+        return None
+    name = m.group(1)
+    for b, keys in BUCKETS.items():
+        if any(k in name for k in keys):
+            return b
+    return None
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_dims(type_str: str) -> list[int] | None:
+    """Dims of a single (non-tuple) type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Comp:
+    ops: list = dataclasses.field(default_factory=list)  # (name, type_str, kind, rest)
+    types: dict = dataclasses.field(default_factory=dict)  # op name -> type str
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        if raw and not raw.startswith(" ") and raw.rstrip().endswith("{"):
+            m = _COMP_HDR.match(raw)
+            if m:
+                cur = comps.setdefault(m.group(1), _Comp())
+                if raw.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(raw)
+        if not m:
+            continue
+        name, type_str, kind = m.groups()
+        rest = raw[m.end():]
+        cur.ops.append((name, type_str, kind, rest, raw))
+        cur.types[name] = type_str
+    return comps, entry
+
+
+def census(hlo: str) -> dict:
+    comps, entry = _split_computations(hlo)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    per_comp: dict[str, dict] = {}
+    for cname, comp in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        tpu_bytes = 0.0  # fusion-optimistic: ops a TPU build cannot fuse away
+        bucket_f: dict[str, float] = defaultdict(float)
+        bucket_b: dict[str, float] = defaultdict(float)
+        coll_b: dict[str, float] = defaultdict(float)
+        coll_c: dict[str, float] = defaultdict(float)
+        calls: list[tuple[str, int]] = []
+        for name, type_str, kind, rest, raw in comp.ops:
+            # -- call graph edges -----------------------------------------
+            if kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(raw)
+                if tm:
+                    trip = int(tm.group(1))
+                for rex in (_CALLS_RE, _COND_RE):
+                    cm = rex.search(raw)
+                    if cm:
+                        calls.append((cm.group(1), trip))
+                continue
+            if kind in ("fusion", "call", "reduce", "reduce-window", "scatter", "sort", "map", "select-and-scatter", "custom-call", "async-start"):
+                cm = _CALLS_RE.search(raw)
+                if cm:
+                    calls.append((cm.group(1), 1))
+            if kind == "conditional":
+                bm = _BRANCHES_RE.search(raw)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        calls.append((b.strip().lstrip("%"), 1))
+
+            # operand name list (within the call parens only)
+            paren = rest.split(")", 1)[0]
+            operand_names = _OPERANDS_RE.findall(paren)
+
+            # -- flops ------------------------------------------------------
+            if kind in ("dot", "convolution"):
+                out_elems = 0
+                for dt, dims in _SHAPE_RE.findall(type_str):
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    out_elems += n
+                contract = 1
+                cm2 = _CONTRACT_RE.search(raw)
+                lhs_dims = (
+                    _type_dims(comp.types.get(operand_names[0], ""))
+                    if operand_names
+                    else None
+                )
+                if cm2 and lhs_dims is not None:
+                    for idx in filter(None, cm2.group(1).split(",")):
+                        i = int(idx)
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+                elif kind == "convolution" and lhs_dims:
+                    contract = max(lhs_dims)
+                flops += 2.0 * out_elems * contract
+                bk = _bucket_of(raw)
+                if bk:
+                    bucket_f[bk] += 2.0 * out_elems * contract
+                    res_b0 = float(_type_bytes(type_str))
+                    op_b0 = sum(_type_bytes(comp.types.get(on, "")) for on in operand_names)
+                    bucket_b[bk] += res_b0 + op_b0
+
+            # -- bytes ------------------------------------------------------
+            if kind not in FREE_OPS:
+                res_b = float(_type_bytes(type_str))
+                op_bs = [float(_type_bytes(comp.types.get(on, ""))) for on in operand_names]
+                bytes_ += res_b + sum(op_bs)
+                # fusion-optimistic model (what a TPU build must still move):
+                is_dus = "dynamic-update-slice" in name or "dynamic-update-slice" in kind
+                base_k = kind[:-6] if kind.endswith("-start") else kind
+                if is_dus:
+                    # in-place update: read+write the inserted slice + other
+                    # operands; the big aliased buffer is not re-traversed
+                    tpu_bytes += sum(op_bs) - (max(op_bs) if op_bs else 0.0)
+                elif base_k == "dynamic-slice":
+                    # reads only the slice (result-sized), then writes it
+                    tpu_bytes += 2.0 * res_b
+                elif base_k in ("dot", "convolution", "gather", "scatter", "concatenate", "copy", "transpose", "sort"):
+                    tpu_bytes += res_b + sum(op_bs)
+                elif base_k in COLLECTIVES:
+                    tpu_bytes += 2.0 * res_b
+                elif base_k == "reduce":
+                    tpu_bytes += sum(op_bs)
+                # other elementwise/convert/broadcast ops: assumed fused
+
+            # -- collectives -------------------------------------------------
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in COLLECTIVES:
+                nb = _type_bytes(type_str)
+                if kind.endswith("-start"):
+                    nb //= 2  # start result carries (input, output)
+                coll_b[base] += nb
+                coll_c[base] += 1
+        per_comp[cname] = {
+            "flops": flops,
+            "bytes": bytes_,
+            "tpu_bytes": tpu_bytes,
+            "bucket_f": bucket_f,
+            "bucket_b": bucket_b,
+            "coll_b": coll_b,
+            "coll_c": coll_c,
+            "calls": calls,
+        }
+
+    memo: dict[str, dict] = {}
+
+    def total(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        st = per_comp.get(name)
+        empty = {"flops": 0.0, "bytes": 0.0, "tpu_bytes": 0.0, "coll_b": {}, "coll_c": {}, "bucket_f": {}, "bucket_b": {}}
+        if st is None:
+            return dict(empty)
+        memo[name] = dict(empty)
+        acc_b = defaultdict(float, st["coll_b"])
+        acc_c = defaultdict(float, st["coll_c"])
+        buf = defaultdict(float, st["bucket_f"])
+        bub = defaultdict(float, st["bucket_b"])
+        fl, by, tby = st["flops"], st["bytes"], st["tpu_bytes"]
+        for child, mult in st["calls"]:
+            sub = total(child)
+            fl += sub["flops"] * mult
+            by += sub["bytes"] * mult
+            tby += sub["tpu_bytes"] * mult
+            for k, v in sub["coll_b"].items():
+                acc_b[k] += v * mult
+            for k, v in sub["coll_c"].items():
+                acc_c[k] += v * mult
+            for k, v in sub["bucket_f"].items():
+                buf[k] += v * mult
+            for k, v in sub["bucket_b"].items():
+                bub[k] += v * mult
+        memo[name] = {"flops": fl, "bytes": by, "tpu_bytes": tby, "coll_b": acc_b, "coll_c": acc_c, "bucket_f": buf, "bucket_b": bub}
+        return memo[name]
+
+    t = total(entry)
+    return {
+        "dot_flops": t["flops"],
+        "bytes_accessed": t["bytes"],
+        "tpu_bytes": t["tpu_bytes"],
+        "bucket_flops": dict(t["bucket_f"]),
+        "bucket_dot_bytes": dict(t["bucket_b"]),
+        "collectives": {
+            k: {"bytes": t["coll_b"].get(k, 0.0), "count": t["coll_c"].get(k, 0.0)}
+            for k in COLLECTIVES
+        },
+        "collective_bytes": float(sum(t["coll_b"].values())),
+        "collective_count": float(sum(t["coll_c"].values())),
+        "n_computations": len(comps),
+    }
+
+
+if __name__ == "__main__":  # debugging helper
+    import sys
+
+    print(json.dumps(census(open(sys.argv[1]).read()), indent=2))

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS *before* calling it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """v5e pod meshes: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally (tests / examples / smoke runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))

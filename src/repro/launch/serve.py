@@ -1,0 +1,32 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--smoke]``."""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompts", nargs="*", default=["hello world", "data loading is"])
+    args = ap.parse_args()
+
+    import jax
+
+    from ..configs import get_config, get_smoke_config
+    from ..models import Model
+    from ..runtime import BatchServer
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    server = BatchServer(cfg, params, batch_size=args.batch, max_new=args.max_new)
+    for res in server.generate(list(args.prompts)):
+        print(f"{res.prompt!r} -> {res.token_ids}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""Distributed step builders: jitted train/prefill/decode with shardings.
+
+One place assembles everything mesh-dependent: parameter NamedShardings from
+the ParallelPlan rules, batch shardings over the data axes, cache shardings
+(incl. SP sequence sharding for long-context decode), gradient accumulation
+(microbatch scan), and donation (params/opt-state for train, cache for
+decode).  Both the real runtime and the dry-run lower through these
+builders, so what we roofline is what we'd run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist.hints import mesh_context
+from ..dist.sharding import ParallelPlan, batch_axes_for, make_plan
+from ..models.model import Model
+from ..models.params import param_shardings, tree_map_defs
+from ..optim import OptConfig, apply_update, init_opt_state
+from ..optim.optimizer import abstract_opt_state
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower/run one (arch × shape × mesh) cell."""
+
+    model: Model
+    plan: ParallelPlan
+    shape: ShapeConfig
+    fn: Callable  # the python step fn
+    jitted: Any  # jax.jit-wrapped with shardings
+    in_specs: tuple  # ShapeDtypeStructs to .lower(*in_specs)
+    opt_cfg: OptConfig | None = None
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def _named(plan: ParallelPlan, spec_tree: Any) -> Any:
+    # NB: P is a tuple subclass — must be treated as a leaf explicitly
+    return jax.tree.map(
+        lambda s: NamedSharding(plan.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def params_shardings(model: Model, plan: ParallelPlan) -> Any:
+    return param_shardings_checked(model.param_defs(), plan)
+
+
+def param_shardings_checked(defs: Any, plan: ParallelPlan) -> Any:
+    """Param shardings from logical rules, dropping non-divisible entries."""
+    from ..models.params import ParamDef, resolve_pspec
+
+    mesh_shape = plan.mesh_shape
+
+    def one(d: ParamDef) -> NamedSharding:
+        spec = resolve_pspec(d.axes, plan.rules)
+        fixed = []
+        for dim, entry in zip(d.shape, list(spec) + [None] * (len(d.shape) - len(spec))):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= mesh_shape.get(a, 1)
+            fixed.append(entry if dim % total == 0 else None)
+        while fixed and fixed[-1] is None:
+            fixed.pop()
+        return NamedSharding(plan.mesh, P(*fixed))
+
+    return tree_map_defs(one, defs)
+
+
+def opt_state_shardings(opt_cfg: OptConfig, p_shardings: Any, plan: ParallelPlan) -> Any:
+    """Moments inherit param shardings; scalars replicated."""
+    rep = NamedSharding(plan.mesh, P())
+    if opt_cfg.kind in ("adamw", "adamw_bf16"):
+        return {"step": rep, "m": p_shardings, "v": p_shardings}
+    if opt_cfg.kind == "sgdm":
+        return {"step": rep, "m": p_shardings}
+    # adafactor: factored leaves — replicate the small factors of FSDP params
+    def fac(s: NamedSharding):
+        spec = list(s.spec)
+        row = P(*spec[:-1]) if spec else P()
+        col = P(*(spec[:-2] + spec[-1:])) if len(spec) >= 2 else P()
+        return {
+            "vr": NamedSharding(plan.mesh, row),
+            "vc": NamedSharding(plan.mesh, col),
+        }
+
+    # NB: shapes with ndim<2 use {"v": ...}; handled loosely — adafactor is
+    # only used as a fallback and its state is tiny.
+    return {"step": rep, "f": jax.tree.map(fac, p_shardings)}
+
+
+def batch_shardings(model: Model, plan: ParallelPlan, shape: ShapeConfig) -> Any:
+    spec = model.batch_spec(shape)
+    dp = batch_axes_for(plan, shape.global_batch)
+
+    def one(s: jax.ShapeDtypeStruct) -> NamedSharding:
+        return NamedSharding(plan.mesh, P(dp, *([None] * (len(s.shape) - 1))))
+
+    return jax.tree.map(one, spec)
+
+
+def cache_shardings(model: Model, plan: ParallelPlan, shape: ShapeConfig) -> Any:
+    """Cache leaves: (layers, B, S, ...) for attn/mla; (layers, B, H, P, N)
+    for ssd.  B over dp (when divisible); S over dp in SP mode; heads over tp."""
+    cfg = model.cfg
+    dp = batch_axes_for(plan, shape.global_batch)
+    sp = plan.dp_axes if plan.seq_shard_cache else None
+    t = plan.tp_axis if plan.shard_heads else None
+    specs = []
+    for seg_plan, _ in cfg.segments():
+        blocks = []
+        for kind, _moe in seg_plan:
+            if kind == "attn":
+                kv_eff = cfg.num_kv_heads * plan.kv_repeat
+                kv_ax = t if (t and kv_eff % plan.tp_size == 0) else None
+                s = P(None, dp, sp, kv_ax, None)
+                blocks.append({"k": s, "v": s})
+            elif kind == "mla":
+                blocks.append(
+                    {"ckv": P(None, dp, sp, None), "k_rope": P(None, dp, sp, None)}
+                )
+            else:  # ssd
+                nh = cfg.ssd.n_heads(cfg.d_model)
+                h_ax = t if (t and nh % plan.tp_size == 0) else None
+                blocks.append(
+                    {
+                        "ssm": P(None, dp, h_ax, None, None),
+                        "conv": P(None, dp, None, None),
+                    }
+                )
+        specs.append({"blocks": blocks})
+    return _named(plan, specs)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    return OptConfig(kind=cfg.optimizer)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh | None,
+    shape: ShapeConfig,
+    *,
+    grad_accum: int | None = None,
+    donate: bool = True,
+    rules_override: dict | None = None,
+) -> StepBundle:
+    plan = make_plan(cfg, mesh, shape)
+    if rules_override:
+        plan = dataclasses.replace(plan, rules={**plan.rules, **rules_override})
+    model = Model(cfg, plan)
+    opt_cfg = opt_config_for(cfg)
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum.get(shape.name, 1)
+
+    def train_step(params, opt_state, batch):
+        with mesh_context(plan):
+            if accum > 1:
+                def micro(carry, mb):
+                    (loss, metrics), grads = jax.value_and_grad(
+                        model.train_loss, has_aux=True
+                    )(params, mb)
+                    gsum = jax.tree.map(jnp.add, carry, grads)
+                    return gsum, metrics
+
+                mb = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+                )
+                # accumulate in the grad dtype (== param dtype) so the scan
+                # carry type is stable and no extra fp32 copy materializes
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+                gsum, metrics = jax.lax.scan(micro, zeros, mb)
+                grads = jax.tree.map(lambda g: g / accum, gsum)
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(model.train_loss, has_aux=True)(
+                    params, batch
+                )
+            params2, opt_state2, opt_metrics = apply_update(opt_cfg, params, grads, opt_state)
+            metrics.update(opt_metrics)
+            return params2, opt_state2, metrics
+
+    if mesh is None:
+        jitted = jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+        return StepBundle(model, plan, shape, train_step, jitted, (), opt_cfg)
+
+    p_sh = params_shardings(model, plan)
+    o_sh = opt_state_shardings(opt_cfg, p_sh, plan)
+    b_sh = batch_shardings(model, plan, shape)
+    rep = NamedSharding(plan.mesh, P())
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    in_specs = (
+        model.abstract_params(),
+        abstract_opt_state(opt_cfg, model.abstract_params()),
+        model.batch_spec(shape),
+    )
+    return StepBundle(model, plan, shape, train_step, jitted, in_specs, opt_cfg)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *, rules_override: dict | None = None) -> StepBundle:
+    plan = make_plan(cfg, mesh, shape)
+    if rules_override:
+        plan = dataclasses.replace(plan, rules={**plan.rules, **rules_override})
+    model = Model(cfg, plan)
+
+    def prefill(params, batch):
+        with mesh_context(plan):
+            return model.prefill(params, batch)
+
+    if mesh is None:
+        return StepBundle(model, plan, shape, prefill, jax.jit(prefill), ())
+    p_sh = params_shardings(model, plan)
+    b_sh = batch_shardings(model, plan, shape)
+    c_sh = cache_shardings(model, plan, shape)
+    dp = batch_axes_for(plan, shape.global_batch)
+    logits_sh = NamedSharding(plan.mesh, P(dp, plan.tp_axis))
+    if cfg.n_codebooks > 1:
+        logits_sh = NamedSharding(plan.mesh, P(dp, None, plan.tp_axis))
+    jitted = jax.jit(
+        prefill, in_shardings=(p_sh, b_sh), out_shardings=(logits_sh, c_sh)
+    )
+    in_specs = (model.abstract_params(), model.batch_spec(shape))
+    return StepBundle(model, plan, shape, prefill, jitted, in_specs)
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    plan = make_plan(cfg, mesh, shape)
+    model = Model(cfg, plan)
+
+    def decode(params, caches, tokens, pos):
+        with mesh_context(plan):
+            return model.decode_step(params, caches, tokens, pos)
+
+    if mesh is None:
+        return StepBundle(model, plan, shape, decode, jax.jit(decode, donate_argnums=(1,)), ())
+    p_sh = params_shardings(model, plan)
+    c_sh = cache_shardings(model, plan, shape)
+    b = shape.global_batch
+    dp = batch_axes_for(plan, b)
+    tok_sh = NamedSharding(
+        plan.mesh, P(dp, None, None) if cfg.n_codebooks > 1 else P(dp, None)
+    )
+    logits_sh = NamedSharding(plan.mesh, P(dp, plan.tp_axis))
+    if cfg.n_codebooks > 1:
+        logits_sh = NamedSharding(plan.mesh, P(dp, None, plan.tp_axis))
+    pos_sh = NamedSharding(plan.mesh, P())
+    jitted = jax.jit(
+        decode,
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(1,),
+    )
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, 1)
+    in_specs = (
+        model.abstract_params(),
+        model.cache_spec(b, shape.seq_len),
+        jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return StepBundle(model, plan, shape, decode, jitted, in_specs)
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeConfig, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_decode_step(cfg, mesh, shape)

@@ -1,0 +1,56 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On real hardware this process runs once per host (jax.distributed handles
+the pod topology); in this container ``--smoke`` trains the reduced config
+end-to-end on CPU, and the full configs are exercised via the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config (CPU)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    from ..configs import get_config, get_smoke_config
+    from ..configs.base import ShapeConfig, TRAIN_4K
+    from ..data import SyntheticTokenDataset, build_lm_loader
+    from ..data.sampler import CheckpointableSampler
+    from ..runtime import Trainer, TrainerConfig
+    from .mesh import make_host_mesh, make_production_mesh
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        shape = ShapeConfig("train_smoke", args.seq_len, args.batch, "train")
+        mesh = None
+    else:
+        cfg = get_config(args.arch)
+        shape = TRAIN_4K
+        mesh = make_production_mesh()
+
+    ds = SyntheticTokenDataset(10_000, vocab=cfg.vocab_size)
+    sampler = CheckpointableSampler(len(ds), batch_size=8)
+    pipe, sampler = build_lm_loader(
+        ds, seq_len=shape.seq_len, batch_size=shape.global_batch, sampler=sampler
+    )
+    trainer = Trainer.from_checkpoint(
+        cfg, shape, sampler=sampler, mesh=mesh, tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir)
+    )
+    with pipe.auto_stop():
+        out = trainer.fit(pipe, steps=args.steps, sampler=sampler)
+        print(trainer.tuning_hint(pipe))
+    print(out["history"][-1] if out["history"] else out)
+
+
+if __name__ == "__main__":
+    main()

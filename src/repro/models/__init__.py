@@ -1,0 +1,4 @@
+from .model import Model
+from .params import abstract_params, init_params, param_count
+
+__all__ = ["Model", "abstract_params", "init_params", "param_count"]

@@ -1,0 +1,344 @@
+"""Attention blocks: GQA/MHA (optionally qk-norm, QKV-bias) and DeepSeek MLA.
+
+Three entry points per mechanism:
+  - ``*_train``   : causal self-attention over the whole sequence (no cache);
+  - ``*_prefill`` : same math, additionally returns the KV cache;
+  - ``*_decode``  : one new token against a cache of ``seq_len`` positions.
+
+Long sequences (> attn_chunk) use a jnp online-softmax (flash-style) scan
+over KV chunks so the (S×S) score matrix is never materialized — the XLA
+fallback of the Pallas flash kernel (kernels/flash_attention.py), and the
+path the 512-device dry-run lowers on the CPU backend.
+
+MLA decode uses the *absorbed* form: scores are taken directly against the
+compressed latent cache (rank 512 + rope 64), which is the mechanism that
+makes DeepSeek-V3 32k/500k decode memory-light.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MLAConfig, ModelConfig
+from ..dist.hints import hint
+from .layers import apply_rope, rms_norm_simple
+from .params import ParamDef
+
+NEG_INF = -2.0**30  # large finite negative: avoids NaN from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# parameter defs
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    p = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None), dt),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None), dt),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None), dt),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed"), dt, fan_in_dims=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamDef((h, hd), ("heads", None), dt, "zeros")
+        p["bk"] = ParamDef((kv, hd), ("kv_heads", None), dt, "zeros")
+        p["bv"] = ParamDef((kv, hd), ("kv_heads", None), dt, "zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = ParamDef((hd,), (None,), jnp.float32, "ones")
+        p["k_norm"] = ParamDef((hd,), (None,), jnp.float32, "ones")
+    return p
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, h, m = cfg.d_model, cfg.num_heads, cfg.mla
+    assert m is not None
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamDef((d, m.q_lora_rank), ("embed", None), dt),
+        "q_norm": ParamDef((m.q_lora_rank,), (None,), jnp.float32, "ones"),
+        "w_uq": ParamDef((m.q_lora_rank, h, qk), (None, "heads", None), dt),
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None), dt),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), jnp.float32, "ones"),
+        "w_uk": ParamDef((m.kv_lora_rank, h, m.qk_nope_head_dim), (None, "heads", None), dt),
+        "w_uv": ParamDef((m.kv_lora_rank, h, m.v_head_dim), (None, "heads", None), dt),
+        "wo": ParamDef((h, m.v_head_dim, d), ("heads", None, "embed"), dt, fan_in_dims=(0, 1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def _plain_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, scale):
+    """q: (B,Sq,K,G,hd), k/v: (B,Skv,K,hd). Returns (B,Sq,K,G,hd)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = (q_pos[:, :, None] >= kv_pos[:, None, :]) & (
+        q_seg[:, :, None] == kv_seg[:, None, :]
+    )  # (B,Sq,Skv)
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o
+
+
+def _kv_scan_attention(q, kc, vc, q_pos, pc, q_seg, gc, scale):
+    """Online-softmax over pre-chunked KV for one q block.
+
+    q: (B,Sq,K,G,hd);  kc/vc: (NC,B,ckv,K,hd);  pc/gc: (NC,B,ckv).
+    Memory: O(Sq × ckv) scores per scan step — never (Sq × Skv).
+    """
+    bq, sq, kh, gh, hd = q.shape
+    m0 = jnp.full((bq, kh, gh, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, kh, gh, sq), jnp.float32)
+    a0 = jnp.zeros((bq, sq, kh, gh, vc.shape[-1]), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kx, vx, px, gx = xs  # (B,ckv,...)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, kx, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = (q_pos[:, :, None] >= px[:, None, :]) & (
+            q_seg[:, :, None] == gx[:, None, :]
+        )
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(vx.dtype), vx).astype(jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc, gc))
+    l = jnp.maximum(l, 1e-20)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, scale, q_chunk, kv_chunk):
+    """Flash-style double-chunked attention in pure jnp (XLA fallback of the
+    Pallas kernel): an outer sequential map over q blocks, an inner
+    online-softmax scan over kv chunks.  Peak score memory is
+    O(q_chunk × kv_chunk) per (B,H); each q block is rematerialized in the
+    backward pass instead of saving its inner-scan state."""
+    b, skv = k.shape[0], k.shape[1]
+    nkv = -(-skv // kv_chunk)
+    pad = nkv * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-7)
+    kc = k.reshape(b, nkv, kv_chunk, *k.shape[2:]).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, kv_chunk, *v.shape[2:]).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, nkv, kv_chunk).transpose(1, 0, 2)
+    gc = kv_seg.reshape(b, nkv, kv_chunk).transpose(1, 0, 2)
+
+    sq = q.shape[1]
+    if sq <= q_chunk:
+        return _kv_scan_attention(q, kc, vc, q_pos, pc, q_seg, gc, scale)
+
+    nq = -(-sq // q_chunk)
+    qpad = nq * q_chunk - sq
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, qpad)), constant_values=-1)
+        q_seg = jnp.pad(q_seg, ((0, 0), (0, qpad)), constant_values=-9)
+    qr = q.reshape(b, nq, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4, 5)
+    qpr = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    qsr = q_seg.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one_q_block(args):
+        qi, qpi, qsi = args
+        return _kv_scan_attention(qi, kc, vc, qpi, pc, qsi, gc, scale)
+
+    ys = jax.lax.map(one_q_block, (qr, qpr, qsr))  # (nq, B, qc, K, G, v_dim)
+    out = ys.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, *ys.shape[3:])
+    return out[:, :sq]
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, q_pos, kv_pos, q_seg, kv_seg):
+    """Dispatch: plain for short sequences, double-chunked flash beyond."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    skv = k.shape[1]
+    threshold = cfg.attn_chunk or 2048
+    with jax.named_scope("attention"):  # census bucket tag (hlo_census.BUCKETS)
+        if skv <= threshold:
+            return _plain_attention(q, k, v, q_pos, kv_pos, q_seg, kv_seg, scale)
+        return _chunked_attention(
+            q, k, v, q_pos, kv_pos, q_seg, kv_seg, scale, q_chunk=1024, kv_chunk=1024
+        )
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array, kv_repeat: int):
+    q = jnp.einsum("bsd,dkh->bskh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"])
+        k = rms_norm_simple(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_repeat > 1:  # replicate kv heads so TP divides (DESIGN §5)
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return q, k, v
+
+
+def _group(q: jax.Array, n_kv_eff: int) -> jax.Array:
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv_eff, h // n_kv_eff, hd)
+
+
+def attn_train(cfg: ModelConfig, p: dict, x, positions, segment_ids, kv_repeat: int = 1):
+    q, k, v = _qkv(cfg, p, x, positions, kv_repeat)
+    n_kv_eff = cfg.num_kv_heads * kv_repeat
+    q = _group(q, n_kv_eff)
+    q = hint(q, "dp", None, "heads", None, None)
+    k = hint(k, "dp", None, "heads", None)
+    o = _sdpa(cfg, q, k, v, positions, positions, segment_ids, segment_ids)
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.num_heads, cfg.resolved_head_dim)
+    return jnp.einsum("bskh,khd->bsd", o, p["wo"])
+
+
+def attn_prefill(cfg: ModelConfig, p: dict, x, positions, segment_ids, kv_repeat: int = 1):
+    q, k, v = _qkv(cfg, p, x, positions, kv_repeat)
+    n_kv_eff = cfg.num_kv_heads * kv_repeat
+    o = _sdpa(cfg, _group(q, n_kv_eff), k, v, positions, positions, segment_ids, segment_ids)
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.num_heads, cfg.resolved_head_dim)
+    y = jnp.einsum("bskh,khd->bsd", o, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x,  # (B, 1, D)
+    cache: dict,  # k/v: (B, S_cap, KV_eff, hd)
+    pos: jax.Array,  # scalar int32: index of the new token
+    kv_repeat: int = 1,
+):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions, kv_repeat)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    k = hint(k, "dp", "sp", "heads", None)
+    v = hint(v, "dp", "sp", "heads", None)
+    s_cap = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(s_cap, dtype=jnp.int32), (b, s_cap))
+    # mask out unwritten cache slots (> pos)
+    kv_seg = jnp.where(kv_pos <= pos, 0, -1)
+    q_seg = jnp.zeros((b, 1), jnp.int32)
+    n_kv_eff = cfg.num_kv_heads * kv_repeat
+    o = _plain_attention(
+        _group(q, n_kv_eff), k, v, positions, kv_pos, q_seg, kv_seg,
+        1.0 / math.sqrt(cfg.resolved_head_dim),
+    )
+    o = o.reshape(b, 1, cfg.num_heads, cfg.resolved_head_dim)
+    y = jnp.einsum("bskh,khd->bsd", o, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg: ModelConfig, p: dict, x, positions):
+    m = cfg.mla
+    cq = rms_norm_simple(x @ p["w_dq"], p["q_norm"])
+    q = jnp.einsum("bsr,rkh->bskh", cq, p["w_uq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(cfg: ModelConfig, p: dict, x, positions):
+    m = cfg.mla
+    dkv = x @ p["w_dkv"]  # (B,S, kv_lora + rope)
+    ckv = rms_norm_simple(dkv[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = dkv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_train(cfg: ModelConfig, p: dict, x, positions, segment_ids, kv_repeat: int = 1):
+    y, _ = _mla_forward(cfg, p, x, positions, segment_ids)
+    return y
+
+
+def mla_prefill(cfg: ModelConfig, p: dict, x, positions, segment_ids, kv_repeat: int = 1):
+    return _mla_forward(cfg, p, x, positions, segment_ids)
+
+
+def _mla_forward(cfg: ModelConfig, p: dict, x, positions, segment_ids):
+    """Non-absorbed form (compute-optimal when Sq == Skv)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    ckv, k_rope = _mla_kv_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rkh->bskh", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rkh->bskh", ckv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = hint(q, "dp", None, "heads", None)
+    # heads act as "kv groups of 1": reuse grouped sdpa with K=H, G=1
+    o = _sdpa(cfg, q[:, :, :, None, :], k, v, positions, positions, segment_ids, segment_ids)
+    o = o[:, :, :, 0, :]
+    y = jnp.einsum("bskh,khd->bsd", o, p["wo"])
+    return y, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos: jax.Array, kv_repeat: int = 1):
+    """Absorbed decode: attend in the latent space, O(S·(rank+rope)) per head."""
+    m = cfg.mla
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)  # (B,1,H,·)
+    ckv_new, kr_new = _mla_kv_latent(cfg, p, x, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    ckv = hint(ckv, "dp", "sp", None)
+    # absorb W_uk into q: score_nope = (q_nope W_uk)ᵀ · ckv
+    _scope = jax.named_scope("attention"); _scope.__enter__()
+    q_lat = jnp.einsum("bqkh,rkh->bqkr", q_nope, p["w_uk"])  # (B,1,H,rank)
+    s_lat = jnp.einsum("bqkr,bsr->bkqs", q_lat, ckv, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqkh,bsh->bkqs", q_rope, k_rope, preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (s_lat + s_rope) * scale
+    s_cap = ckv.shape[1]
+    kv_ok = jnp.arange(s_cap, dtype=jnp.int32) <= pos
+    s = jnp.where(kv_ok[None, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bkqs,bsr->bqkr", prob.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bqkr,rkh->bqkh", o_lat, p["w_uv"])  # (B,1,H,v_dim)
+    _scope.__exit__(None, None, None)
+    y = jnp.einsum("bskh,khd->bsd", o, p["wo"])
+    return y, {"ckv": ckv, "k_rope": k_rope}

@@ -1,0 +1,175 @@
+"""Shared neural layers: norms, FFN, RoPE, embeddings.
+
+All compute keeps bf16 activations with fp32 reductions (norms, softmax,
+loss).  Parameters are declared as ParamDef trees; apply functions are pure.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .params import ParamDef
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(cfg: ModelConfig) -> dict:
+    if cfg.norm == "nonparam_ln":  # OLMo: no learnable affine
+        return {}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((cfg.d_model,), (None,), jnp.float32, "ones"),
+            "bias": ParamDef((cfg.d_model,), (None,), jnp.float32, "zeros"),
+        }
+    return {"scale": ParamDef((cfg.d_model,), (None,), jnp.float32, "ones")}
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f, dt = cfg.d_model, d_ff or cfg.d_ff, _dt(cfg)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "ffn"), dt),
+            "w_up": ParamDef((d, f), ("embed", "ffn"), dt),
+            "w_down": ParamDef((f, d), ("ffn", "embed"), dt),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("embed", "ffn"), dt),
+        "w_down": ParamDef((f, d), ("ffn", "embed"), dt),
+    }
+
+
+def apply_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    dt = _dt(cfg)
+    return {
+        "tok": ParamDef(
+            (cfg.n_codebooks, cfg.padded_vocab, cfg.d_model),
+            (None, "vocab_in", "embed"),
+            dt,
+            "embed_normal",
+        )
+    }
+
+
+def apply_embed(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) int32 or (B, S, n_codebooks) for multi-codebook audio."""
+    if cfg.n_codebooks == 1:
+        if tokens.ndim == 3:
+            tokens = tokens[..., 0]
+        return p["tok"][0][tokens]
+    # MusicGen-style: sum of per-codebook embeddings
+    parts = [p["tok"][q][tokens[..., q]] for q in range(cfg.n_codebooks)]
+    return sum(parts)
+
+
+def head_defs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {
+        "w": ParamDef(
+            (cfg.d_model, cfg.n_codebooks * cfg.padded_vocab),
+            ("embed", "vocab"),
+            _dt(cfg),
+        )
+    }
+
+
+def apply_head(cfg: ModelConfig, head_p: dict, embed_p: dict, x: jax.Array) -> jax.Array:
+    """Returns logits (B, S, n_codebooks*padded_vocab).  Padded columns must
+    be masked by the caller (``mask_padded_vocab``)."""
+    if cfg.tie_embeddings:
+        w = embed_p["tok"].reshape(cfg.n_codebooks * cfg.padded_vocab, cfg.d_model).T
+        return x @ w
+    return x @ head_p["w"]
+
+
+def mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """logits (..., padded_vocab): -inf the padding columns so they never
+    win the softmax/argmax and contribute nothing to the logsumexp."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ok = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    return jnp.where(ok, logits, -2.0**30)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean CE over masked positions.  logits (..., V), labels int32 (may be
+    negative at masked positions), mask float (0/1)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,279 @@
+"""Model: the end-to-end LM API used by trainer, server, and dry-run.
+
+- ``train_loss(params, batch)``      → (loss, metrics)
+- ``prefill(params, batch)``         → (last-position logits, cache)
+- ``decode_step(params, cache, tokens, pos)`` → (logits, new cache)
+- ``batch_spec(shape)`` / ``cache_spec(...)`` → ShapeDtypeStructs for AOT
+  lowering (full-size architectures are never materialized on this host).
+
+Supports every assigned family: dense/GQA, MLA+MoE (DeepSeek, incl. the MTP
+aux module), SSD (Mamba2), hybrid (Jamba), multi-codebook audio (MusicGen)
+and vision-prefix VLM (InternVL2, frontend stubbed per assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist.hints import hint
+from ..dist.sharding import ParallelPlan, NULL_PLAN
+from . import transformer as tf
+from .layers import (
+    apply_embed,
+    apply_head,
+    apply_norm,
+    cross_entropy,
+    embed_defs,
+    head_defs,
+    mask_padded_vocab,
+    norm_defs,
+)
+from .params import ParamDef, abstract_params, init_params, param_count
+
+MTP_WEIGHT = 0.3
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, plan: ParallelPlan = NULL_PLAN):
+        self.cfg = cfg
+        self.plan = plan
+        self.kv_repeat = plan.kv_repeat
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        d: dict[str, Any] = {
+            "embed": embed_defs(cfg),
+            "segments": tf.segment_defs(cfg),
+            "final_norm": norm_defs(cfg),
+            "head": head_defs(cfg),
+        }
+        if cfg.vis_prefix_len:
+            # learnable projection applied to the (stubbed) frontend output
+            d["vis_proj"] = {
+                "w": ParamDef((cfg.d_model, cfg.d_model), ("embed", None), _dt(cfg)),
+            }
+        if cfg.mtp:
+            kind = cfg.block_kinds()[0]
+            d["mtp"] = {
+                "proj": ParamDef((2 * cfg.d_model, cfg.d_model), (None, "embed"), _dt(cfg)),
+                "norm_h": norm_defs(cfg),
+                "norm_e": norm_defs(cfg),
+                "block": tf.block_defs(cfg, kind, False),
+                "final_norm": norm_defs(cfg),
+            }
+        return d
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.param_defs(), key)
+
+    def abstract_params(self) -> dict:
+        return abstract_params(self.param_defs())
+
+    def param_count(self) -> int:
+        return param_count(self.param_defs())
+
+    # ------------------------------------------------------------------
+    # embedding & head helpers
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        x = apply_embed(cfg, params["embed"], batch["tokens"])
+        if cfg.vis_prefix_len:
+            vis = batch["vis_embed"].astype(x.dtype) @ params["vis_proj"]["w"]
+            x = jax.lax.dynamic_update_slice_in_dim(x, vis, 0, axis=1)
+        return hint(x, "dp", None, None)
+
+    def _lm_loss(self, params: dict, h: jax.Array, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        logits = apply_head(cfg, params["head"], params["embed"], h)
+        labels = batch["labels"]
+        if cfg.n_codebooks > 1:
+            b, s = logits.shape[:2]
+            logits = logits.reshape(b, s, cfg.n_codebooks, cfg.padded_vocab)
+            logits = mask_padded_vocab(cfg, logits)
+            mask = (labels >= 0).astype(jnp.float32)
+            return cross_entropy(logits, labels, mask)
+        logits = mask_padded_vocab(cfg, logits)
+        if labels.ndim == 3:
+            labels = labels[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        return cross_entropy(logits, labels, mask)
+
+    # ------------------------------------------------------------------
+    # training
+    # ------------------------------------------------------------------
+    def train_loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]
+            )
+        segment_ids = batch.get("segment_ids")
+        if segment_ids is None:
+            segment_ids = jnp.zeros(x.shape[:2], jnp.int32)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        for seg_params, (seg_plan, _) in zip(params["segments"], cfg.segments()):
+            x, aux = tf.segment_train(
+                cfg, seg_plan, seg_params, x, positions, segment_ids, self.kv_repeat
+            )
+            aux_total = aux_total + aux
+
+        h = apply_norm(cfg, params["final_norm"], x)
+        loss_lm = self._lm_loss(params, h, batch)
+        loss = loss_lm + aux_total
+        metrics = {"loss_lm": loss_lm, "aux": aux_total}
+
+        if cfg.mtp:
+            loss_mtp = self._mtp_loss(params, x, batch, positions, segment_ids)
+            loss = loss + MTP_WEIGHT * loss_mtp
+            metrics["loss_mtp"] = loss_mtp
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, batch, positions, segment_ids):
+        """DeepSeek-V3 multi-token prediction (1 extra depth): at position t,
+        combine backbone h_t with the embedding of token t+1 and predict
+        token t+2 through one extra block sharing embed/head."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        if tokens.ndim == 3:
+            tokens = tokens[..., 0]
+        if labels.ndim == 3:
+            labels = labels[..., 0]
+        tok_next = jnp.roll(tokens, -1, axis=1)
+        emb_next = apply_embed(cfg, params["embed"], tok_next)
+        z = jnp.concatenate(
+            [apply_norm(cfg, mtp["norm_h"], h), apply_norm(cfg, mtp["norm_e"], emb_next)],
+            axis=-1,
+        )
+        z = z @ mtp["proj"]
+        kind = cfg.block_kinds()[0]
+        z, _ = tf.block_apply_train(
+            cfg, kind, False, mtp["block"], z, positions, segment_ids, self.kv_repeat
+        )
+        z = apply_norm(cfg, mtp["final_norm"], z)
+        logits = mask_padded_vocab(cfg, apply_head(cfg, params["head"], params["embed"], z))
+        labels_p1 = jnp.roll(labels, -1, axis=1)
+        mask = (labels_p1 >= 0).astype(jnp.float32)
+        # the final 2 positions have no t+2 target
+        mask = mask.at[:, -2:].set(0.0)
+        return cross_entropy(logits, labels_p1, mask)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def prefill(self, params: dict, batch: dict) -> tuple[jax.Array, list]:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]
+            )
+        segment_ids = jnp.zeros(x.shape[:2], jnp.int32)
+        caches = []
+        for seg_params, (seg_plan, _) in zip(params["segments"], cfg.segments()):
+            x, cache = tf.segment_prefill(
+                cfg, seg_plan, seg_params, x, positions, segment_ids, self.kv_repeat
+            )
+            caches.append(cache)
+        h = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+        logits = apply_head(cfg, params["head"], params["embed"], h)[:, 0]
+        return self._shape_logits(logits), caches
+
+    def decode_step(
+        self, params: dict, caches: list, tokens: jax.Array, pos: jax.Array
+    ) -> tuple[jax.Array, list]:
+        """tokens (B,1) or (B,1,ncb); pos: scalar int32 index being written."""
+        cfg = self.cfg
+        x = apply_embed(cfg, params["embed"], tokens)
+        x = hint(x, "dp", None, None)
+        new_caches = []
+        for seg_params, seg_cache, (seg_plan, _) in zip(
+            params["segments"], caches, cfg.segments()
+        ):
+            x, nc = tf.segment_decode(
+                cfg, seg_plan, seg_params, seg_cache, x, pos, self.kv_repeat
+            )
+            new_caches.append(nc)
+        h = apply_norm(cfg, params["final_norm"], x)
+        logits = apply_head(cfg, params["head"], params["embed"], h)[:, 0]
+        return self._shape_logits(logits), new_caches
+
+    def _shape_logits(self, logits: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.n_codebooks > 1:
+            logits = logits.reshape(logits.shape[0], cfg.n_codebooks, cfg.padded_vocab)
+        return mask_padded_vocab(cfg, logits)
+
+    # ------------------------------------------------------------------
+    # AOT specs (dry-run: ShapeDtypeStruct only, no allocation)
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len if shape.kind != "decode" else 1
+        tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s)
+        spec: dict[str, Any] = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+            spec["positions"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            spec["segment_ids"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.vis_prefix_len and shape.kind != "decode":
+            spec["vis_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.vis_prefix_len, cfg.d_model), _dt(cfg)
+            )
+        return spec
+
+    def cache_spec(self, batch: int, seq_cap: int) -> list:
+        """Mirror of the prefill cache structure with given capacity."""
+        cfg = self.cfg
+        out = []
+        for seg_plan, n_repeat in cfg.segments():
+            blocks = []
+            for kind, _ in seg_plan:
+                blocks.append(self._mixer_cache_spec(kind, n_repeat, batch, seq_cap))
+            out.append({"blocks": blocks})
+        return out
+
+    def _mixer_cache_spec(self, kind: str, n: int, b: int, s_cap: int) -> dict:
+        cfg = self.cfg
+        dt = _dt(cfg)
+        if kind == "attn":
+            kv_eff = cfg.num_kv_heads * self.kv_repeat
+            hd = cfg.resolved_head_dim
+            return {
+                "k": jax.ShapeDtypeStruct((n, b, s_cap, kv_eff, hd), dt),
+                "v": jax.ShapeDtypeStruct((n, b, s_cap, kv_eff, hd), dt),
+            }
+        if kind == "mla":
+            m = cfg.mla
+            return {
+                "ckv": jax.ShapeDtypeStruct((n, b, s_cap, m.kv_lora_rank), dt),
+                "k_rope": jax.ShapeDtypeStruct((n, b, s_cap, m.qk_rope_head_dim), dt),
+            }
+        s = cfg.ssd
+        di = s.d_inner(cfg.d_model)
+        conv_dim = di + 2 * s.n_groups * s.d_state
+        return {
+            "ssm": jax.ShapeDtypeStruct(
+                (n, b, s.n_heads(cfg.d_model), s.head_dim, s.d_state), jnp.float32
+            ),
+            "conv": jax.ShapeDtypeStruct((n, b, s.d_conv - 1, conv_dim), dt),
+        }
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,132 @@
+"""Parameter declaration: shapes + logical sharding axes + initializers.
+
+Model code declares parameters as ``ParamDef`` pytrees.  From one tree we
+derive (a) materialized params (small/smoke models), (b) ShapeDtypeStructs
+for AOT lowering (full-size models are **never** allocated on this host),
+and (c) ``NamedSharding``s by mapping *logical* axis names ("embed", "heads",
+"ffn", "vocab", "experts", ...) to mesh axes through per-arch rules
+(``dist/sharding.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = never sharded)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed_normal
+    fan_in_dims: tuple[int, ...] = ()  # dims forming fan-in for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaves(tree: Pytree) -> list[ParamDef]:
+    return [x for x in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamDef))]
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree: Pytree) -> Pytree:
+    return jax.tree.map(fn, tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_count(tree: Pytree) -> int:
+    return sum(math.prod(d.shape) for d in _leaves(tree))
+
+
+def abstract_params(tree: Pytree) -> Pytree:
+    """ShapeDtypeStruct tree — for .lower() without allocation."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def init_params(tree: Pytree, key: jax.Array) -> Pytree:
+    """Materialize parameters (used for smoke/real training of small models)."""
+    defs = _leaves(tree)
+    keys = jax.random.split(key, len(defs))
+    it = iter(range(len(defs)))
+
+    def one(d: ParamDef) -> jax.Array:
+        i = next(it)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        fan_in = (
+            math.prod(d.shape[dim] for dim in d.fan_in_dims)
+            if d.fan_in_dims
+            else (d.shape[-2] if len(d.shape) >= 2 else d.shape[-1])
+        )
+        scale = 1.0 if d.init == "embed_normal" else 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(keys[i], d.shape, jnp.float32) * scale).astype(d.dtype)
+
+    return tree_map_defs(one, tree)
+
+
+def logical_specs(tree: Pytree) -> Pytree:
+    """Tree of logical-axis tuples (same structure as params)."""
+    return tree_map_defs(lambda d: d.axes, tree)
+
+
+def resolve_pspec(
+    axes: tuple[str | None, ...], rules: dict[str, Any]
+) -> jax.sharding.PartitionSpec:
+    """Map logical axes to mesh axes.  A rule value may be a mesh-axis name,
+    a tuple of names, or None.  A mesh axis may be used at most once per
+    param; later dims lose (stay replicated) if an axis is already taken."""
+    used: set[str] = set()
+    out: list[Any] = []
+    for ax in axes:
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        axs = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        free = tuple(a for a in axs if a not in used)
+        if not free:
+            out.append(None)
+            continue
+        used.update(free)
+        out.append(free if len(free) > 1 else free[0])
+    while out and out[-1] is None:
+        out.pop()
+    return jax.sharding.PartitionSpec(*out)
+
+
+def param_pspecs(tree: Pytree, rules: dict[str, Any]) -> Pytree:
+    return tree_map_defs(lambda d: resolve_pspec(d.axes, rules), tree)
+
+
+def param_shardings(tree: Pytree, mesh: jax.sharding.Mesh, rules: dict[str, Any]) -> Pytree:
+    return tree_map_defs(
+        lambda d: jax.sharding.NamedSharding(mesh, resolve_pspec(d.axes, rules)), tree
+    )
+
+
+def shard_info(tree: Pytree, rules: dict[str, Any], mesh_shape: dict[str, int]) -> dict:
+    """Bytes-per-device accounting used by capacity planning & EXPERIMENTS.md."""
+    total = 0
+    per_device = 0
+    for d in _leaves(tree):
+        n = math.prod(d.shape)
+        bytes_ = n * np.dtype(d.dtype).itemsize
+        spec = resolve_pspec(d.axes, rules)
+        div = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in entry if isinstance(entry, tuple) else (entry,):
+                div *= mesh_shape.get(ax, 1)
+        total += bytes_
+        per_device += bytes_ // div
+    return {"total_bytes": total, "per_device_bytes": per_device}

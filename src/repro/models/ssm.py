@@ -1,0 +1,249 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD algorithm (quadratic-within-chunk "dual"
+attention form + linear inter-chunk state recurrence); decode uses the O(1)
+per-token recurrence.  ``ssd_chunked`` is the jnp reference the Pallas
+kernel (kernels/ssd_scan.py) is validated against; ``ssd_recurrent`` is the
+naive oracle used only in tests.
+
+Shapes: x (B,L,H,P) head-split inputs, dt (B,L,H), A (H,) negative decay,
+B/C (B,L,G,N) with G groups broadcast over heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSDConfig
+from ..dist.hints import hint
+from .layers import rms_norm_simple
+from .params import ParamDef
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_recurrent(x, dt, A, B, C, h0=None):
+    """Naive stepwise oracle.  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ ;
+    y_t = C_t · h_t.   Returns (y, h_final)."""
+    b, l, h, p = x.shape
+    g = B.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # (B,L,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, B.shape[-1]), jnp.float32)
+
+    def step(hprev, t):
+        decay = jnp.exp(dt[:, t] * A)[:, :, None, None]  # (B,H,1,1)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, t], x[:, t].astype(jnp.float32), Bh[:, t].astype(jnp.float32))
+        hnew = decay * hprev + upd
+        y = jnp.einsum("bhpn,bhn->bhp", hnew, Ch[:, t].astype(jnp.float32))
+        return hnew, y
+
+    hfin, ys = jax.lax.scan(step, h0, jnp.arange(l))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hfin
+
+
+def _segsum(z):
+    """Stable 'segment sum': out[..., i, j] = sum_{j < k <= i} z[..., k],
+    lower-triangular (i >= j), -inf above the diagonal."""
+    l = z.shape[-1]
+    cs = jnp.cumsum(z, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, h0=None, chunk: int = 64):
+    """Chunked SSD scan — one sequential ``lax.scan`` over chunks.
+
+    Per chunk: the dual (attention-like) quadratic-in-Q form computes
+    intra-chunk interactions, the carried state contributes the prefix, and
+    the state advances with one decay + rank-Q update.  Peak memory is
+    O(B·H·Q²) for one chunk (not O(L·Q) like the fully-vectorized form),
+    which is what lets Jamba-scale prefill_32k fit HBM.  Returns (y, h_final).
+    """
+    b, l, h, p = x.shape
+    g = B.shape[2]
+    n = B.shape[-1]
+    rep = h // g
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bf = (
+        jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+        .reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    )
+    Cf = (
+        jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+        .reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    )
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(hprev, inp):
+        x_c, dt_c, B_c, C_c = inp  # (B,Q,H,·)
+        dA = dt_c * A  # (B,Q,H)
+        dA_cs = jnp.cumsum(dA, axis=1)
+        # intra-chunk dual form
+        L = jnp.exp(_segsum(dA.transpose(0, 2, 1)))  # (B,H,Q,Q)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", C_c, B_c) * L
+        y_diag = jnp.einsum("bhqk,bkh,bkhp->bqhp", scores, dt_c, x_c)
+        # contribution of the carried prefix state
+        in_decay = jnp.exp(dA_cs)  # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", C_c, hprev, in_decay)
+        # state update
+        decay_to_end = jnp.exp(dA_cs[:, -1:, :] - dA_cs)  # (B,Q,H)
+        s_c = jnp.einsum("bqhn,bqh,bqh,bqhp->bhpn", B_c, dt_c, decay_to_end, x_c)
+        hnew = hprev * jnp.exp(dA_cs[:, -1, :])[:, :, None, None] + s_c
+        return hnew, y_diag + y_off
+
+    with jax.named_scope("ssd"):  # census bucket tag
+        hfin, ys = jax.lax.scan(chunk_body, h0, (xf, dtf, Bf, Cf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    return y.astype(x.dtype), hfin
+
+
+def ssd_decode_step(x, dt, A, B, C, h):
+    """One-token recurrence.  x (B,H,P), dt (B,H), B/C (B,G,N), h (B,H,P,N)."""
+    g = B.shape[1]
+    rep = x.shape[1] // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * A)[:, :, None, None]
+    hnew = decay * h + jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", hnew, Ch)
+    return y.astype(x.dtype), hnew
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def ssd_defs(cfg: ModelConfig) -> dict:
+    s = cfg.ssd
+    assert s is not None
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    zxbcdt = 2 * di + 2 * s.n_groups * s.d_state + nh
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": ParamDef((d, zxbcdt), ("embed", "d_inner"), dt),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "conv_dim"), dt),
+        "conv_b": ParamDef((conv_dim,), ("conv_dim",), dt, "zeros"),
+        "A_log": ParamDef((nh,), ("ssd_heads",), jnp.float32, "zeros"),
+        "dt_bias": ParamDef((nh,), ("ssd_heads",), jnp.float32, "zeros"),
+        "D": ParamDef((nh,), ("ssd_heads",), jnp.float32, "ones"),
+        "norm": ParamDef((di,), ("d_inner",), jnp.float32, "ones"),
+        "out_proj": ParamDef((di, d), ("d_inner", "embed"), dt),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssd
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * gn]
+    dt_raw = zxbcdt[..., 2 * di + 2 * gn :]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time.  xBC (B,L,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled K-tap FIR (K=4): cheap, fusion-friendly, Pallas-free
+    y = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(k))
+    return y + b
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t (B,C); conv_state (B,K-1,C) holding the previous inputs."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + b
+    return y, full[:, 1:, :]
+
+
+def ssd_block_train(cfg: ModelConfig, p: dict, x, positions=None, segment_ids=None, kv_repeat: int = 1):
+    y, _ = _ssd_block_forward(cfg, p, x)
+    return y
+
+
+def ssd_block_prefill(cfg: ModelConfig, p: dict, x, positions=None, segment_ids=None, kv_repeat: int = 1):
+    return _ssd_block_forward(cfg, p, x)
+
+
+def _ssd_block_forward(cfg: ModelConfig, p: dict, x):
+    s = cfg.ssd
+    b, l, _ = x.shape
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC_raw, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    conv_state = _last_conv_window(xBC_raw, s.d_conv)  # for decode continuation
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(b, l, nh, s.head_dim)
+    xs = hint(xs, "dp", None, "heads", None)
+    Bm = xBC[..., di : di + gn].reshape(b, l, s.n_groups, s.d_state)
+    Cm = xBC[..., di + gn :].reshape(b, l, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(s.chunk, l) if l % min(s.chunk, l) == 0 else _best_chunk(l, s.chunk)
+    y, h_fin = ssd_chunked(xs, dtv, A, Bm, Cm, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(b, l, di)
+    y = rms_norm_simple(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    return out, {"ssm": h_fin.astype(jnp.float32), "conv": conv_state}
+
+
+def _last_conv_window(xBC, d_conv):
+    b, l, c = xBC.shape
+    pad = jnp.pad(xBC, ((0, 0), (max(0, d_conv - 1 - l), 0), (0, 0)))
+    return pad[:, -(d_conv - 1) :, :]
+
+
+def _best_chunk(l, pref):
+    for c in (pref, 128, 64, 32, 16, 8, 4, 2, 1):
+        if c <= l and l % c == 0:
+            return c
+    return 1
+
+
+def ssd_block_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos=None, kv_repeat: int = 1):
+    """x (B,1,D); cache {"ssm": (B,H,P,N) fp32, "conv": (B,K-1,C)}."""
+    s = cfg.ssd
+    b = x.shape[0]
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = x[:, 0, :] @ p["in_proj"]  # (B, zxbcdt)
+    z, xBC, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    xBC, conv_state = _conv_step(xBC, cache["conv"], p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :di].reshape(b, nh, s.head_dim)
+    Bm = xBC[..., di : di + gn].reshape(b, s.n_groups, s.d_state)
+    Cm = xBC[..., di + gn :].reshape(b, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    y, h_new = ssd_decode_step(xs, dtv, A, Bm, Cm, cache["ssm"])
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(b, di)
+    y = rms_norm_simple(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": h_new, "conv": conv_state}

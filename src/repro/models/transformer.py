@@ -1,0 +1,177 @@
+"""Block assembly: (mixer + FFN/MoE) layers, grouped into scanned segments.
+
+``cfg.segments()`` splits the layer stack into repetitions of identical
+super-blocks (e.g. Jamba's [attn, ssd×7] with alternating MoE).  Parameters
+of a segment are *stacked* (leading "layers" dim) and the segment is applied
+with ``jax.lax.scan`` — HLO stays O(super-block), compiles fast even for
+80-layer models on 512 devices, and remat wraps each scan body iteration.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention, moe as moe_mod, ssm
+from .layers import apply_ffn, apply_norm, ffn_defs, norm_defs
+from .params import ParamDef, tree_map_defs
+
+MIXER_DEFS = {"attn": attention.attn_defs, "mla": attention.mla_defs, "ssd": ssm.ssd_defs}
+MIXER_TRAIN = {"attn": attention.attn_train, "mla": attention.mla_train, "ssd": ssm.ssd_block_train}
+MIXER_PREFILL = {
+    "attn": attention.attn_prefill,
+    "mla": attention.mla_prefill,
+    "ssd": ssm.ssd_block_prefill,
+}
+MIXER_DECODE = {
+    "attn": attention.attn_decode,
+    "mla": attention.mla_decode,
+    "ssd": ssm.ssd_block_decode,
+}
+
+
+# ---------------------------------------------------------------------------
+# per-layer defs / apply
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, kind: str, is_moe: bool) -> dict:
+    d: dict[str, Any] = {"norm1": norm_defs(cfg), "mixer": MIXER_DEFS[kind](cfg)}
+    has_ffn = is_moe or cfg.d_ff > 0
+    if has_ffn:
+        d["norm2"] = norm_defs(cfg)
+        d["ffn"] = moe_mod.moe_defs(cfg) if is_moe else ffn_defs(cfg)
+    return d
+
+
+def block_apply_train(cfg, kind, is_moe, p, x, positions, segment_ids, kv_repeat):
+    h = apply_norm(cfg, p["norm1"], x)
+    y = MIXER_TRAIN[kind](cfg, p["mixer"], h, positions, segment_ids, kv_repeat)
+    x = x + y.astype(x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = apply_norm(cfg, p["norm2"], x)
+        if is_moe:
+            y, aux = moe_mod.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = apply_ffn(cfg, p["ffn"], h)
+        x = x + y.astype(x.dtype)
+    return x, aux
+
+
+def block_apply_prefill(cfg, kind, is_moe, p, x, positions, segment_ids, kv_repeat):
+    h = apply_norm(cfg, p["norm1"], x)
+    y, cache = MIXER_PREFILL[kind](cfg, p["mixer"], h, positions, segment_ids, kv_repeat)
+    x = x + y.astype(x.dtype)
+    if "ffn" in p:
+        h = apply_norm(cfg, p["norm2"], x)
+        if is_moe:
+            y, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = apply_ffn(cfg, p["ffn"], h)
+        x = x + y.astype(x.dtype)
+    return x, cache
+
+
+def block_apply_decode(cfg, kind, is_moe, p, x, cache, pos, kv_repeat):
+    h = apply_norm(cfg, p["norm1"], x)
+    y, new_cache = MIXER_DECODE[kind](cfg, p["mixer"], h, cache, pos, kv_repeat)
+    x = x + y.astype(x.dtype)
+    if "ffn" in p:
+        h = apply_norm(cfg, p["norm2"], x)
+        if is_moe:
+            y, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = apply_ffn(cfg, p["ffn"], h)
+        x = x + y.astype(x.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+
+def stack_defs(tree: Any, n: int) -> Any:
+    """Prepend a stacked "layers" dim of size n to every ParamDef."""
+    return tree_map_defs(
+        lambda d: ParamDef(
+            (n, *d.shape),
+            ("layers", *d.axes),
+            d.dtype,
+            d.init,
+            tuple(i + 1 for i in d.fan_in_dims) if d.fan_in_dims else (),
+        ),
+        tree,
+    )
+
+
+def segment_defs(cfg: ModelConfig) -> list[dict]:
+    segs = []
+    for plan, n_repeat in cfg.segments():
+        blocks = [block_defs(cfg, kind, is_moe) for kind, is_moe in plan]
+        segs.append({"blocks": [stack_defs(b, n_repeat) for b in blocks]})
+    return segs
+
+
+def _maybe_remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "none":
+        return jax.checkpoint(fn)  # full remat: nothing saved inside a layer
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def segment_train(cfg, seg_plan, seg_params, x, positions, segment_ids, kv_repeat):
+    """Apply (super-block × n_repeat) via scan; returns (x, summed aux)."""
+
+    def body(carry, layer_params):
+        xc, aux = carry
+
+        def inner(xc, layer_params):
+            aux_i = jnp.zeros((), jnp.float32)
+            for i, (kind, is_moe) in enumerate(seg_plan):
+                xc, a = block_apply_train(
+                    cfg, kind, is_moe, layer_params[i], xc, positions, segment_ids, kv_repeat
+                )
+                aux_i = aux_i + a
+            return xc, aux_i
+
+        xc, aux_i = _maybe_remat(cfg, inner)(xc, layer_params)
+        return (xc, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), seg_params["blocks"])
+    return x, aux
+
+
+def segment_prefill(cfg, seg_plan, seg_params, x, positions, segment_ids, kv_repeat):
+    def body(xc, layer_params):
+        caches = []
+        for i, (kind, is_moe) in enumerate(seg_plan):
+            xc, cache = block_apply_prefill(
+                cfg, kind, is_moe, layer_params[i], xc, positions, segment_ids, kv_repeat
+            )
+            caches.append(cache)
+        return xc, caches
+
+    x, caches = jax.lax.scan(body, x, seg_params["blocks"])
+    return x, {"blocks": caches}
+
+
+def segment_decode(cfg, seg_plan, seg_params, seg_cache, x, pos, kv_repeat):
+    def body(xc, inp):
+        layer_params, layer_cache = inp
+        new_caches = []
+        for i, (kind, is_moe) in enumerate(seg_plan):
+            xc, nc = block_apply_decode(
+                cfg, kind, is_moe, layer_params[i], xc, layer_cache[i], pos, kv_repeat
+            )
+            new_caches.append(nc)
+        return xc, new_caches
+
+    x, new_cache = jax.lax.scan(body, x, (seg_params["blocks"], seg_cache["blocks"]))
+    return x, {"blocks": new_cache}

@@ -1,0 +1,3 @@
+from .optimizer import OptConfig, init_opt_state, apply_update, lr_schedule
+
+__all__ = ["OptConfig", "init_opt_state", "apply_update", "lr_schedule"]

@@ -1,0 +1,190 @@
+"""Optimizers: AdamW (fp32 or bf16 moments), SGD-momentum, Adafactor.
+
+Pure pytree transforms — optimizer state inherits parameter shardings, which
+is exactly ZeRO-1/3 when params are FSDP-sharded (DESIGN §5).  ``adamw_bf16``
+halves moment memory for the ≥100B architectures; Adafactor's factored
+second moment is the fallback when even that does not fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adamw_bf16 | sgdm | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _moment_dtype(cfg: OptConfig):
+    return jnp.bfloat16 if cfg.kind == "adamw_bf16" else jnp.float32
+
+
+def _factored(p) -> dict:
+    if p.ndim >= 2:
+        return {
+            "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+            "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32),
+        }
+    return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> dict:
+    if cfg.kind in ("adamw", "adamw_bf16"):
+        mdt = _moment_dtype(cfg)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+    if cfg.kind == "sgdm":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+    if cfg.kind == "adafactor":
+        return {"step": jnp.zeros((), jnp.int32), "f": jax.tree.map(_factored, params)}
+    raise ValueError(cfg.kind)
+
+
+def abstract_opt_state(cfg: OptConfig, abstract_params: Any) -> dict:
+    """ShapeDtypeStruct mirror of init_opt_state (for AOT lowering)."""
+
+    def zs(p, dt=None):
+        return jax.ShapeDtypeStruct(p.shape, dt or p.dtype)
+
+    if cfg.kind in ("adamw", "adamw_bf16"):
+        mdt = _moment_dtype(cfg)
+        return {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": jax.tree.map(lambda p: zs(p, mdt), abstract_params),
+            "v": jax.tree.map(lambda p: zs(p, mdt), abstract_params),
+        }
+    if cfg.kind == "sgdm":
+        return {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": jax.tree.map(lambda p: zs(p, jnp.float32), abstract_params),
+        }
+    if cfg.kind == "adafactor":
+        def fac(p):
+            if len(p.shape) >= 2:
+                return {
+                    "vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                    "vc": jax.ShapeDtypeStruct((*p.shape[:-2], p.shape[-1]), jnp.float32),
+                }
+            return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+
+        return {"step": jax.ShapeDtypeStruct((), jnp.int32), "f": jax.tree.map(fac, abstract_params)}
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_update(cfg: OptConfig, params: Any, grads: Any, state: dict) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, opt_metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) if cfg.clip_norm else 1.0
+    metrics = {"grad_norm": gnorm, "lr": lr}
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+
+    if cfg.kind in ("adamw", "adamw_bf16"):
+        mdt = _moment_dtype(cfg)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m_leaves = treedef.flatten_up_to(state["m"])
+        v_leaves = treedef.flatten_up_to(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            delta = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            new_m.append(m32.astype(mdt))
+            new_v.append(v32.astype(mdt))
+        return (
+            treedef.unflatten(new_p),
+            {"step": step, "m": treedef.unflatten(new_m), "v": treedef.unflatten(new_v)},
+            metrics,
+        )
+
+    if cfg.kind == "sgdm":
+        m_leaves = treedef.flatten_up_to(state["m"])
+        new_p, new_m = [], []
+        for p, g, m in zip(p_leaves, g_leaves, m_leaves):
+            g = g.astype(jnp.float32) * scale + cfg.weight_decay * p.astype(jnp.float32)
+            m32 = 0.9 * m + g
+            new_p.append((p.astype(jnp.float32) - lr * m32).astype(p.dtype))
+            new_m.append(m32)
+        return (
+            treedef.unflatten(new_p),
+            {"step": step, "m": treedef.unflatten(new_m)},
+            metrics,
+        )
+
+    if cfg.kind == "adafactor":
+        d = 1e-30
+        f_leaves = treedef.flatten_up_to(state["f"])
+        new_p, new_f = [], []
+        for p, g, f in zip(p_leaves, g_leaves, f_leaves):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + d
+            if p.ndim >= 2:
+                vr = 0.999 * f["vr"] + 0.001 * g2.mean(axis=-1)
+                vc = 0.999 * f["vc"] + 0.001 * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], d)
+                )
+                upd = g / (jnp.sqrt(denom) + cfg.eps)
+                newf = {"vr": vr, "vc": vc}
+            else:
+                v = 0.999 * f["v"] + 0.001 * g2
+                upd = g / (jnp.sqrt(v) + cfg.eps)
+                newf = {"v": v}
+            newp = (
+                p.astype(jnp.float32) - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype)
+            new_p.append(newp)
+            new_f.append(newf)
+        return (
+            treedef.unflatten(new_p),
+            {"step": step, "f": treedef.unflatten(new_f)},
+            metrics,
+        )
+
+    raise ValueError(cfg.kind)

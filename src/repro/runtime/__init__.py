@@ -1,0 +1,4 @@
+from .trainer import Trainer, TrainerConfig
+from .server import BatchServer
+
+__all__ = ["Trainer", "TrainerConfig", "BatchServer"]

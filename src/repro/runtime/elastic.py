@@ -1,0 +1,56 @@
+"""Elastic scaling: re-mesh a job onto a different device count.
+
+Sharding rules are expressed against *logical* axes (dist/sharding.py), so
+scaling in/out is: build the new mesh → new ParallelPlan → re-lower the same
+step → re-place the checkpoint with the new NamedShardings.  The model axis
+(TP=16) is kept fixed — it is baked into attention-head/expert divisibility —
+and the data axes absorb the node-count change, which is how v5e slices are
+actually resized.
+
+``elastic_dryrun`` proves the re-mesh compiles for a degraded pod (e.g. two
+failed hosts → 14×16 chips) without hardware — same contract as the main
+dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .. import configs
+from ..launch.steps import build_step, params_shardings
+
+
+def make_elastic_mesh(n_data: int, tp: int = 16) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        (n_data, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def elastic_dryrun(arch: str, shape_name: str, n_data: int) -> dict:
+    """Lower + compile the step on a degraded (n_data × 16) mesh."""
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    # global batch must stay divisible by the new dp degree; shrink if needed
+    if shape.kind == "train" and shape.global_batch % n_data:
+        gb = (shape.global_batch // n_data) * n_data
+        shape = ShapeConfig(shape.name, shape.seq_len, gb, shape.kind)
+    mesh = make_elastic_mesh(n_data)
+    bundle = build_step(cfg, mesh, shape)
+    with mesh:
+        compiled = bundle.jitted.lower(*bundle.in_specs).compile()
+    ma = compiled.memory_analysis()
+    return {
+        "arch": arch,
+        "shape": shape.name,
+        "n_devices": mesh.devices.size,
+        "global_batch": shape.global_batch,
+        "peak_bytes_est": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+    }
+
+
+def reshard(tree, model, old_plan, new_plan):
+    """Re-place a param pytree onto a new mesh (checkpoint → new topology)."""
+    new_sh = params_shardings(model, new_plan)
+    return jax.tree.map(jax.device_put, tree, new_sh)

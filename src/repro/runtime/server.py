@@ -1,0 +1,117 @@
+"""Batched serving runtime: SPDL request pipeline → prefill → decode loop.
+
+Requests stream through an SPDL pipeline (tokenize/pad happen on the worker
+pool, exactly like training-side loading); the server runs a jitted prefill
+on each full batch and then greedy decode steps against the shared KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core import PipelineBuilder
+from ..data.tokenizer import ByteTokenizer
+from ..launch.steps import build_decode_step, build_prefill_step
+
+
+@dataclasses.dataclass
+class ServeResult:
+    prompt: str
+    token_ids: list[int]
+    text: bytes
+
+
+class BatchServer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        batch_size: int = 4,
+        prompt_len: int = 32,
+        max_new: int = 16,
+        mesh=None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        shape = ShapeConfig("serve", prompt_len, batch_size, "prefill")
+        dshape = ShapeConfig("serve_d", prompt_len + max_new, batch_size, "decode")
+        self.prefill = build_prefill_step(cfg, mesh, shape).jitted
+        self.decode = build_decode_step(cfg, mesh, dshape).jitted
+        self.tok = ByteTokenizer(cfg.vocab_size)
+
+    # -- request pipeline -----------------------------------------------------
+    def _batches(self, prompts: Iterable[str]):
+        def tokenize(p: str) -> dict:
+            ids = self.tok.encode(p, add_eos=False)[: self.prompt_len]
+            padded = np.zeros(self.prompt_len, np.int32)
+            padded[-len(ids):] = ids  # left-pad so decode positions align
+            return {"prompt": p, "tokens": padded}
+
+        def to_batch(rows: list[dict]) -> dict:
+            return {
+                "prompts": [r["prompt"] for r in rows],
+                "tokens": np.stack([r["tokens"] for r in rows]),
+            }
+
+        return (
+            PipelineBuilder()
+            .add_source(prompts, name="requests")
+            .pipe(tokenize, concurrency=4, name="tokenize")
+            .aggregate(self.batch_size, drop_last=False, name="batch")
+            .pipe(to_batch, name="collate")
+            .add_sink(buffer_size=2)
+            .build(num_threads=4)
+        )
+
+    def generate(self, prompts: list[str]) -> list[ServeResult]:
+        results: list[ServeResult] = []
+        pipe = self._batches(prompts)
+        with pipe.auto_stop():
+            for batch in pipe:
+                results.extend(self._generate_batch(batch))
+        return results
+
+    def _generate_batch(self, batch) -> list[ServeResult]:
+        toks = batch["tokens"]
+        b = toks.shape[0]
+        if b < self.batch_size:  # pad the ragged tail batch
+            toks = np.concatenate([toks, np.zeros((self.batch_size - b, toks.shape[1]), np.int32)])
+        logits, caches = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
+        caches = self._grow_cache(caches)
+        out_ids = [[] for _ in range(self.batch_size)]
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        for t in range(self.max_new):
+            for i in range(self.batch_size):
+                out_ids[i].append(int(cur[i]) if cur.ndim == 1 else int(cur[i, 0]))
+            step_tokens = cur.reshape(self.batch_size, 1) if cur.ndim == 1 else cur[:, None, :]
+            logits, caches = self.decode(
+                self.params, caches, step_tokens, jnp.int32(self.prompt_len + t)
+            )
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return [
+            ServeResult(p, ids, self.tok.decode(np.array(ids)))
+            for p, ids in zip(batch["prompts"], out_ids[:b])
+        ]
+
+    def _grow_cache(self, caches):
+        """Pad prefill cache (len=prompt_len) to prompt_len+max_new capacity."""
+        from ..models.model import Model
+
+        model = Model(self.cfg)
+        spec = model.cache_spec(self.batch_size, self.prompt_len + self.max_new)
+        return jax.tree.map(
+            lambda sp, x: jnp.pad(x, [(0, t - s) for s, t in zip(x.shape, sp.shape)]),
+            spec,
+            caches,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )

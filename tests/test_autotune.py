@@ -1,0 +1,42 @@
+"""Auto-tuner: visibility-driven concurrency suggestions."""
+
+import time
+
+from repro.core import PipelineBuilder
+from repro.core.autotune import autotune, suggest
+
+
+def _build(conc: dict[str, int], n=64, slow_s=0.01):
+    def slow(x):
+        time.sleep(slow_s)  # releases the GIL: widening genuinely helps
+        return x
+
+    return (
+        PipelineBuilder()
+        .add_source(range(n))
+        .pipe(slow, concurrency=conc.get("slow", 1), name="slow")
+        .pipe(lambda x: x + 1, concurrency=conc.get("fast", 1), name="fast")
+        .add_sink(buffer_size=4)
+        .build(num_threads=16)
+    )
+
+
+def test_suggest_targets_the_hot_stage():
+    p = _build({"slow": 1})
+    with p.auto_stop():
+        for _ in p:
+            pass
+        s = suggest(p)
+    assert s.stage == "slow"
+    assert s.concurrency == 2
+
+
+def test_autotune_improves_throughput():
+    def probe(pipe):
+        t0 = time.monotonic()
+        n = sum(1 for _ in pipe)
+        return n / (time.monotonic() - t0)
+
+    conc, log = autotune(lambda c: _build(c), probe, initial={"slow": 1}, rounds=3)
+    assert conc["slow"] >= 2, log
+    assert log[-1]["rate"] > log[0]["rate"] * 1.5, log

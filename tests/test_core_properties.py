@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for pipeline engine invariants.
+
+Invariants, for any stage graph and any failure pattern:
+  1. ordered pipelines are exactly ``map`` over the source (order + content);
+  2. no sample is lost or duplicated: emitted + failed == consumed;
+  3. aggregate∘disaggregate == identity;
+  4. failure sets are exactly the items whose stage fn raised.
+"""
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import PipelineBuilder
+
+COMMON = dict(
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@settings(**COMMON)
+@given(
+    items=st.lists(st.integers(min_value=-(2**40), max_value=2**40), max_size=200),
+    concurrency=st.integers(min_value=1, max_value=16),
+    threads=st.integers(min_value=1, max_value=8),
+    queue_size=st.integers(min_value=1, max_value=8),
+)
+def test_ordered_pipeline_is_map(items, concurrency, threads, queue_size):
+    p = (
+        PipelineBuilder()
+        .add_source(items)
+        .pipe(lambda x: x * 3 + 1, concurrency=concurrency, queue_size=queue_size)
+        .add_sink(buffer_size=2)
+        .build(num_threads=threads)
+    )
+    with p.auto_stop():
+        assert list(p) == [x * 3 + 1 for x in items]
+
+
+@settings(**COMMON)
+@given(
+    items=st.lists(st.integers(min_value=0, max_value=10_000), max_size=150),
+    fail_mod=st.integers(min_value=2, max_value=7),
+    concurrency=st.integers(min_value=1, max_value=8),
+    order=st.sampled_from(["input", "completion"]),
+)
+def test_no_loss_no_duplication_under_failures(items, fail_mod, concurrency, order):
+    def flaky(x):
+        if x % fail_mod == 0:
+            raise ValueError(x)
+        return x
+
+    p = (
+        PipelineBuilder()
+        .add_source(items)
+        .pipe(flaky, concurrency=concurrency, output_order=order, name="flaky")
+        .add_sink(buffer_size=4)
+        .build(num_threads=4)
+    )
+    with p.auto_stop():
+        out = list(p)
+    expect = [x for x in items if x % fail_mod != 0]
+    if order == "input":
+        assert out == expect
+    else:
+        assert sorted(out) == sorted(expect)
+    stats = {s.name: s for s in p.stats()}["flaky"]
+    assert stats.num_failed == len(items) - len(expect)
+    assert stats.num_out == len(expect)
+    assert stats.num_in == len(items)
+
+
+@settings(**COMMON)
+@given(
+    items=st.lists(st.integers(), max_size=120),
+    agg=st.integers(min_value=1, max_value=17),
+)
+def test_aggregate_disaggregate_identity(items, agg):
+    p = (
+        PipelineBuilder()
+        .add_source(items)
+        .aggregate(agg)
+        .disaggregate()
+        .add_sink(buffer_size=2)
+        .build(num_threads=2)
+    )
+    with p.auto_stop():
+        assert list(p) == items
+
+
+@settings(**COMMON)
+@given(
+    items=st.lists(st.integers(min_value=0, max_value=1000), min_size=0, max_size=100),
+    agg=st.integers(min_value=1, max_value=9),
+    drop_last=st.booleans(),
+)
+def test_aggregate_sizes(items, agg, drop_last):
+    p = (
+        PipelineBuilder()
+        .add_source(items)
+        .aggregate(agg, drop_last=drop_last)
+        .add_sink(buffer_size=2)
+        .build(num_threads=2)
+    )
+    with p.auto_stop():
+        batches = list(p)
+    full, rem = divmod(len(items), agg)
+    expect_n = full + (0 if (drop_last or rem == 0) else 1)
+    assert len(batches) == expect_n
+    assert all(len(b) == agg for b in batches[: full if rem else expect_n])
+    flat = [x for b in batches for x in b]
+    assert flat == items[: len(flat)]

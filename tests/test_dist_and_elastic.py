@@ -1,0 +1,76 @@
+"""Distribution-layer unit tests: sharding rules, plans, elastic dry-run.
+
+These run in a SUBPROCESS with forced host devices so the main test process
+keeps seeing 1 device (the dry-run flag must never leak into other tests).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import get_config
+from repro.dist.sharding import make_plan, make_rules
+from repro.models.params import resolve_pspec
+
+
+def test_rules_divisibility_guards():
+    cfg = get_config("musicgen-medium")  # 24 heads: not divisible by 16
+    rules = make_rules(cfg, 16, False, ("data",), "model")
+    assert rules["heads"] is None  # 24 % 16 != 0 -> replicated attention
+    assert rules["ffn"] == "model"  # 6144 % 16 == 0 -> sharded
+    plan = make_plan(cfg, None)  # no mesh -> null plan
+    assert plan.kv_repeat == 1
+
+
+def test_resolve_pspec_dedups_axes():
+    spec = resolve_pspec(("embed", "ffn"), {"embed": ("data",), "ffn": ("data", "model")})
+    # "data" is taken by embed; ffn falls back to the remaining axis
+    assert spec[0] == ("data",) or spec[0] == "data"
+    assert spec[1] == "model" or spec[1] == ("model",)
+
+
+_SUBPROC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+    import json, sys
+    sys.path.insert(0, "src")
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.steps import build_step
+    from repro.runtime.elastic import elastic_dryrun, make_elastic_mesh
+
+    # degraded pod: 4x16 devices (one host row lost from 16x16... scaled to fit 64)
+    rec = elastic_dryrun("qwen3-0.6b", "train_4k", n_data=4)
+    print(json.dumps({"elastic": rec["n_devices"], "gb": rec["global_batch"]}))
+
+    # kv_repeat plan on a real mesh
+    from repro.dist.sharding import make_plan
+    mesh = make_elastic_mesh(4)
+    plan = make_plan(get_config("yi-6b"), mesh)
+    print(json.dumps({"kv_repeat": plan.kv_repeat, "shard_heads": plan.shard_heads}))
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_dryrun_subprocess():
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        cwd=".",
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    lines = [l for l in out.stdout.splitlines() if l.startswith("{")]
+    rec = json.loads(lines[0])
+    assert rec["elastic"] == 64
+    assert rec["gb"] % 4 == 0
+    plan = json.loads(lines[1])
+    assert plan["kv_repeat"] == 4  # yi-6b: kv=4 -> repeat 4 to divide tp=16
+    assert plan["shard_heads"] is True

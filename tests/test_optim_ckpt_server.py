@@ -1,0 +1,106 @@
+"""Optimizer math, checkpoint internals, and the serving runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptConfig, apply_update, init_opt_state, lr_schedule
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["adamw", "adamw_bf16", "sgdm", "adafactor"])
+def test_optimizer_descends_quadratic(kind):
+    cfg = OptConfig(kind=kind, lr=0.05, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3), "m": jnp.zeros((2, 3))}
+    state = init_opt_state(cfg, params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["m"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, metrics = apply_update(cfg, params, g, state)
+    assert float(loss(params)) < 0.2 * l0, f"{kind} failed to descend"
+    assert np.isfinite(metrics["grad_norm"])
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup
+    assert lrs[2] >= lrs[3] >= lrs[4]  # decay
+    assert lrs[4] >= 0.09 * cfg.lr  # floor ≈ 10%
+
+
+def test_adamw_bf16_moments_dtype():
+    cfg = OptConfig(kind="adamw_bf16")
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = init_opt_state(cfg, params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpoint internals
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    from repro.ckpt import load_checkpoint, save_checkpoint
+
+    params = {
+        "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        "nested": [{"b": jnp.ones((3,), jnp.float32)}],
+    }
+    save_checkpoint(tmp_path, 7, params, sampler_state={"epoch": 1, "cursor": 9})
+    out = load_checkpoint(tmp_path, params)
+    assert out["step"] == 7
+    assert out["sampler"] == {"epoch": 1, "cursor": 9}
+    for a, b in zip(jax.tree.leaves(out["params"]), jax.tree.leaves(params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    from repro.ckpt import CheckpointManager, latest_step
+
+    params = {"w": jnp.zeros(2)}
+    mgr = CheckpointManager(tmp_path, every=1, keep=2)
+    for step in (1, 2, 3, 4):
+        assert mgr.maybe_save(step, params, {"step": jnp.int32(step)})
+    mgr.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    assert latest_step(tmp_path) == 4
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    from repro.ckpt import save_checkpoint
+
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros(4)})
+    assert not list(tmp_path.glob(".tmp_*"))
+    assert (tmp_path / "step_00000001" / "meta.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# serving runtime
+# ---------------------------------------------------------------------------
+def test_batch_server_generates():
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.runtime import BatchServer
+
+    cfg = get_smoke_config("olmo-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    server = BatchServer(cfg, params, batch_size=2, prompt_len=8, max_new=4)
+    results = server.generate(["hello", "world", "third prompt"])  # ragged tail batch
+    assert len(results) == 3
+    for r in results:
+        assert len(r.token_ids) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.token_ids)
+        # greedy sampling must never pick a padding column
+        assert all(t < cfg.vocab_size for t in r.token_ids)
