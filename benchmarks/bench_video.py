@@ -54,7 +54,11 @@ def run() -> list[tuple[str, float, str]]:
 
         # throughput: streaming pipeline vs eager
         ds = _materialize_clips(f"{d}/clips", 48)
-        pipe = build_image_loader(ds, batch_size=4, hw=(32, 32), decode_concurrency=4)
+        # clips are (T, H, W, 3): not image-shaped, so use the list-collate
+        # fallback (the slab arena requires fixed (H, W, C) slots)
+        pipe = build_image_loader(
+            ds, batch_size=4, hw=(32, 32), decode_concurrency=4, zero_copy=False
+        )
         with pipe.auto_stop():
             t0 = time.monotonic()
             cnt = sum(1 for _ in pipe)
@@ -68,7 +72,7 @@ def run() -> list[tuple[str, float, str]]:
             eager = "no_error(UNEXPECTED)"
         except ValueError:
             eager = "init_raises(faithful_to_decord)"
-        pipe = build_image_loader(ds_bad, batch_size=4, hw=(32, 32))
+        pipe = build_image_loader(ds_bad, batch_size=4, hw=(32, 32), zero_copy=False)
         with pipe.auto_stop():
             good = sum(1 for _ in pipe)
         rows.append(("appC_robustness", 0.0, f"eager={eager};spdl_served_{good}_batches"))

@@ -3,48 +3,114 @@
 Prints ``name,us_per_call,derived`` CSV (assignment contract).  The roofline
 rows are derived from the dry-run artifacts under experiments/dryrun (run
 ``python -m repro.launch.dryrun`` first to refresh them).
+
+``--smoke`` runs each registered bench as a ~2-second CI sanity check:
+modules whose ``run`` accepts a ``smoke`` flag shrink their workload; the
+rest are given a 2-second soft budget and reported as ``_SMOKE_TIMEOUT``
+rows (not failures) when they exceed it.
 """
 
 from __future__ import annotations
 
+import argparse
+import importlib
+import inspect
+import os
+import subprocess
 import sys
 import traceback
 
+SMOKE_BUDGET_S = 2.0
+# Modules without a smoke flag run in a kill-at-budget subprocess; the
+# budget is padded by the interpreter/jax import time the in-process path
+# doesn't pay.  A killed bench can't keep running behind the harness's
+# back, so later rows are never contended.
+SMOKE_IMPORT_GRACE_S = 45.0
 
-def main() -> None:
-    from . import (
-        bench_e2e,
-        bench_first_batch,
-        bench_gil_modes,
-        bench_gil_scaling,
-        bench_loader_throughput,
-        bench_resources,
-        bench_video,
-        bench_wire_format,
-        roofline,
+#: (label, module) registry; modules are imported lazily and individually so
+#: one module's missing dependency cannot take down the whole harness.
+REGISTRY = [
+    ("fig1/2 GIL scaling", "bench_gil_scaling"),
+    ("fig5 loader throughput", "bench_loader_throughput"),
+    ("table2 first batch", "bench_first_batch"),
+    ("fig6/7 resources", "bench_resources"),
+    ("fig8/9 e2e inference+training", "bench_e2e"),
+    ("table3 GIL modes", "bench_gil_modes"),
+    ("appC video/decord", "bench_video"),
+    ("wire format (beyond-paper)", "bench_wire_format"),
+    ("zero-copy slab arena (beyond-paper)", "bench_zero_copy"),
+    ("roofline (dry-run derived)", "roofline"),
+]
+
+
+def _run_module(mod, mod_name: str, smoke: bool):
+    """Invoke the bench honoring the smoke budget.
+
+    Returns ``("ok", rows)`` or ``("timeout", None)``.  Smoke-aware modules
+    shrink their own workload in-process; the rest run in a subprocess that
+    is killed at the budget (plus import grace), so an over-budget bench
+    can never keep executing alongside later ones."""
+    accepts_smoke = "smoke" in inspect.signature(mod.run).parameters
+    if not smoke:
+        return "ok", mod.run()
+    if accepts_smoke:
+        return "ok", mod.run(smoke=True)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", f"{__package__}.{mod_name}"],
+            capture_output=True,
+            text=True,
+            timeout=SMOKE_BUDGET_S + SMOKE_IMPORT_GRACE_S,
+            env=os.environ.copy(),
+        )
+    except subprocess.TimeoutExpired:
+        return "timeout", None
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench subprocess exited {proc.returncode}: {proc.stderr[-400:]}"
+        )
+    rows = []
+    for line in proc.stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            try:
+                rows.append((parts[0], float(parts[1]), parts[2]))
+            except ValueError:
+                pass  # stray print, not a CSV row
+    return "ok", rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="~2s per bench: CI sanity check, not a measurement",
     )
+    args = parser.parse_args(argv)
 
-    modules = [
-        ("fig1/2 GIL scaling", bench_gil_scaling),
-        ("fig5 loader throughput", bench_loader_throughput),
-        ("table2 first batch", bench_first_batch),
-        ("fig6/7 resources", bench_resources),
-        ("fig8/9 e2e inference+training", bench_e2e),
-        ("table3 GIL modes", bench_gil_modes),
-        ("appC video/decord", bench_video),
-        ("wire format (beyond-paper)", bench_wire_format),
-        ("roofline (dry-run derived)", roofline),
-    ]
     print("name,us_per_call,derived")
     failures = 0
-    for label, mod in modules:
+    for label, mod_name in REGISTRY:
+        tag = label.replace(" ", "_")
         try:
-            for name, us, derived in mod.run():
+            mod = importlib.import_module(f".{mod_name}", package=__package__)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{tag}_IMPORT_FAILED,0,{e!r}")
+            continue
+        try:
+            status, rows = _run_module(mod, mod_name, args.smoke)
+            if status == "timeout":
+                print(f"{tag}_SMOKE_TIMEOUT,0,killed_over_{SMOKE_BUDGET_S}s_budget")
+                continue
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:
             failures += 1
             traceback.print_exc()
-            print(f"{label.replace(' ', '_')}_FAILED,0,{e!r}")
+            print(f"{tag}_FAILED,0,{e!r}")
     if failures:
         sys.exit(1)
 

@@ -101,6 +101,44 @@ class PipelineBuilder:
         )
         return self
 
+    def aggregate_into(
+        self,
+        arena: Any,
+        num_items: int | None = None,
+        *,
+        drop_last: bool = False,
+        name: str | None = None,
+    ) -> "PipelineBuilder":
+        """Slot-aware batching: group ``SlotRef`` tickets into the arena slab
+        they were decoded into (zero-copy batch assembly).
+
+        The upstream stages must carry ``(item, SlotRef)`` assignments handed
+        out by ``arena.binder()`` and write each row in place (see
+        ``repro.data.arena``).  Unlike ``aggregate`` this stage buffers no
+        arrays: in the clean case the emitted batch *is* the slab.  Requires
+        an input-order-preserving upstream (the default ``output_order``)
+        and ``num_items == arena.batch_size`` — a sub-slab batch size would
+        let one slab back two live batches, so in-place compaction of the
+        second would corrupt the first after it was already delivered.
+        """
+        self._require_source()
+        size = num_items if num_items is not None else arena.batch_size
+        if size != arena.batch_size:
+            raise ValueError(
+                f"num_items ({size}) must equal arena batch_size "
+                f"({arena.batch_size}): one emitted batch per slab"
+            )
+        self._specs.append(
+            StageSpec(
+                kind="aggregate_into",
+                name=name or f"aggregate_into({size})",
+                agg_size=size,
+                drop_last=drop_last,
+                arena=arena,
+            )
+        )
+        return self
+
     def disaggregate(self, name: str | None = None) -> "PipelineBuilder":
         """Flatten iterable items back into single elements."""
         self._require_source()

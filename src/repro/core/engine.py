@@ -26,6 +26,7 @@ import time
 from concurrent.futures import Executor
 from typing import Any, AsyncIterable, Callable, Iterable
 
+from ._compat import TaskGroup
 from .errors import OnError, PipelineFailure
 from .queues import EOF, MonitoredQueue
 from .stats import StageStats
@@ -44,7 +45,7 @@ def _is_async_callable(fn: Callable) -> bool:
 class StageSpec:
     """One entry built by ``PipelineBuilder``."""
 
-    kind: str  # "source" | "pipe" | "aggregate" | "disaggregate"
+    kind: str  # "source" | "pipe" | "aggregate" | "aggregate_into" | "disaggregate"
     name: str
     fn: Callable | None = None
     source: Iterable | AsyncIterable | None = None
@@ -56,6 +57,7 @@ class StageSpec:
     agg_size: int = 0
     drop_last: bool = False
     queue_size: int = 2  # output queue bound (per stage)
+    arena: Any = None  # SlabArena for kind == "aggregate_into" (duck-typed)
 
 
 class StageRuntime:
@@ -73,6 +75,8 @@ class StageRuntime:
         self.out_q = out_q
         self.default_executor = default_executor
         self.stats = StageStats(name=spec.name, concurrency=spec.concurrency)
+        if spec.arena is not None:
+            self.stats.arena = spec.arena  # memory-pressure visibility
         if in_q is not None:
             in_q.consumer_stats = self.stats
         out_q.producer_stats = self.stats
@@ -120,6 +124,7 @@ class StageRuntime:
             "source": self._run_source,
             "pipe": self._run_pipe,
             "aggregate": self._run_aggregate,
+            "aggregate_into": self._run_aggregate_into,
             "disaggregate": self._run_disaggregate,
         }[self.spec.kind]
         try:
@@ -202,7 +207,7 @@ class StageRuntime:
                     await self._emit(result)
 
         try:
-            async with asyncio.TaskGroup() as tg:
+            async with TaskGroup() as tg:
                 tg.create_task(reader(), name=f"{self.spec.name}:reader")
                 tg.create_task(emitter(), name=f"{self.spec.name}:emitter")
         except BaseException:
@@ -225,7 +230,7 @@ class StageRuntime:
             finally:
                 sem.release()
 
-        async with asyncio.TaskGroup() as tg:
+        async with TaskGroup() as tg:
             while True:
                 item = await self.in_q.get()
                 if item is EOF:
@@ -248,6 +253,91 @@ class StageRuntime:
                 buf = []
         if buf and not self.spec.drop_last:
             await self._emit(buf)
+
+    async def _run_aggregate_into(self) -> None:
+        """Slot-aware batching over an arena (zero-copy assembly).
+
+        Input items are ``SlotRef``s whose rows were already written in
+        place by upstream stages; this stage never buffers arrays.  In the
+        clean case the first ``agg_size`` refs are exactly slab X, slots
+        0..N-1, and the batch is the slab itself: zero copies.  A failed
+        item upstream leaves a hole in its slab; compaction then copies the
+        displaced rows (only rows at/after the hole) so emitted batches
+        stay dense.  A slab drained entirely by compaction (never emitted)
+        is auto-released by the arena; an emitted slab is released by the
+        consumer (see ``DeviceTransfer``) after its device copy completes.
+
+        Requires an input-order-preserving upstream: refs of slab k must
+        all arrive before refs of slab k+1.
+        """
+        assert self.in_q is not None
+        size = self.spec.agg_size
+        ready: list[Any] = []  # SlotRefs, in arrival (= source) order
+        while True:
+            item = await self.in_q.get()
+            if item is EOF:
+                break
+            ready.append(item)
+            if len(ready) >= size:
+                await self._emit(self._assemble(ready, size))
+        if ready:
+            if self.spec.drop_last:
+                for ref in ready:
+                    ref.slab.consume_row()
+                for ref in ready:
+                    ref.slab.force_seal()
+            else:
+                # seal every slab the tail touches: a non-primary slab fully
+                # drained into the final partial batch would otherwise stay
+                # unsealed (the binder never finished it) and leak
+                tail_slabs = list({id(r.slab): r.slab for r in ready}.values())
+                await self._emit(self._assemble(ready, len(ready)))
+                for slab in tail_slabs:
+                    slab.force_seal()
+
+    def _assemble(self, ready: list[Any], n: int) -> Any:
+        refs = ready[:n]
+        del ready[:n]
+        primary = refs[0].slab
+        in_batch = 0
+        for pos, ref in enumerate(refs):
+            if ref.slab is primary:
+                in_batch += 1
+                # In-place compaction reads slot `ref.slot` into row `pos`;
+                # rows < pos are already compacted destinations, so a source
+                # below pos was ALREADY OVERWRITTEN — only an out-of-order
+                # upstream (output_order="completion") produces that, and it
+                # must fail loudly rather than emit duplicated rows.
+                if ref.slot < pos:
+                    raise RuntimeError(
+                        f"aggregate_into stage {self.spec.name!r}: ref "
+                        f"{ref!r} arrived after row {pos} was compacted — "
+                        "the upstream stage must preserve input order"
+                    )
+                if ref.slot == pos:
+                    continue
+            for key, arr in primary.arrays.items():
+                arr[pos] = ref.slab.arrays[key][ref.slot]
+            if ref.slab is not primary:
+                ref.slab.consume_row()
+        # Emitting a sealed slab while some of its rows are still pending
+        # upstream would recycle memory those refs point into.  Together
+        # with the monotonic-slot check above, this makes an out-of-order
+        # upstream (output_order="completion") fail loudly instead of
+        # corrupting data.
+        if (
+            primary.sealed
+            and in_batch + primary.holes + primary.drained < primary.assigned
+        ):
+            raise RuntimeError(
+                f"aggregate_into stage {self.spec.name!r}: emitted slab "
+                f"{primary!r} still has pending rows upstream — the "
+                "upstream stage must preserve input order"
+            )
+        if not primary.sealed:
+            primary.force_seal()  # partial final batch: no more rows coming
+        primary.mark_emitted()
+        return primary.as_batch(n)
 
     async def _run_disaggregate(self) -> None:
         assert self.in_q is not None

@@ -17,6 +17,7 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Iterator
 
+from ._compat import BaseExceptionGroup, TaskGroup
 from .engine import StageRuntime, StageSpec
 from .errors import PipelineFailure, PipelineStopped
 from .queues import EOF, MonitoredQueue
@@ -54,6 +55,11 @@ class Pipeline:
         self._started = False
         self._stopped = False
         self._loop_ready = threading.Event()
+        # Set by _root once the sink queue is installed (or by the root
+        # future's done-callback if setup fails) — consumers block on this
+        # instead of busy-polling.
+        self._sink_ready = threading.Event()
+        self._stop_callbacks: list[Any] = []
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "Pipeline":
@@ -72,6 +78,9 @@ class Pipeline:
         self._loop_ready.wait()
         assert self._loop is not None
         self._root_fut = asyncio.run_coroutine_threadsafe(self._root(), self._loop)
+        # If the root coroutine dies before installing the sink queue, wake
+        # any consumer blocked in get_item so it can surface the error.
+        self._root_fut.add_done_callback(lambda _f: self._sink_ready.set())
         return self
 
     def _thread_main(self) -> None:
@@ -107,15 +116,25 @@ class Pipeline:
             in_q = out_q
         self._runtimes = runtimes
         self._sink_q = queues[-1]
-        async with asyncio.TaskGroup() as tg:
+        self._sink_ready.set()
+        async with TaskGroup() as tg:
             for rt in runtimes:
                 tg.create_task(rt.run(), name=f"stage:{rt.spec.name}")
+
+    def add_stop_callback(self, fn) -> None:
+        """Register a callable invoked first thing in ``stop()`` — e.g. a
+        ``SlabArena.close`` so executor threads blocked on ``acquire`` are
+        woken before the executor is shut down."""
+        self._stop_callbacks.append(fn)
 
     def stop(self) -> None:
         """Cancel all stages and release every resource. Idempotent."""
         if self._stopped:
             return
         self._stopped = True
+        for cb in self._stop_callbacks:
+            with contextlib.suppress(Exception):
+                cb()
         if not self._started:
             return
         assert self._loop is not None
@@ -204,12 +223,14 @@ class Pipeline:
         if self._stopped:
             raise PipelineStopped("pipeline stopped")
         assert self._loop is not None
-        # The root task is created via run_coroutine_threadsafe; wait until
-        # it has installed the sink queue.
-        while self._sink_q is None or self._root_task is None:
-            if self._root_fut is not None and self._root_fut.done():
-                self._root_fut.result()  # surfaces setup errors
-            threading.Event().wait(0.001)
+        # The root task is created via run_coroutine_threadsafe; block until
+        # it has installed the sink queue (no busy-polling: _root sets the
+        # event, and the root future's done-callback sets it on early death).
+        self._sink_ready.wait()
+        if self._sink_q is None or self._root_task is None:
+            assert self._root_fut is not None
+            self._root_fut.result()  # surfaces setup errors
+            raise PipelineStopped("pipeline root exited before sink install")
         fut = asyncio.run_coroutine_threadsafe(self._anext(), self._loop)
         item = fut.result(timeout)
         if item is EOF:

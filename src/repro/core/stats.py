@@ -28,6 +28,7 @@ class StageStats:
     put_wait: float = 0.0  # seconds blocked waiting for output space (backpressured)
     first_out_t: float | None = None  # monotonic time of first emitted item
     last_error: str | None = None
+    arena: object | None = None  # SlabArena of an aggregate_into stage, if any
     _t_start: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
@@ -77,6 +78,11 @@ class StageStats:
             get_wait=self.get_wait,
             put_wait=self.put_wait,
             last_error=self.last_error,
+            bytes_allocated=getattr(self.arena, "bytes_allocated", 0),
+            slabs_in_flight=(
+                self.arena.slabs_in_flight if self.arena is not None else 0
+            ),
+            num_slabs=getattr(self.arena, "num_slabs", 0),
         )
 
 
@@ -93,6 +99,10 @@ class StageStatsSnapshot:
     get_wait: float
     put_wait: float
     last_error: str | None
+    # memory pressure (nonzero only for arena-backed aggregate_into stages)
+    bytes_allocated: int = 0
+    slabs_in_flight: int = 0
+    num_slabs: int = 0
 
 
 def format_stats(snaps: list[StageStatsSnapshot]) -> str:
@@ -114,6 +124,12 @@ def format_stats(snaps: list[StageStatsSnapshot]) -> str:
             f"{s.num_failed:>6}{s.qps:>10.1f}{s.avg_task_time * 1e3:>9.2f}"
             f"{s.occupancy * 100:>6.1f}{s.get_wait:>8.2f}{s.put_wait:>8.2f}"
         )
+    for s in snaps:
+        if s.num_slabs:
+            lines.append(
+                f"[{s.name}] arena: slabs_in_flight={s.slabs_in_flight}/{s.num_slabs}"
+                f" bytes_allocated={s.bytes_allocated / 2**20:.1f}MB"
+            )
     return "\n".join(lines)
 
 

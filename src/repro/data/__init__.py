@@ -1,3 +1,4 @@
+from .arena import ArenaClosed, SlabArena, SlotRef
 from .codec import decode_sample, encode_sample
 from .dataset import ArrayDataset, SyntheticImageDataset, SyntheticTokenDataset
 from .loader import build_image_loader, build_lm_loader
@@ -7,6 +8,9 @@ from .tokenizer import ByteTokenizer
 __all__ = [
     "encode_sample",
     "decode_sample",
+    "ArenaClosed",
+    "SlabArena",
+    "SlotRef",
     "ArrayDataset",
     "SyntheticImageDataset",
     "SyntheticTokenDataset",

@@ -1,15 +1,51 @@
 """High-level loaders: SPDL pipelines wired for the two workload families.
 
 ``build_image_loader``  — the paper's benchmark pipeline: sample indices →
-read bytes (I/O) → decode+resize (GIL-releasing CPU) → collate into one
-contiguous batch → device transfer (concurrency=1).
+slot assignment → read bytes (I/O) → decode+resize (GIL-releasing CPU,
+written in place) → slab batch assembly → device transfer (concurrency=1).
 
 ``build_lm_loader``     — the LM-training pipeline used by the trainer:
-index batches → read docs → decode → tokenize/pack into (seq_len,) rows
-with segment ids → collate → shard-aware device placement.
+index batches → read docs → decode+tokenize/pack into (seq_len,) slab rows
+with segment ids → slab batch assembly → shard-aware device placement.
 
 Every stage's concurrency is tunable (paper "Tunability"); stats from
-``Pipeline.stats()`` expose the bottleneck stage (paper "Visibility").
+``Pipeline.stats()`` expose the bottleneck stage (paper "Visibility") and,
+for the slab path, memory pressure (``slabs_in_flight``/``bytes_allocated``).
+
+Memory model (zero-copy slab path, default ``zero_copy=True``)
+---------------------------------------------------------------
+Batches are assembled in a ``SlabArena``: a ring of ``arena_slabs``
+preallocated ``(batch, *item_shape)`` buffers that the pipeline recycles
+instead of reallocating.  Ownership rules:
+
+1. **Producers do not own their outputs.**  A ``concurrency=1`` binder stage
+   pairs every sample with a ``(slab, slot)`` ticket *before* decode; decode
+   workers write their result directly into the assigned slot (GIL-released,
+   concurrent — distinct slots never alias).
+2. **Acquisition is the backpressure.**  ``arena.acquire()`` blocks (in the
+   worker pool, never on the event loop) while all slabs are in flight, so a
+   stalled consumer bounds host memory at ``arena_slabs`` slabs — the arena
+   can never exceed its ring size.
+3. **A failed sample leaves a hole.**  The decode wrapper calls
+   ``ref.mark_hole()`` and re-raises (so stage stats still count the
+   failure); the ``aggregate_into`` stage compacts around holes by copying
+   only displaced rows, keeping emitted batches dense.
+4. **Release follows the device copy.**  An emitted slab travels to
+   ``DeviceTransfer``, which double-buffers: slab *k* returns to the arena
+   only after the transfer for slab *k+1* has been issued — or, on
+   zero-copy backends where ``device_put`` aliases host memory (CPU), only
+   after the whole consumer window (``sink_buffer`` + the batch in hand)
+   has moved past it; the ring is sized automatically for either case.
+   Consumers that retain batches beyond the current iteration must copy
+   them.  Slabs fully drained by compaction (never emitted) are recycled
+   by the arena itself.
+5. **Teardown can't hang.**  ``Pipeline.stop()`` first runs
+   ``arena.close()`` (registered as a stop callback), waking any worker
+   blocked in ``acquire`` with ``ArenaClosed``.
+
+``zero_copy=False`` restores the classic list-collate path (one fresh slab
+allocation + one extra copy per sample per batch) — the fallback for ragged
+shapes or third-party stages that retain references into batches.
 """
 
 from __future__ import annotations
@@ -19,10 +55,35 @@ from typing import Any
 import numpy as np
 
 from ..core import Pipeline, PipelineBuilder
-from .codec import decode_sample, resize_nearest
+from .arena import SlabArena
+from .codec import (
+    decode_into,
+    decode_sample,
+    parse_header,
+    resize_nearest,
+    resize_nearest_into,
+)
 from .packing import SequencePacker, collate
 from .sampler import CheckpointableSampler
 from .transfer import DeviceTransfer
+
+
+def _ring_size(arena_slabs: int | None, transfer: DeviceTransfer) -> int:
+    """Slab-ring size for a loader: the ring must outsize the slabs pinned
+    at once (transfer hold + inter-stage queues + the one being filled) or
+    the binder deadlocks the pipeline.  An explicit request below that
+    floor is an error, not a silent inflation — the caller set it as a
+    memory cap and must raise it (or the sink buffer) knowingly."""
+    floor = transfer.hold_slabs + 4
+    if arena_slabs is None:
+        return floor
+    if arena_slabs < floor:
+        raise ValueError(
+            f"arena_slabs={arena_slabs} is below the deadlock floor "
+            f"{floor} (= transfer hold {transfer.hold_slabs} + 4 in-flight); "
+            "raise arena_slabs or lower sink_buffer"
+        )
+    return arena_slabs
 
 
 def build_image_loader(
@@ -38,6 +99,8 @@ def build_image_loader(
     uint8_wire: bool = True,
     sampler: CheckpointableSampler | None = None,
     epochs: int | None = 1,  # None = stream forever (training);  N = bounded
+    zero_copy: bool = True,
+    arena_slabs: int | None = None,  # None = sized from the consumer window
 ) -> Pipeline:
     sampler = sampler or CheckpointableSampler(len(dataset), batch_size=1, shuffle=False)
 
@@ -48,31 +111,94 @@ def build_image_loader(
                 return
             yield from batch
 
-    def read(i: int) -> bytes:
-        return dataset.read_bytes(i)
+    transfer = DeviceTransfer(
+        shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer
+    )
 
-    def decode(data: bytes) -> np.ndarray:
-        img = decode_sample(data)
-        return resize_nearest(img, hw)
+    if zero_copy and len(dataset) > 0:
+        # The slab spec hard-codes uint8 (H, W, 3) slots.  A dataset of
+        # incompatible samples (grayscale, float, video clips) would hole
+        # out EVERY item under OnError.SKIP — a silent empty epoch — so
+        # sniff one sample and fall back to list-collate instead.
+        try:
+            probe = decode_sample(dataset.read_bytes(0))
+        except Exception:
+            pass  # unreadable first sample: the runtime path will skip it
+        else:
+            if probe.ndim != 3 or probe.shape[2] != 3 or probe.dtype != np.uint8:
+                zero_copy = False
 
-    def make_batch(imgs: list[np.ndarray]) -> dict:
-        out = np.empty((len(imgs), *imgs[0].shape), imgs[0].dtype)
-        for j, im in enumerate(imgs):
-            out[j] = im
-        return {"images": out}
+    if not zero_copy:
+        # Classic list-collate fallback: each decode allocates its own
+        # output, the collate stage allocates a fresh slab per batch.
+        def read(i: int) -> bytes:
+            return dataset.read_bytes(i)
 
-    transfer = DeviceTransfer(shardings, uint8_wire=uint8_wire)
-    return (
+        def decode(data: bytes) -> np.ndarray:
+            img = decode_sample(data)
+            return resize_nearest(img, hw)
+
+        def make_batch(imgs: list[np.ndarray]) -> dict:
+            out = np.empty((len(imgs), *imgs[0].shape), imgs[0].dtype)
+            for j, im in enumerate(imgs):
+                out[j] = im
+            return {"images": out}
+
+        return (
+            PipelineBuilder()
+            .add_source(indices(), name="sampler")
+            .pipe(read, concurrency=read_concurrency, name="read")
+            .pipe(decode, concurrency=decode_concurrency, name="decode")
+            .aggregate(batch_size, drop_last=True, name="batch")
+            .pipe(make_batch, name="collate")
+            .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
+            .add_sink(buffer_size=sink_buffer)
+            .build(num_threads=num_threads)
+        )
+
+    # Zero-copy slab path (see module docstring "Memory model").
+    arena = SlabArena(
+        {"images": ((*hw, 3), np.uint8)},
+        batch_size=batch_size,
+        num_slabs=_ring_size(arena_slabs, transfer),
+    )
+
+    def read(item) -> tuple:
+        i, ref = item
+        try:
+            return dataset.read_bytes(i), ref
+        except Exception:
+            ref.mark_hole()  # the slot was already assigned; don't leak it
+            raise
+
+    def decode(item):
+        data, ref = item
+        try:
+            out = ref.slab.arrays["images"][ref.slot]
+            dtype, shape, _ = parse_header(data)
+            if tuple(shape) == tuple(out.shape) and dtype == out.dtype:
+                decode_into(data, out)  # native size: decompress into the slot
+            else:
+                resize_nearest_into(decode_sample(data), out)
+            return ref
+        except Exception:
+            ref.mark_hole()  # the row will never arrive; unblock the batch
+            raise
+
+    pipe = (
         PipelineBuilder()
         .add_source(indices(), name="sampler")
+        .pipe(arena.binder(), concurrency=1, name="slot")  # blocks = backpressure
         .pipe(read, concurrency=read_concurrency, name="read")
         .pipe(decode, concurrency=decode_concurrency, name="decode")
-        .aggregate(batch_size, drop_last=True, name="batch")
-        .pipe(make_batch, name="collate")
+        .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
         .add_sink(buffer_size=sink_buffer)
         .build(num_threads=num_threads)
     )
+    pipe.add_stop_callback(arena.close)
+    pipe.add_stop_callback(transfer.flush)
+    return pipe
 
 
 def build_lm_loader(
@@ -87,9 +213,16 @@ def build_lm_loader(
     sink_buffer: int = 2,
     shardings: Any | None = None,
     seed: int = 0,
+    zero_copy: bool = True,
+    arena_slabs: int | None = None,  # None = sized from the consumer window
 ) -> tuple[Pipeline, CheckpointableSampler]:
     """Returns (pipeline, sampler) — the sampler is checkpointed alongside
-    model state (fault tolerance; see runtime/trainer.py)."""
+    model state (fault tolerance; see runtime/trainer.py).
+
+    The zero-copy path packs rows straight into a packed-rows slab (one
+    ``(batch, seq_len) int32`` buffer per field) and skips the collate stage
+    entirely; see the module docstring for the slab ownership rules.
+    """
     sampler = sampler or CheckpointableSampler(
         len(dataset), batch_size=8, seed=seed, shuffle=True
     )
@@ -102,21 +235,50 @@ def build_lm_loader(
     def read(i: int) -> bytes:
         return dataset.read_bytes(i)
 
-    def pack(data: bytes) -> list[dict]:
-        doc = decode_sample(data)
-        return packer.add(doc)  # 0..k completed rows
+    transfer = DeviceTransfer(shardings, consumer_window=sink_buffer)
 
-    transfer = DeviceTransfer(shardings)
+    if not zero_copy:
+        def pack(data: bytes) -> list[dict]:
+            doc = decode_sample(data)
+            return packer.add(doc)  # 0..k completed rows
+
+        pipe = (
+            PipelineBuilder()
+            .add_source(doc_ids(), name="sampler")
+            .pipe(read, concurrency=read_concurrency, name="read")
+            .pipe(pack, concurrency=1, name="decode+pack")  # packer is stateful
+            .disaggregate(name="rows")
+            .aggregate(batch_size, drop_last=True, name="batch")
+            .pipe(collate, concurrency=decode_concurrency, name="collate")
+            .pipe(transfer, concurrency=1, name="transfer")
+            .add_sink(buffer_size=sink_buffer)
+            .build(num_threads=num_threads)
+        )
+        return pipe, sampler
+
+    row_shape = ((seq_len,), np.int32)
+    arena = SlabArena(
+        {k: row_shape for k in ("tokens", "labels", "positions", "segment_ids")},
+        batch_size=batch_size,
+        num_slabs=_ring_size(arena_slabs, transfer),
+    )
+    next_slot = arena.slot_writer()  # only touched by the concurrency=1 packer
+
+    def pack_into(data: bytes) -> list:
+        doc = decode_sample(data)
+        return packer.add_into(doc, next_slot)  # 0..k completed slot tickets
+
     pipe = (
         PipelineBuilder()
         .add_source(doc_ids(), name="sampler")
         .pipe(read, concurrency=read_concurrency, name="read")
-        .pipe(pack, concurrency=1, name="decode+pack")  # packer is stateful
+        .pipe(pack_into, concurrency=1, name="decode+pack")  # packer is stateful
         .disaggregate(name="rows")
-        .aggregate(batch_size, drop_last=True, name="batch")
-        .pipe(collate, concurrency=decode_concurrency, name="collate")
+        .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")
         .add_sink(buffer_size=sink_buffer)
         .build(num_threads=num_threads)
     )
+    pipe.add_stop_callback(arena.close)
+    pipe.add_stop_callback(transfer.flush)
     return pipe, sampler

@@ -7,34 +7,99 @@ sink the H2D copy overlaps the running step (the CUDA-side "separate
 stream" of the paper).  Per §2.1 there must be at most ONE transfer task:
 build the stage with ``concurrency=1`` (the loader does).
 
-``uint8_wire=True`` sends image payloads as uint8 and lets the device-side
-``dequant_normalize`` kernel expand to bf16 on-chip — 4× fewer host→device
-bytes than f32 (beyond-paper optimization, kernels/dequant_normalize.py).
+``uint8_wire=True`` downcasts float image payloads ([0, 1]-normalized, the
+``normalize_to_float`` convention) to uint8 on the wire and lets the
+device-side ``dequant_normalize`` kernel expand to bf16 on-chip — 4× fewer
+host→device bytes than f32 (beyond-paper optimization,
+kernels/dequant_normalize.py).  Integer payloads pass through untouched.
+
+Double buffering (zero-copy arena path): a batch arriving from an
+``aggregate_into`` stage carries its owning slab under ``SLAB_KEY``.  The
+slab's host memory must stay intact until nothing reads it anymore, so the
+transfer keeps a ring of "staging" slabs — the last ``hold_slabs`` batches
+— and releases the oldest back to the arena only as new transfers are
+issued.
+
+``hold_slabs`` defaults to ``consumer_window + 2``: enough to cover every
+batch that can be live at once (the sink buffer + the batch the consumer
+holds + one mid-handoff).  That window matters because ``jax.device_put``
+may *alias* host numpy memory instead of snapshotting it — and whether it
+does is a per-buffer size/alignment decision inside XLA (small arrays get
+copied, slab-sized ones get aliased on CPU), so it cannot be probed
+reliably once up front.  Holding the full window is a few batch-buffers of
+host memory; releasing early is silent data corruption.  Consumers that
+retain batches beyond the current iteration must copy them.  No
+``block_until_ready()`` ever enters the hot path.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Any
 
 import jax
 import numpy as np
 
+from .arena import SLAB_KEY
+
+
+def to_uint8_wire(v: Any) -> Any:
+    """Downcast a [0,1]-normalized float image payload to the uint8 wire
+    format (inverse of the on-chip ``x/255`` dequant).  Anything that is not
+    a floating-point image-shaped array passes through unchanged."""
+    if (
+        isinstance(v, np.ndarray)
+        and v.dtype in (np.float32, np.float64)
+        and v.ndim >= 3  # (H, W, C) or (N, H, W, C): image-like payloads only
+    ):
+        return np.clip(np.rint(v * 255.0), 0.0, 255.0).astype(np.uint8)
+    return v
+
 
 class DeviceTransfer:
-    def __init__(self, shardings: Any | None = None, *, uint8_wire: bool = False):
+    def __init__(
+        self,
+        shardings: Any | None = None,
+        *,
+        uint8_wire: bool = False,
+        hold_slabs: int | None = None,
+        consumer_window: int = 3,
+    ):
+        if hold_slabs is None:
+            hold_slabs = consumer_window + 2
         self.shardings = shardings
         self.uint8_wire = uint8_wire
+        self.hold_slabs = hold_slabs  # slabs kept alive behind the current one
         self.bytes_moved = 0
+        self.num_batches = 0
+        self._held: deque[Any] = deque()
 
-    def __call__(self, batch: dict) -> dict:
-        if self.uint8_wire:
-            batch = {
-                k: (v if (isinstance(v, np.ndarray) and v.dtype == np.uint8) else v)
-                for k, v in batch.items()
-            }
-        self.bytes_moved += sum(
-            v.nbytes for v in batch.values() if hasattr(v, "nbytes")
+    def __call__(self, batch: Any) -> Any:
+        slab = None
+        if isinstance(batch, dict):
+            slab = batch.pop(SLAB_KEY, None)
+            if self.uint8_wire:
+                batch = {k: to_uint8_wire(v) for k, v in batch.items()}
+        self.bytes_moved += (
+            sum(v.nbytes for v in batch.values() if hasattr(v, "nbytes"))
+            if isinstance(batch, dict)
+            else getattr(batch, "nbytes", 0)
         )
+        self.num_batches += 1
         if self.shardings is None:
-            return jax.device_put(batch)
-        return jax.device_put(batch, self.shardings)
+            out = jax.device_put(batch)
+        else:
+            out = jax.device_put(batch, self.shardings)
+        if slab is not None:
+            # The copy for `slab` is now in flight; recycle the one from
+            # hold_slabs batches ago, whose copy is certainly consumed.
+            self._held.append(slab)
+            while len(self._held) > self.hold_slabs:
+                self._held.popleft().release()
+        return out
+
+    def flush(self) -> None:
+        """Release every held slab (end of stream / teardown).  Callers must
+        ensure pending transfers are consumed (e.g. the pipeline drained)."""
+        while self._held:
+            self._held.popleft().release()

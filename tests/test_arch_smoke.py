@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
+
 from repro.configs import all_archs, get_config, get_smoke_config
 from repro.models import Model
 

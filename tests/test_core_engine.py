@@ -319,6 +319,83 @@ def test_builder_rejects_bad_usage():
         PipelineBuilder().add_source([1]).build()  # no processing stage
 
 
+def test_ordered_pipe_bounds_results_ahead_of_stalled_emitter():
+    """Backpressure invariant: with the emitter stalled (nobody drains the
+    sink), completed results parked ahead of it must stay bounded by the
+    stage's concurrency (+ the handful of already-emitted items sitting in
+    the output/sink queues) — never the whole source."""
+    conc, queue_size, sink = 4, 1, 1
+    completed = []
+    lock = threading.Lock()
+
+    def work(x):
+        with lock:
+            completed.append(x)
+        return x
+
+    p = build(
+        range(10_000),
+        lambda b: b.pipe(work, concurrency=conc, queue_size=queue_size),
+        sink=sink,
+    )
+    p.start()
+    time.sleep(0.4)
+    try:
+        # parked-in-task_q (<= conc) + emitter-held (1) + out_q + sink
+        bound = conc + 1 + queue_size + sink
+        assert len(completed) <= bound, f"unbounded run-ahead: {len(completed)}"
+        assert completed, "pipeline made no progress at all"
+    finally:
+        p.stop()
+
+
+def test_ordered_pipe_fail_fast_with_full_task_queue_no_deadlock():
+    """A failing item under OnError.FAIL must tear the stage down even when
+    the reader is parked on a full task_q (stalled consumer)."""
+
+    def boom(x):
+        if x == 3:
+            raise RuntimeError("boom")
+        time.sleep(0.01)  # keep the task_q populated behind the failure
+        return x
+
+    p = build(
+        range(10_000),
+        lambda b: b.pipe(boom, concurrency=2, on_error="fail", queue_size=1, name="boom"),
+        sink=1,
+    )
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            while True:  # bounded waits: a deadlock fails the test, not CI
+                p.get_item(timeout=10)
+    assert ei.value.stage == "boom"
+
+
+def test_fail_fast_completion_order_infinite_source():
+    """Regression (Python 3.10 TaskGroup backport): a child failure must
+    interrupt a stage body that is still awaiting input — with an infinite
+    source the error would otherwise never surface and teardown would hang."""
+
+    import itertools
+
+    def boom(x):
+        if x == 5:
+            raise RuntimeError("boom")
+        return x
+
+    p = build(
+        itertools.count(),
+        lambda b: b.pipe(
+            boom, concurrency=2, output_order="completion", on_error="fail", name="boom"
+        ),
+    )
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            while True:
+                p.get_item(timeout=15)
+    assert ei.value.stage == "boom"
+
+
 def test_process_pool_stage():
     """§5.8: GIL-holding stages can run in a process pool."""
     from concurrent.futures import ProcessPoolExecutor

@@ -7,6 +7,9 @@ Invariants, for any stage graph and any failure pattern:
   4. failure sets are exactly the items whose stage fn raised.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

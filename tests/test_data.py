@@ -3,6 +3,8 @@ loaders end-to-end, and robustness against corrupt samples."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (

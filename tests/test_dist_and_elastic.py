@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
+
 from repro.configs import get_config
 from repro.dist.sharding import make_plan, make_rules
 from repro.models.params import resolve_pspec

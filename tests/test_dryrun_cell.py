@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
+
 _SCRIPT = textwrap.dedent(
     """
     import os

