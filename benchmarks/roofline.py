@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import sys
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -151,8 +150,8 @@ def markdown_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def run() -> list[tuple[str, float, str]]:
-    recs = analyze()
+def run(dryrun_dir: str = "experiments/dryrun") -> list[tuple[str, float, str]]:
+    recs = analyze(dryrun_dir)
     ok = [r for r in recs if r.get("status") == "ok"]
     rows = []
     for r in ok:
@@ -171,5 +170,11 @@ def run() -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
-    recs = analyze(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
-    print(markdown_table(recs))
+    # CSV rows, not the markdown table: run.py --smoke drives this module
+    # as a subprocess and parses "name,us,derived" lines — markdown output
+    # would silently parse to zero rows (run() still writes the md table
+    # to experiments/roofline.md).
+    import sys
+
+    for r in run(*sys.argv[1:2]):
+        print(",".join(map(str, r)))

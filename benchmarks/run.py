@@ -39,6 +39,7 @@ REGISTRY = [
     ("appC video/decord", "bench_video"),
     ("wire format (beyond-paper)", "bench_wire_format"),
     ("zero-copy slab arena (beyond-paper)", "bench_zero_copy"),
+    ("sharded record store (beyond-paper)", "bench_shards"),
     ("roofline (dry-run derived)", "roofline"),
 ]
 

@@ -49,6 +49,7 @@ class PipelineBuilder:
         on_error: str | OnError = OnError.SKIP,
         timeout: float | None = None,
         queue_size: int = 2,
+        cache: Any = None,
     ) -> "PipelineBuilder":
         """Chain a processing stage.
 
@@ -65,6 +66,10 @@ class PipelineBuilder:
           on_error: "skip" (robust, default) or "fail" (fail-fast).
           timeout: optional per-item timeout in seconds.
           queue_size: output queue bound (backpressure granularity).
+          cache: optional cache/prefetcher probe (anything with a ``stats()``
+            dict of hits/misses/evictions/bytes_cached/prefetch_depth);
+            its counters are folded into this stage's ``Pipeline.stats()``
+            snapshot — how shard-cache visibility reaches the dashboard.
         """
         self._require_source()
         if concurrency < 1:
@@ -82,6 +87,7 @@ class PipelineBuilder:
                 on_error=OnError(on_error),
                 timeout=timeout,
                 queue_size=queue_size,
+                cache=cache,
             )
         )
         return self

@@ -58,6 +58,7 @@ class StageSpec:
     drop_last: bool = False
     queue_size: int = 2  # output queue bound (per stage)
     arena: Any = None  # SlabArena for kind == "aggregate_into" (duck-typed)
+    cache: Any = None  # shard cache/prefetcher probed for stats (duck-typed)
 
 
 class StageRuntime:
@@ -77,6 +78,8 @@ class StageRuntime:
         self.stats = StageStats(name=spec.name, concurrency=spec.concurrency)
         if spec.arena is not None:
             self.stats.arena = spec.arena  # memory-pressure visibility
+        if spec.cache is not None:
+            self.stats.cache = spec.cache  # shard-cache visibility
         if in_q is not None:
             in_q.consumer_stats = self.stats
         out_q.producer_stats = self.stats
@@ -294,6 +297,13 @@ class StageRuntime:
                 await self._emit(self._assemble(ready, len(ready)))
                 for slab in tail_slabs:
                     slab.force_seal()
+        # A slab whose remaining assigned rows ALL failed upstream sends no
+        # ref here at all — it is in use, unsealed, and nothing above can
+        # reach it.  EOF means upstream is fully drained (queues preserve
+        # order), so sealing every pending slab is safe and lets the
+        # arena's hole accounting recycle it instead of leaking it until
+        # teardown.
+        self.spec.arena.seal_pending()
 
     def _assemble(self, ready: list[Any], n: int) -> Any:
         refs = ready[:n]

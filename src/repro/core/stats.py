@@ -29,6 +29,7 @@ class StageStats:
     first_out_t: float | None = None  # monotonic time of first emitted item
     last_error: str | None = None
     arena: object | None = None  # SlabArena of an aggregate_into stage, if any
+    cache: object | None = None  # shard cache/prefetcher probed by this stage
     _t_start: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
@@ -66,6 +67,7 @@ class StageStats:
         return self.task_time / (self.elapsed * self.concurrency)
 
     def snapshot(self) -> "StageStatsSnapshot":
+        cache = self.cache.stats() if self.cache is not None else {}
         return StageStatsSnapshot(
             name=self.name,
             concurrency=self.concurrency,
@@ -83,6 +85,11 @@ class StageStats:
                 self.arena.slabs_in_flight if self.arena is not None else 0
             ),
             num_slabs=getattr(self.arena, "num_slabs", 0),
+            cache_hits=int(cache.get("hits", 0)),
+            cache_misses=int(cache.get("misses", 0)),
+            cache_evictions=int(cache.get("evictions", 0)),
+            bytes_cached=int(cache.get("bytes_cached", 0)),
+            prefetch_depth=int(cache.get("prefetch_depth", 0)),
         )
 
 
@@ -103,6 +110,12 @@ class StageStatsSnapshot:
     bytes_allocated: int = 0
     slabs_in_flight: int = 0
     num_slabs: int = 0
+    # shard-cache visibility (nonzero only for stages with a cache probe)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    bytes_cached: int = 0
+    prefetch_depth: int = 0
 
 
 def format_stats(snaps: list[StageStatsSnapshot]) -> str:
@@ -129,6 +142,15 @@ def format_stats(snaps: list[StageStatsSnapshot]) -> str:
             lines.append(
                 f"[{s.name}] arena: slabs_in_flight={s.slabs_in_flight}/{s.num_slabs}"
                 f" bytes_allocated={s.bytes_allocated / 2**20:.1f}MB"
+            )
+        if s.cache_hits or s.cache_misses or s.prefetch_depth:
+            total = s.cache_hits + s.cache_misses
+            rate = s.cache_hits / total if total else 0.0
+            lines.append(
+                f"[{s.name}] shard-cache: hits={s.cache_hits} misses={s.cache_misses}"
+                f" ({rate * 100:.0f}% hit) evictions={s.cache_evictions}"
+                f" cached={s.bytes_cached / 2**20:.1f}MB"
+                f" prefetch_depth={s.prefetch_depth}"
             )
     return "\n".join(lines)
 

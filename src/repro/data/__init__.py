@@ -3,6 +3,16 @@ from .codec import decode_sample, encode_sample
 from .dataset import ArrayDataset, SyntheticImageDataset, SyntheticTokenDataset
 from .loader import build_image_loader, build_lm_loader
 from .sampler import CheckpointableSampler
+from .shards import (
+    LocalShardSource,
+    ShardCorruption,
+    ShardDataset,
+    ShardPrefetcher,
+    ShardReader,
+    ShardWriter,
+    SimulatedLatencySource,
+    pack,
+)
 from .tokenizer import ByteTokenizer
 
 __all__ = [
@@ -18,4 +28,12 @@ __all__ = [
     "ByteTokenizer",
     "build_image_loader",
     "build_lm_loader",
+    "LocalShardSource",
+    "ShardCorruption",
+    "ShardDataset",
+    "ShardPrefetcher",
+    "ShardReader",
+    "ShardWriter",
+    "SimulatedLatencySource",
+    "pack",
 ]

@@ -227,6 +227,22 @@ class SlabArena:
             self._closed = True
             self._cond.notify_all()
 
+    def seal_pending(self) -> None:
+        """Force-seal every in-use, still-unsealed slab (end-of-stream).
+
+        When the final items of a stream all fail upstream, the binder has
+        assigned them slots in a slab it never finished — no ref reaches
+        the aggregate stage, so nothing downstream ever seals that slab and
+        its hole accounting can't recycle it.  Once EOF has propagated (the
+        queues preserve order, so no ref can still be in flight) sealing
+        everything pending is safe and lets ``_maybe_autorelease`` reclaim
+        fully-holed slabs instead of pinning them until teardown."""
+        with self._cond:
+            for slab in self._slabs:
+                if slab.in_use and not slab.sealed:
+                    slab.sealed = True
+                    self._maybe_autorelease(slab)
+
     # -- slab accounting (all under the one lock) --------------------------
     def _maybe_autorelease(self, slab: Slab) -> None:
         """A sealed, never-emitted slab whose rows are all holes or drained

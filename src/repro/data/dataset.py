@@ -21,7 +21,15 @@ class ArrayDataset:
     def __init__(self, root: str | pathlib.Path):
         self.root = pathlib.Path(root)
         index = self.root / "index.txt"
-        self.paths = [self.root / line for line in index.read_text().splitlines() if line]
+        if not index.is_file():
+            raise FileNotFoundError(
+                f"not an ArrayDataset directory: {self.root} has no index.txt"
+            )
+        self.paths = [
+            self.root / line
+            for line in (ln.strip() for ln in index.read_text().splitlines())
+            if line
+        ]
 
     def __len__(self) -> int:
         return len(self.paths)
@@ -81,8 +89,19 @@ class SyntheticTokenDataset:
     def __len__(self) -> int:
         return self.n_docs
 
+    def _pool_index(self, i: int) -> int:
+        """Deterministic (seed, i) -> pool slot via a splitmix64-style mix:
+        distinct indices beyond the pool size no longer alias the same bytes
+        in lockstep (``i % pool``), and two datasets that differ only in
+        ``seed`` disagree on which doc index ``i`` serves — keeping
+        benchmark access patterns honest."""
+        h = (i + 1 + self.seed * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        h = ((h ^ (h >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        h = ((h ^ (h >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return (h ^ (h >> 31)) % len(self._pool)
+
     def read_bytes(self, i: int) -> bytes:
-        return self._pool[i % len(self._pool)]
+        return self._pool[self._pool_index(i)]
 
     def __getitem__(self, i: int) -> np.ndarray:
         return decode_sample(self.read_bytes(i))

@@ -46,11 +46,32 @@ instead of reallocating.  Ownership rules:
 ``zero_copy=False`` restores the classic list-collate path (one fresh slab
 allocation + one extra copy per sample per batch) — the fallback for ragged
 shapes or third-party stages that retain references into batches.
+
+Sharded datasets (``repro.data.shards``)
+----------------------------------------
+Both loaders accept a ``ShardDataset`` unchanged: its ``read_bytes`` hands
+back a ``memoryview`` of the shard's mmap and the zero-copy path
+decompresses it straight into a slab slot (mmap → ``decode_into`` → arena,
+no intermediate copies).  When the dataset carries a ``ShardPrefetcher``
+(remote mode), the index source is wrapped so upcoming shards are fetched
+in the background ``_PREFETCH_LOOKAHEAD`` samples ahead of the read stage,
+and the prefetcher's cache counters surface on the read stage's row in
+``Pipeline.stats()``.  Pair with the sampler's shard-aware shuffle
+(``shard_sizes=dataset.shard_sizes``) so consecutive samples share shards
+and the cache actually hits.
+
+Checkpoint caveat: the lookahead wrapper holds up to ``_PREFETCH_LOOKAHEAD``
+already-drawn indices that the sampler has counted as handed out, so a
+sampler checkpoint taken mid-stream on the prefetcher path skips at most
+``_PREFETCH_LOOKAHEAD`` samples *in addition to* the sink-buffered batches
+documented in ``sampler.py`` — still bounded and epoch-local, but wider
+than the local-dataset path.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from collections import deque
+from typing import Any, Iterable, Iterator
 
 import numpy as np
 
@@ -86,6 +107,48 @@ def _ring_size(arena_slabs: int | None, transfer: DeviceTransfer) -> int:
     return arena_slabs
 
 
+#: how many samples of headroom the shard-prefetch wrapper keeps between
+#: scheduling a shard's fetch and handing its first index to the pipeline —
+#: the slack that lets the download overlap the decode of earlier shards.
+_PREFETCH_LOOKAHEAD = 64
+
+
+def _with_shard_prefetch(
+    indices: Iterable[int], dataset: Any, lookahead: int = _PREFETCH_LOOKAHEAD
+) -> Iterator[int]:
+    """Index-stream wrapper for prefetcher-backed shard datasets: peek
+    ``lookahead`` samples ahead of what the pipeline has been handed and
+    schedule background fetches for the shards they live in, so by the time
+    the read stage asks for a sample its shard is (usually) already in the
+    local cache.  Scheduling is advisory — a dropped request just means the
+    read stage fetches on demand.
+
+    The buffered indices have already advanced the sampler's cursor, so a
+    checkpoint taken mid-stream treats them as consumed: resume skips at
+    most ``lookahead`` samples beyond the sink-buffered batches (see the
+    module docstring's checkpoint caveat)."""
+    pf = dataset.prefetcher
+    buf: deque[int] = deque()
+    last_shard = -1
+    for i in indices:
+        shard = dataset.shard_of(i)
+        if shard != last_shard:  # dedup bursts; pf.schedule also dedups
+            pf.schedule(dataset.shard_names[shard])
+            last_shard = shard
+        buf.append(i)
+        if len(buf) > lookahead:
+            yield buf.popleft()
+    yield from buf
+
+
+def _maybe_prefetch(indices: Iterable[int], dataset: Any) -> tuple[Iterable[int], Any]:
+    """(index stream, cache probe) — wired only for prefetcher datasets."""
+    prefetcher = getattr(dataset, "prefetcher", None)
+    if prefetcher is None:
+        return indices, None
+    return _with_shard_prefetch(indices, dataset), prefetcher
+
+
 def build_image_loader(
     dataset,
     *,
@@ -114,19 +177,29 @@ def build_image_loader(
     transfer = DeviceTransfer(
         shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer
     )
+    index_stream, cache_probe = _maybe_prefetch(indices(), dataset)
 
     if zero_copy and len(dataset) > 0:
         # The slab spec hard-codes uint8 (H, W, 3) slots.  A dataset of
         # incompatible samples (grayscale, float, video clips) would hole
         # out EVERY item under OnError.SKIP — a silent empty epoch — so
-        # sniff one sample and fall back to list-collate instead.
-        try:
-            probe = decode_sample(dataset.read_bytes(0))
-        except Exception:
-            pass  # unreadable first sample: the runtime path will skip it
-        else:
-            if probe.ndim != 3 or probe.shape[2] != 3 or probe.dtype != np.uint8:
+        # sniff one sample and fall back to list-collate instead.  Shard
+        # manifests record sample 0's layout, which answers the question
+        # without reading data (a remote dataset would otherwise download a
+        # whole shard for this one header).
+        meta = getattr(dataset, "sample_meta", None)
+        if meta is not None:
+            dtype, shape = meta
+            if len(shape) != 3 or shape[2] != 3 or dtype != np.uint8:
                 zero_copy = False
+        else:
+            try:
+                probe = decode_sample(dataset.read_bytes(0))
+            except Exception:
+                pass  # unreadable first sample: the runtime path will skip it
+            else:
+                if probe.ndim != 3 or probe.shape[2] != 3 or probe.dtype != np.uint8:
+                    zero_copy = False
 
     if not zero_copy:
         # Classic list-collate fallback: each decode allocates its own
@@ -146,8 +219,8 @@ def build_image_loader(
 
         return (
             PipelineBuilder()
-            .add_source(indices(), name="sampler")
-            .pipe(read, concurrency=read_concurrency, name="read")
+            .add_source(index_stream, name="sampler")
+            .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
             .pipe(decode, concurrency=decode_concurrency, name="decode")
             .aggregate(batch_size, drop_last=True, name="batch")
             .pipe(make_batch, name="collate")
@@ -187,9 +260,9 @@ def build_image_loader(
 
     pipe = (
         PipelineBuilder()
-        .add_source(indices(), name="sampler")
+        .add_source(index_stream, name="sampler")
         .pipe(arena.binder(), concurrency=1, name="slot")  # blocks = backpressure
-        .pipe(read, concurrency=read_concurrency, name="read")
+        .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
         .pipe(decode, concurrency=decode_concurrency, name="decode")
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
@@ -236,6 +309,7 @@ def build_lm_loader(
         return dataset.read_bytes(i)
 
     transfer = DeviceTransfer(shardings, consumer_window=sink_buffer)
+    doc_stream, cache_probe = _maybe_prefetch(doc_ids(), dataset)
 
     if not zero_copy:
         def pack(data: bytes) -> list[dict]:
@@ -244,8 +318,8 @@ def build_lm_loader(
 
         pipe = (
             PipelineBuilder()
-            .add_source(doc_ids(), name="sampler")
-            .pipe(read, concurrency=read_concurrency, name="read")
+            .add_source(doc_stream, name="sampler")
+            .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
             .pipe(pack, concurrency=1, name="decode+pack")  # packer is stateful
             .disaggregate(name="rows")
             .aggregate(batch_size, drop_last=True, name="batch")
@@ -270,8 +344,8 @@ def build_lm_loader(
 
     pipe = (
         PipelineBuilder()
-        .add_source(doc_ids(), name="sampler")
-        .pipe(read, concurrency=read_concurrency, name="read")
+        .add_source(doc_stream, name="sampler")
+        .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
         .pipe(pack_into, concurrency=1, name="decode+pack")  # packer is stateful
         .disaggregate(name="rows")
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")

@@ -1,0 +1,66 @@
+"""Sharded record store: packed shards, mmap zero-copy reads, prefetch.
+
+The storage-side counterpart of the SPDL compute pipeline: instead of one
+file per sample (one ``open()+read()`` syscall pair each, hostile to both
+local filesystems and object stores), samples are packed into a few large
+**shard** files read through ``mmap`` with zero payload copies, fronted by
+an async prefetcher with a byte-budgeted local cache for remote sources.
+
+On-disk layout
+--------------
+A sharded dataset is a directory of shard files plus a JSON manifest::
+
+    dataset/
+      manifest.json            {"version": 1, "total": N,
+                                "shards": [{"name", "n", "bytes"}, ...]}
+      shard-00000.rpshard
+      shard-00001.rpshard
+
+Each ``.rpshard`` file is ``[header | payload | index]`` (little-endian):
+
+* **header** (32 B): magic ``b"RPRSHRD1"``, ``version:u32``,
+  ``n_samples:u32``, ``index_offset:u64``, ``payload_offset:u64``;
+* **payload**: the encoded samples (codec.py ``RPR1`` blobs, but the format
+  is payload-agnostic) packed back to back;
+* **index** (16 B/sample, written after the payload so the writer streams):
+  ``offset:u64``, ``length:u32``, ``crc32:u32``.
+
+Versioning: the magic pins the major layout, ``version`` the minor
+revision; readers reject unknown magics and newer-than-self versions and
+keep reading every older version ever shipped.
+
+CRC policy: crcs are computed over the encoded sample bytes at pack time
+and verified on every read by default; a mismatch raises
+``ShardCorruption`` for that sample only, so one flipped bit becomes a
+per-sample hole under the pipeline's ``OnError.SKIP`` instead of a dead
+shard or a silently wrong batch.
+
+Public surface
+--------------
+``ShardWriter`` / ``ShardReader``  one-file pack/read (``format.py``);
+``ShardDataset`` / ``pack``        multi-shard dataset + migration tool
+                                   (``dataset.py``);
+``ShardPrefetcher`` + sources      async fetch, LRU-by-bytes local cache,
+                                   simulated-latency remote for tests
+                                   (``prefetch.py``).
+
+``python -m repro.data.shards SRC DST`` packs an ``ArrayDataset``
+directory from the command line.
+"""
+
+from .dataset import MANIFEST_NAME, ShardDataset, pack, write_manifest
+from .format import ShardCorruption, ShardReader, ShardWriter
+from .prefetch import LocalShardSource, ShardPrefetcher, SimulatedLatencySource
+
+__all__ = [
+    "MANIFEST_NAME",
+    "LocalShardSource",
+    "ShardCorruption",
+    "ShardDataset",
+    "ShardPrefetcher",
+    "ShardReader",
+    "ShardWriter",
+    "SimulatedLatencySource",
+    "pack",
+    "write_manifest",
+]

@@ -1,0 +1,41 @@
+"""CLI migration tool: pack an ``ArrayDataset`` directory into shards.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.data.shards SRC_DIR DST_DIR \
+        [--samples-per-shard 1024] [--max-shard-bytes N]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from ..dataset import ArrayDataset
+from .dataset import pack
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("src", help="ArrayDataset directory (index.txt + *.rpr)")
+    parser.add_argument("dst", help="output directory for shards + manifest")
+    parser.add_argument("--samples-per-shard", type=int, default=1024)
+    parser.add_argument(
+        "--max-shard-bytes",
+        type=int,
+        default=None,
+        help="also roll a shard when its payload exceeds this many bytes",
+    )
+    args = parser.parse_args(argv)
+    ds = pack(
+        ArrayDataset(args.src),
+        args.dst,
+        samples_per_shard=args.samples_per_shard,
+        max_shard_bytes=args.max_shard_bytes,
+    )
+    print(
+        f"packed {len(ds)} samples into {ds.num_shards} shard(s) under {ds.root}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Multi-shard dataset + the ``pack`` migration tool.
+
+A sharded dataset on disk is a directory::
+
+    dataset/
+      manifest.json          {"version": 1, "total": N, "shards": [...]}
+      shard-00000.rpshard
+      shard-00001.rpshard
+      ...
+
+Each manifest entry records ``{"name", "n", "bytes"}``; global sample ``i``
+lives in the shard whose cumulative-count bucket contains ``i``.
+
+``ShardDataset`` implements the repo-wide dataset protocol
+(``read_bytes``/``__getitem__``/``__len__``) so every existing loader and
+baseline accepts it unchanged (local mode pickles for the multiprocessing
+baselines by reopening its mmaps per process; remote mode refuses to
+pickle — construct the prefetcher inside the worker instead) — with the
+difference that ``read_bytes``
+returns a zero-copy ``memoryview`` of the shard's mmap (the codec consumes
+any buffer, and the zero-copy loader path decompresses it straight into a
+slab slot: mmap → decode_into → arena, no intermediate copies).
+
+Two access modes:
+
+* local (default): shards are files under ``root``, mmap'd lazily on first
+  touch and kept open;
+* remote: pass a ``ShardPrefetcher`` (``prefetch.py``) and shards are
+  fetched through its bounded local cache — ``read_bytes`` blocks only on a
+  cache miss, and loaders overlap upcoming fetches with decode via
+  ``prefetcher.schedule``.
+
+``pack(dataset, out_dir)`` converts anything with ``read_bytes``/``len`` —
+an ``ArrayDataset`` directory in particular — into this layout.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import threading
+from typing import Any
+
+import numpy as np
+
+from ..codec import decode_sample, parse_header
+from .format import ShardReader, ShardWriter
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+
+
+def write_manifest(
+    root: pathlib.Path, shards: list[dict], extra: dict | None = None
+) -> dict:
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "total": sum(s["n"] for s in shards),
+        "shards": shards,
+        **(extra or {}),
+    }
+    (root / MANIFEST_NAME).write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+class ShardDataset:
+    """Map-style dataset over a packed-shard manifest (zero-copy reads)."""
+
+    def __init__(
+        self,
+        root: str | pathlib.Path,
+        *,
+        prefetcher: Any | None = None,
+        verify_crc: bool = True,
+    ):
+        self.root = pathlib.Path(root)
+        self.prefetcher = prefetcher
+        self.verify_crc = verify_crc
+        manifest_path = self.root / MANIFEST_NAME
+        if prefetcher is not None:
+            manifest = json.loads(prefetcher.fetch_manifest())
+        else:
+            if not manifest_path.is_file():
+                raise FileNotFoundError(
+                    f"no shard manifest at {manifest_path} — run "
+                    "repro.data.shards.pack() (or python -m repro.data.shards) first"
+                )
+            manifest = json.loads(manifest_path.read_text())
+        if manifest.get("version", 0) > MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {manifest['version']} is newer than this reader"
+            )
+        self.manifest = manifest
+        self.shard_names: list[str] = [s["name"] for s in manifest["shards"]]
+        self.shard_sizes: list[int] = [int(s["n"]) for s in manifest["shards"]]
+        self._cum = np.cumsum([0] + self.shard_sizes)
+        self._n = int(self._cum[-1])
+        self._readers: dict[int, ShardReader] = {}  # local mode, lazily opened
+        self._readers_lock = threading.Lock()
+
+    # -- topology (consumed by the shard-aware sampler / prefetch wiring) ---
+    @property
+    def num_shards(self) -> int:
+        return len(self.shard_names)
+
+    def shard_of(self, i: int) -> int:
+        """Shard index holding global sample ``i``."""
+        if not 0 <= i < self._n:
+            raise IndexError(f"sample {i} out of range [0, {self._n})")
+        return int(np.searchsorted(self._cum, i, side="right")) - 1
+
+    @property
+    def sample_meta(self) -> tuple[np.dtype, tuple[int, ...]] | None:
+        """(dtype, shape) of sample 0 as recorded by ``pack`` in the
+        manifest, or None for manifests predating the field.  Lets loaders
+        sniff the sample layout without reading (for remote datasets:
+        downloading a whole shard of) actual data."""
+        meta = self.manifest.get("sample0")
+        if not meta:
+            return None
+        return np.dtype(meta["dtype"]), tuple(meta["shape"])
+
+    def _reader(self, shard: int) -> ShardReader:
+        if self.prefetcher is not None:
+            return self.prefetcher.reader(self.shard_names[shard])
+        r = self._readers.get(shard)
+        if r is None:
+            # double-checked under the lock: the read stage is concurrent,
+            # and a losing duplicate ShardReader would leak its mapping
+            with self._readers_lock:
+                r = self._readers.get(shard)
+                if r is None:
+                    r = self._readers[shard] = ShardReader(
+                        self.root / self.shard_names[shard]
+                    )
+        return r
+
+    # -- dataset protocol ---------------------------------------------------
+    def __len__(self) -> int:
+        return self._n
+
+    def read_bytes(self, i: int) -> memoryview:
+        """Zero-copy encoded bytes of sample ``i`` (mmap slice)."""
+        shard = self.shard_of(i)
+        local = i - int(self._cum[shard])
+        return self._reader(shard).read(local, verify=self.verify_crc)
+
+    def __getitem__(self, i: int) -> np.ndarray:
+        return decode_sample(self.read_bytes(i))
+
+    def close(self) -> None:
+        for r in self._readers.values():
+            r.close()
+        self._readers.clear()
+        if self.prefetcher is not None:
+            self.prefetcher.close()
+
+    # -- pickling (multiprocessing baselines fork/spawn the dataset) --------
+    def __getstate__(self) -> dict:
+        if self.prefetcher is not None:
+            raise TypeError(
+                "a prefetcher-backed ShardDataset cannot be pickled (the "
+                "prefetcher owns threads and mmaps); pickle a local-mode "
+                "ShardDataset and construct the prefetcher in the worker"
+            )
+        state = self.__dict__.copy()
+        state["_readers"] = {}  # mmaps/locks are per-process; reopen lazily
+        del state["_readers_lock"]
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._readers = {}
+        self._readers_lock = threading.Lock()
+
+
+def pack(
+    dataset: Any,
+    out_dir: str | pathlib.Path,
+    *,
+    samples_per_shard: int = 1024,
+    max_shard_bytes: int | None = None,
+    prefix: str = "shard",
+) -> ShardDataset:
+    """Pack any ``read_bytes``/``__len__`` dataset into a sharded directory.
+
+    A shard rolls over at ``samples_per_shard`` samples or (if given)
+    ``max_shard_bytes`` of payload, whichever comes first.  Unreadable
+    source samples are packed as-is only if ``read_bytes`` succeeds —
+    failures propagate (migration should not silently drop data).
+    """
+    if samples_per_shard < 1:
+        raise ValueError("samples_per_shard must be >= 1")
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    shards: list[dict] = []
+    sample0: dict | None = None
+    writer: ShardWriter | None = None
+
+    def roll() -> None:
+        nonlocal writer
+        if writer is not None and writer.n_samples:
+            writer.close()
+            shards.append(
+                {
+                    "name": writer.path.name,
+                    "n": writer.n_samples,
+                    "bytes": writer.path.stat().st_size,
+                }
+            )
+        writer = None
+
+    try:
+        for i in range(len(dataset)):
+            if writer is None:
+                writer = ShardWriter(out_dir / f"{prefix}-{len(shards):05d}.rpshard")
+            data = dataset.read_bytes(i)
+            if sample0 is None:
+                # record sample 0's layout so loaders can sniff dtype/shape
+                # from the manifest alone (a remote dataset would otherwise
+                # download a whole shard just to peek at one header);
+                # samples that are not codec blobs simply leave the field out
+                try:
+                    dtype, shape, _ = parse_header(data)
+                    sample0 = {"dtype": dtype.name, "shape": list(shape)}
+                except Exception:
+                    sample0 = {}
+            writer.add(data)
+            if writer.n_samples >= samples_per_shard or (
+                max_shard_bytes is not None and writer.payload_bytes >= max_shard_bytes
+            ):
+                roll()
+        roll()
+    except BaseException:
+        # failed migration: close and remove the in-progress (unfinalized,
+        # zero-header) shard so a retry doesn't find a stray invalid file
+        if writer is not None:
+            writer.close()
+            writer.path.unlink(missing_ok=True)
+        raise
+    write_manifest(out_dir, shards, {"sample0": sample0} if sample0 else None)
+    return ShardDataset(out_dir)

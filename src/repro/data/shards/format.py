@@ -1,0 +1,212 @@
+"""Packed shard file format: header + payload + per-sample index.
+
+One shard file holds many encoded samples (codec.py ``RPR1`` blobs, but the
+format is payload-agnostic) packed back to back, so a million-sample dataset
+becomes a few hundred large files instead of a million tiny ones — one
+``mmap`` per shard replaces an ``open()+read()+close()`` syscall triple per
+sample, and reads become pointer arithmetic into the page cache.
+
+On-disk layout (little-endian throughout)::
+
+    [ header | payload region | index region ]
+
+    header (32 bytes, fixed):
+        magic         8s   b"RPRSHRD1" (version is the last byte: '1')
+        version       u32  FORMAT_VERSION
+        n_samples     u32
+        index_offset  u64  file offset of the index region
+        payload_off   u64  file offset of the payload region (= 32)
+
+    index (n_samples x 16 bytes, written AFTER the payload so the writer
+    streams samples without knowing sizes up front):
+        offset        u64  absolute file offset of the sample
+        length        u32  sample byte length
+        crc32         u32  zlib.crc32 of the sample bytes
+
+CRC policy: the crc is computed over the *encoded* sample bytes at write
+time and verified on every read by default (``ShardReader.read(i)``); a
+mismatch raises ``ShardCorruption`` for that sample only, so a flipped bit
+surfaces as a per-sample hole in the pipeline rather than a dead shard.
+Callers doing their own integrity checking pass ``verify=False`` and the
+read is pure pointer math.
+
+Versioning: the header magic pins the major layout; ``version`` is the
+minor revision.  Readers reject a magic they don't know and a version newer
+than theirs (forward-incompatible), and must keep reading every older
+version they ever shipped.
+
+``ShardReader.read`` returns a ``memoryview`` slice of the shard's mmap —
+zero payload copies; the view stays valid for the life of the mapping (the
+reader keeps it alive, and on Linux even an unlinked file's mapping stays
+readable, which is what lets the local shard cache evict files with reads
+still in flight).
+"""
+
+from __future__ import annotations
+
+import mmap
+import pathlib
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"RPRSHRD1"
+FORMAT_VERSION = 1
+_HEADER = struct.Struct("<8sIIQQ")
+HEADER_SIZE = _HEADER.size  # 32
+_ENTRY = struct.Struct("<QII")
+ENTRY_SIZE = _ENTRY.size  # 16
+_INDEX_DTYPE = np.dtype([("off", "<u8"), ("len", "<u4"), ("crc", "<u4")])
+
+
+class ShardCorruption(ValueError):
+    """A shard (or one sample inside it) failed an integrity check."""
+
+
+class ShardWriter:
+    """Streams samples into one shard file; finalizes index + header on close.
+
+    Usage::
+
+        with ShardWriter(path) as w:
+            for blob in blobs:
+                w.add(blob)
+
+    ``add`` returns the sample's position within the shard.  The file is not
+    a valid shard until ``close()`` (the header is a zero placeholder while
+    streaming), so a crashed writer leaves an obviously-invalid file rather
+    than a silently short one.
+    """
+
+    def __init__(self, path: str | pathlib.Path):
+        self.path = pathlib.Path(path)
+        self._f = open(self.path, "wb")
+        self._f.write(b"\0" * HEADER_SIZE)
+        self._entries: list[tuple[int, int, int]] = []
+        self._closed = False
+
+    def add(self, data) -> int:
+        """Append one encoded sample; returns its index within the shard."""
+        if self._closed:
+            raise RuntimeError("ShardWriter already closed")
+        data = memoryview(data)
+        off = self._f.tell()
+        self._f.write(data)
+        self._entries.append((off, data.nbytes, zlib.crc32(data)))
+        return len(self._entries) - 1
+
+    @property
+    def n_samples(self) -> int:
+        return len(self._entries)
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(ln for _, ln, _ in self._entries)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        index_off = self._f.tell()
+        for entry in self._entries:
+            self._f.write(_ENTRY.pack(*entry))
+        self._f.seek(0)
+        self._f.write(
+            _HEADER.pack(
+                MAGIC, FORMAT_VERSION, len(self._entries), index_off, HEADER_SIZE
+            )
+        )
+        self._f.close()
+
+    def __enter__(self) -> "ShardWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ShardReader:
+    """mmap-backed random access into one shard file.
+
+    ``read(i)`` returns a zero-copy ``memoryview`` of the sample bytes and
+    (by default) verifies the per-sample crc32.  The whole index is parsed
+    once into numpy arrays at open, so per-read work is two array loads, one
+    slice, and (optionally) the crc pass.
+    """
+
+    def __init__(self, path: str | pathlib.Path):
+        self.path = pathlib.Path(path)
+        self._file = open(self.path, "rb")
+        try:
+            self._mm = mmap.mmap(self._file.fileno(), 0, access=mmap.ACCESS_READ)
+        except ValueError as e:  # empty file
+            self._file.close()
+            raise ShardCorruption(f"{self.path}: not a shard file ({e})") from e
+        self._buf = memoryview(self._mm)
+        size = len(self._mm)
+        if size < HEADER_SIZE:
+            self._fail(f"file is {size} bytes, header needs {HEADER_SIZE}")
+        magic, version, n, index_off, payload_off = _HEADER.unpack_from(self._buf, 0)
+        if magic != MAGIC:
+            self._fail(f"bad magic {bytes(magic)!r} (unfinalized or foreign file)")
+        if version > FORMAT_VERSION:
+            self._fail(f"shard version {version} is newer than reader {FORMAT_VERSION}")
+        if index_off + n * ENTRY_SIZE > size or payload_off > index_off:
+            self._fail("truncated shard: index region extends past end of file")
+        self.n_samples = n
+        index = np.frombuffer(self._buf, _INDEX_DTYPE, count=n, offset=index_off)
+        self.offsets = index["off"]
+        self.lengths = index["len"]
+        self.crcs = index["crc"]
+        if n and (
+            int(self.offsets.min(initial=payload_off)) < payload_off
+            or int((self.offsets.astype(np.int64) + self.lengths).max()) > index_off
+        ):
+            self._fail("corrupt index: sample extents outside the payload region")
+
+    def _fail(self, msg: str) -> None:
+        path = self.path
+        self.close()
+        raise ShardCorruption(f"{path}: {msg}")
+
+    def __len__(self) -> int:
+        return self.n_samples
+
+    @property
+    def nbytes(self) -> int:
+        return len(self._mm)
+
+    def read(self, i: int, *, verify: bool = True) -> memoryview:
+        """Zero-copy bytes of sample ``i`` (a slice of the shard's mmap)."""
+        if not 0 <= i < self.n_samples:
+            raise IndexError(f"sample {i} out of range [0, {self.n_samples})")
+        off, ln = int(self.offsets[i]), int(self.lengths[i])
+        view = self._buf[off : off + ln]
+        if verify and zlib.crc32(view) != int(self.crcs[i]):
+            raise ShardCorruption(f"{self.path}: sample {i} failed crc32 check")
+        return view
+
+    def close(self) -> None:
+        """Release the mapping.  Best-effort: if sample views are still
+        alive the pages stay mapped until they are dropped (the OS, not us,
+        owns reclamation) — never a dangling pointer, at worst a deferred
+        unmap."""
+        if getattr(self, "_buf", None) is not None:
+            self._buf.release()
+            self._buf = None
+        if getattr(self, "_mm", None) is not None:
+            try:
+                self._mm.close()
+            except BufferError:  # exported sample views keep the mapping alive
+                pass
+            self._mm = None
+        if getattr(self, "_file", None) is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self) -> "ShardReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,299 @@
+"""Async shard prefetch + bounded local shard cache over a remote source.
+
+SPDL's pipeline overlaps network, CPU, and GPU *within* a sample stream;
+this module applies the same overlap at shard granularity for remote or
+high-latency storage: while the decode stages chew on shard *k*, the
+prefetcher is already pulling shards *k+1..k+d* into a local byte-budgeted
+cache, so the read stage almost never blocks on the network.
+
+Pieces:
+
+``RemoteShardSource``      duck-typed backend: ``fetch(name) -> bytes``.
+``LocalShardSource``       trivial backend reading files from a directory
+                           (also the base other sources usually wrap).
+``SimulatedLatencySource`` wraps a source with a per-fetch latency floor +
+                           bandwidth cap — a deterministic stand-in for
+                           object storage in tests and benchmarks.
+``ShardPrefetcher``        the cache + scheduler: LRU-by-bytes local cache
+                           of fetched shard files, fetch dedup (concurrent
+                           requests for one shard share one download), and
+                           a bounded background fetch pool whose in-flight
+                           count is the ``prefetch_depth`` stat.
+
+Eviction contract: evicting a shard unlinks its cache file and drops the
+reader.  In-flight ``memoryview`` reads stay valid — on Linux the mapping
+outlives the unlink and the pages are reclaimed when the last view drops —
+so eviction can never corrupt a sample that is mid-decode.
+
+Stats (``stats()``) feed the pipeline dashboard: ``hits``/``misses`` per
+*reader* request (a prefetched shard counts as a hit — that is the point),
+``evictions``, ``bytes_cached``, ``prefetch_depth``, and cumulative
+``fetch_time`` seconds spent downloading.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+
+from .dataset import MANIFEST_NAME
+from .format import ShardReader
+
+
+class LocalShardSource:
+    """Reads shard files from a local directory (the trivial backend)."""
+
+    def __init__(self, root: str | pathlib.Path):
+        self.root = pathlib.Path(root)
+
+    def fetch(self, name: str) -> bytes:
+        return (self.root / name).read_bytes()
+
+
+class SimulatedLatencySource:
+    """A ``RemoteShardSource`` with object-storage-shaped costs.
+
+    Each fetch pays ``latency_s`` (request round-trip) plus
+    ``nbytes / bandwidth_bps`` (transfer), then returns the inner source's
+    bytes.  ``fetches``/``bytes_fetched`` make tests assert exactly how
+    often the network was touched.
+    """
+
+    def __init__(
+        self,
+        inner,
+        *,
+        latency_s: float = 0.01,
+        bandwidth_bps: float | None = None,
+    ):
+        self.inner = inner
+        self.latency_s = latency_s
+        self.bandwidth_bps = bandwidth_bps
+        self.fetches = 0
+        self.bytes_fetched = 0
+        self._lock = threading.Lock()
+
+    def fetch(self, name: str) -> bytes:
+        data = self.inner.fetch(name)
+        delay = self.latency_s
+        if self.bandwidth_bps:
+            delay += len(data) / self.bandwidth_bps
+        if delay > 0:
+            time.sleep(delay)
+        with self._lock:
+            self.fetches += 1
+            self.bytes_fetched += len(data)
+        return data
+
+
+class ShardPrefetcher:
+    """Bounded local shard cache + background fetch scheduler.
+
+    ``reader(name)`` is the synchronous path the dataset uses: cache hit →
+    mmap reader immediately; miss → fetch (joining an in-flight background
+    fetch if one exists), install, evict LRU shards past ``max_bytes``.
+
+    ``schedule(name)`` is the asynchronous path the loader uses: start a
+    background fetch (up to ``max_inflight`` concurrent) unless the shard is
+    already cached or being fetched.  Scheduling is advisory — dropping a
+    request is always safe because ``reader`` fetches on demand.
+    """
+
+    def __init__(
+        self,
+        source,
+        cache_dir: str | pathlib.Path,
+        *,
+        max_bytes: int = 1 << 30,
+        max_inflight: int = 2,
+    ):
+        if max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1")
+        self.source = source
+        self.cache_dir = pathlib.Path(cache_dir)
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = max_bytes
+        self.max_inflight = max_inflight
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_inflight, thread_name_prefix="shard-prefetch"
+        )
+        self._lock = threading.Lock()
+        # name -> (reader, nbytes); insertion order is the LRU order
+        self._cached: OrderedDict[str, tuple[ShardReader, int]] = OrderedDict()
+        self._inflight: dict[str, Future] = {}
+        self._bg_inflight = 0  # pool fetches only (demand fetches excluded)
+        self._closed = False
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_cached = 0
+        self.fetch_time = 0.0
+
+    # -- manifest -----------------------------------------------------------
+    def fetch_manifest(self) -> bytes:
+        """The dataset manifest comes over the same wire as the shards."""
+        return self.source.fetch(MANIFEST_NAME)
+
+    # -- fetch machinery ----------------------------------------------------
+    def _fetch_to_cache(self, name: str) -> ShardReader:
+        """Download one shard, persist it, open a reader (pool thread)."""
+        t0 = time.monotonic()
+        data = self.source.fetch(name)
+        path = self.cache_dir / name
+        # unique temp per fetch: two racing fetches of one shard must not
+        # share a staging file (the loser's replace() would find it gone)
+        tmp = path.with_suffix(
+            f"{path.suffix}.{threading.get_ident():x}.part"
+        )
+        tmp.write_bytes(data)
+        tmp.replace(path)  # atomic: a reader never sees a torn file
+        reader = ShardReader(path)
+        with self._lock:
+            self.fetch_time += time.monotonic() - t0
+        return reader
+
+    def _install(self, name: str, reader: ShardReader) -> None:
+        """Insert a fetched shard and evict LRU past the byte budget."""
+        evicted: list[str] = []
+        with self._lock:
+            if name in self._cached:
+                reader.close()  # lost an install race: keep the first copy
+                return
+            if self._closed:
+                # Shutdown mid-fetch: don't cache, but leave the reader
+                # open — the demand caller may still be about to use it
+                # (it is reclaimed by refcount once dropped).
+                return
+            self._cached[name] = (reader, reader.nbytes)
+            self.bytes_cached += reader.nbytes
+            while self.bytes_cached > self.max_bytes and len(self._cached) > 1:
+                old_name, (_old_reader, nbytes) = self._cached.popitem(last=False)
+                self.bytes_cached -= nbytes
+                self.evictions += 1
+                evicted.append(old_name)
+        for old_name in evicted:
+            # Unlink the file but do NOT close the reader: a concurrent
+            # ``read_bytes`` may hold it (or views into it) right now.  The
+            # mapping is dropped by refcount once the last holder lets go,
+            # and the disk space returns with it (Linux unlink semantics).
+            # Re-check under the lock first: the shard may have been
+            # re-fetched since we evicted it, in which case the file on
+            # disk is the NEWER copy and belongs to that install (every
+            # path write is covered by _inflight membership until its
+            # install lands in _cached, so this check is race-free).
+            with self._lock:
+                if old_name in self._cached or old_name in self._inflight:
+                    continue
+                (self.cache_dir / old_name).unlink(missing_ok=True)
+
+    def _fetch_and_install(self, name: str) -> ShardReader:
+        try:
+            reader = self._fetch_to_cache(name)
+            self._install(name, reader)
+            with self._lock:
+                installed = self._cached.get(name)
+            # A racing install may have kept a different reader object;
+            # always hand back the cached one so there is one live mapping.
+            return installed[0] if installed is not None else reader
+        finally:
+            with self._lock:
+                self._inflight.pop(name, None)
+                self._bg_inflight -= 1
+
+    def schedule(self, name: str) -> bool:
+        """Start a background fetch of ``name``; False if dropped (cached,
+        already in flight, saturated, or closed).  Saturation counts only
+        *background* fetches: a demand fetch runs on its caller's thread,
+        so it must not consume a prefetch slot — otherwise a cold-miss
+        stall would starve exactly the lookahead meant to prevent the next
+        one."""
+        with self._lock:
+            if (
+                self._closed
+                or name in self._cached
+                or name in self._inflight
+                or self._bg_inflight >= self.max_inflight
+            ):
+                return False
+            self._bg_inflight += 1
+            fut = self._pool.submit(self._fetch_and_install, name)
+            self._inflight[name] = fut
+        return True
+
+    def reader(self, name: str) -> ShardReader:
+        """Blocking get: the mmap reader for ``name``, fetching on miss.
+
+        Concurrent requests for one shard share a single download: the
+        first requester (or an earlier ``schedule``) owns the fetch, later
+        ones join its future.
+        """
+        my_fut: Future | None = None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ShardPrefetcher is closed")
+            entry = self._cached.get(name)
+            if entry is not None:
+                self._cached.move_to_end(name)  # refresh LRU position
+                self.hits += 1
+                return entry[0]
+            self.misses += 1
+            fut = self._inflight.get(name)
+            if fut is None:
+                my_fut = self._inflight[name] = Future()
+        if my_fut is None:
+            return fut.result()  # join the in-flight fetch
+        try:
+            reader = self._fetch_to_cache(name)
+            self._install(name, reader)
+            with self._lock:
+                installed = self._cached.get(name)
+            result = installed[0] if installed is not None else reader
+            my_fut.set_result(result)
+            return result
+        except BaseException as e:
+            my_fut.set_exception(e)
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(name, None)
+
+    # -- visibility / lifecycle --------------------------------------------
+    @property
+    def prefetch_depth(self) -> int:
+        """In-flight *background* fetches (demand fetches excluded — they
+        run on their caller's thread, not the prefetch pool)."""
+        with self._lock:
+            return self._bg_inflight
+
+    def stats(self) -> dict[str, float]:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_cached": self.bytes_cached,
+                "max_bytes": self.max_bytes,
+                "prefetch_depth": self._bg_inflight,
+                "fetch_time": self.fetch_time,
+            }
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        # Queued-but-unstarted background fetches are cancelled by the pool
+        # shutdown; running ones finish (their install no-ops once closed).
+        # Demand-fetch futures in ``_inflight`` are hand-made and owned by
+        # the fetching thread — cancelling them here would make that
+        # thread's set_result() blow up with InvalidStateError, so they are
+        # left to complete on their own.
+        self._pool.shutdown(wait=True, cancel_futures=True)
+        with self._lock:
+            for reader, _ in self._cached.values():
+                reader.close()
+            self._cached.clear()
+            self.bytes_cached = 0
