@@ -1,6 +1,8 @@
-"""Sharded record store: per-file vs packed-shard read throughput, and the
+"""Sharded record store: per-file vs packed-shard read throughput, the
 remote path cold (empty local cache, simulated object-store latency) vs
-warm (every shard cache-resident).
+warm (every shard cache-resident), and the **real HTTP backend** — cold
+whole-shard fetch vs index-first ranged fetch vs warm cache — against a
+local ``http.server`` fixture.
 
 Measured on ``read_bytes`` only — storage is the variable here, decode is
 bench_zero_copy's job:
@@ -11,11 +13,19 @@ bench_zero_copy's job:
   crc pass) per sample — also reported with crc verification off;
 - ``remote_cold`` / ``remote_warm``: ``ShardDataset`` fronted by a
   ``ShardPrefetcher`` over a ``SimulatedLatencySource`` — first epoch pays
-  the fetches, second epoch is all cache hits.
+  the fetches, second epoch is all cache hits;
+- ``http_whole`` / ``http_index_first`` / ``http_warm``: real
+  ``HttpShardSource`` (range reads, keep-alive) through ``RetryingSource``
+  — a sampler window touching only a quarter of each shard's samples, so
+  index-first fetch (header + index + just the hinted ranges) must move
+  strictly fewer wire bytes than committing to whole shards; the warm pass
+  re-reads the cache and should land within ~10% of plain local shard
+  reads.
 
-Results persist to ``BENCH_shards.json`` at the repo root; the acceptance
-gate is ``speedup_cold >= 2`` (packed shards at least 2x the per-file
-items/s on the cold pass).
+Results persist to ``BENCH_shards.json`` at the repo root; gates:
+``speedup_cold >= 2`` (packed shards at least 2x per-file items/s cold),
+``http_index_first_bytes < http_whole_bytes`` (strict), and
+``http_warm_vs_local`` ≈ 1 (±10%).
 """
 
 from __future__ import annotations
@@ -29,13 +39,16 @@ import time
 import numpy as np
 
 from repro.data import (
+    HttpShardSource,
     LocalShardSource,
+    RetryingSource,
     ShardDataset,
     ShardPrefetcher,
     SimulatedLatencySource,
     SyntheticImageDataset,
     pack,
 )
+from repro.data.shards.testing import serve_shards
 
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_shards.json"
 
@@ -56,6 +69,101 @@ def _read_throughput(ds, order: np.ndarray) -> dict:
         "mb_per_sec": n_bytes / dt / 2**20,
         "items": len(order),
     }
+
+
+def _http_section(shards_dir: pathlib.Path, cache_root: pathlib.Path) -> dict:
+    """Real HTTP backend: whole-shard vs index-first wire bytes for a
+    sampler window touching the first quarter of each shard, plus the warm
+    pass vs plain local shard reads."""
+    local_ds = ShardDataset(shards_dir)
+    # the "sampler window": first quarter of every shard (subset reads are
+    # where index-first fetch earns its keep)
+    subset: list[int] = []
+    hints: list[tuple[str, list[int]]] = []
+    start = 0
+    for name, size in zip(local_ds.shard_names, local_ds.shard_sizes):
+        quarter = max(1, size // 4)
+        subset.extend(range(start, start + quarter))
+        hints.append((name, list(range(quarter))))
+        start += size
+    order = np.array(subset)
+
+    results: dict = {}
+    with serve_shards(shards_dir) as srv:
+        # schedule bursts cover every shard at once here (the loaders'
+        # lookahead would spread them out), so size the fetch pool to match
+        inflight = max(2, local_ds.num_shards)
+        # -- cold, whole-shard fetch (no ranged reads used) ------------------
+        src_whole = RetryingSource(HttpShardSource(srv.url))
+        pf_whole = ShardPrefetcher(
+            src_whole,
+            cache_root / "whole",
+            max_bytes=1 << 32,
+            index_first=False,
+            max_inflight=inflight,
+        )
+        ds_whole = ShardDataset(shards_dir, prefetcher=pf_whole)
+        for name, _ in hints:
+            pf_whole.schedule(name)
+        cold_whole = _read_throughput(ds_whole, order)
+        whole_stats = pf_whole.stats()
+
+        # -- warm: every touched shard cache-resident ------------------------
+        # (the cold pass above warmed the cache's pages; give the local
+        # baseline the same first-touch warm-up, then interleave best-of-3
+        # so the warm-vs-local ratio survives this-box scheduling noise —
+        # the comparison is mmap-vs-mmap, not page-cache-vs-page-faults)
+        _read_throughput(local_ds, order)
+        warm, local = None, None
+        for _ in range(3):
+            w = _read_throughput(ds_whole, order)
+            l = _read_throughput(local_ds, order)
+            if warm is None or w["items_per_sec"] > warm["items_per_sec"]:
+                warm = w
+            if local is None or l["items_per_sec"] > local["items_per_sec"]:
+                local = l
+        ds_whole.close()
+
+        # -- cold, index-first fetch (header + index + hinted ranges) --------
+        src_idx = RetryingSource(HttpShardSource(srv.url))
+        pf_idx = ShardPrefetcher(
+            src_idx,
+            cache_root / "idx",
+            max_bytes=1 << 32,
+            index_first=True,
+            max_inflight=inflight,
+        )
+        ds_idx = ShardDataset(shards_dir, prefetcher=pf_idx)
+        for name, locals_ in hints:
+            pf_idx.schedule(name, samples=locals_)
+        cold_idx = _read_throughput(ds_idx, order)
+        idx_stats = pf_idx.stats()
+        ds_idx.close()
+
+        results = {
+            "http_whole": {**cold_whole, "bytes_fetched": whole_stats["bytes_fetched"]},
+            "http_index_first": {
+                **cold_idx,
+                "bytes_fetched": idx_stats["bytes_fetched"],
+                "index_fetches": idx_stats["index_fetches"],
+                "range_fetches": idx_stats["range_fetches"],
+                "sparse_shards": idx_stats["sparse_shards"],
+            },
+            "http_warm": warm,
+            "local_subset": local,
+            "http_index_first_saves_bytes": bool(
+                idx_stats["bytes_fetched"] < whole_stats["bytes_fetched"]
+            ),
+            "http_bytes_ratio": idx_stats["bytes_fetched"]
+            / max(whole_stats["bytes_fetched"], 1),
+            "http_warm_vs_local": warm["items_per_sec"]
+            / max(local["items_per_sec"], 1e-9),
+            "server_requests": srv.requests,
+            "server_bytes": srv.bytes_served,
+        }
+    local_ds.close()
+    shutil.rmtree(cache_root, ignore_errors=True)
+    return results
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
@@ -93,6 +201,8 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         remote_ds.close()
         shutil.rmtree(d / "cache", ignore_errors=True)
 
+        http = _http_section(d / "shards", d / "http_caches")
+
     speedup_cold = shard["items_per_sec"] / max(per_file["items_per_sec"], 1e-9)
     warm_speedup = remote_warm["items_per_sec"] / max(
         remote_cold["items_per_sec"], 1e-9
@@ -117,6 +227,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         },
         "speedup_cold": speedup_cold,
         "remote_warm_over_cold": warm_speedup,
+        **http,
     }
     if not smoke:  # persist only full runs; smoke numbers are noise
         OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
@@ -128,6 +239,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         ("shard_mmap_nocrc", shard_nocrc),
         ("remote_cold", remote_cold),
         ("remote_warm", remote_warm),
+        ("http_whole", http["http_whole"]),
+        ("http_index_first", http["http_index_first"]),
+        ("http_warm", http["http_warm"]),
     ):
         rows.append(
             (
@@ -139,6 +253,21 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows.append(("shards_speedup_cold", 0.0, f"x{speedup_cold:.2f}_shard_vs_per_file"))
     rows.append(
         ("shards_warm_cache", 0.0, f"x{warm_speedup:.2f}_warm_vs_cold_remote")
+    )
+    rows.append(
+        (
+            "shards_http_index_first_bytes",
+            0.0,
+            f"x{http['http_bytes_ratio']:.2f}_of_whole_shard_wire_bytes"
+            f"_{'SAVES' if http['http_index_first_saves_bytes'] else 'NO_SAVING'}",
+        )
+    )
+    rows.append(
+        (
+            "shards_http_warm_vs_local",
+            0.0,
+            f"x{http['http_warm_vs_local']:.2f}_warm_cache_vs_local_mmap",
+        )
     )
     return rows
 

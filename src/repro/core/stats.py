@@ -90,6 +90,9 @@ class StageStats:
             cache_evictions=int(cache.get("evictions", 0)),
             bytes_cached=int(cache.get("bytes_cached", 0)),
             prefetch_depth=int(cache.get("prefetch_depth", 0)),
+            bytes_fetched=int(cache.get("bytes_fetched", 0)),
+            source_errors=int(cache.get("source_errors", 0)),
+            source_retries=int(cache.get("source_retries", 0)),
         )
 
 
@@ -116,6 +119,11 @@ class StageStatsSnapshot:
     cache_evictions: int = 0
     bytes_cached: int = 0
     prefetch_depth: int = 0
+    # remote-source visibility: wire bytes downloaded, and the retry/error
+    # counters a RetryingSource-wrapped backend reports (0 for local/simulated)
+    bytes_fetched: int = 0
+    source_errors: int = 0
+    source_retries: int = 0
 
 
 def format_stats(snaps: list[StageStatsSnapshot]) -> str:
@@ -146,12 +154,17 @@ def format_stats(snaps: list[StageStatsSnapshot]) -> str:
         if s.cache_hits or s.cache_misses or s.prefetch_depth:
             total = s.cache_hits + s.cache_misses
             rate = s.cache_hits / total if total else 0.0
-            lines.append(
+            line = (
                 f"[{s.name}] shard-cache: hits={s.cache_hits} misses={s.cache_misses}"
                 f" ({rate * 100:.0f}% hit) evictions={s.cache_evictions}"
                 f" cached={s.bytes_cached / 2**20:.1f}MB"
                 f" prefetch_depth={s.prefetch_depth}"
             )
+            if s.bytes_fetched:
+                line += f" fetched={s.bytes_fetched / 2**20:.1f}MB"
+            if s.source_errors or s.source_retries:
+                line += f" src_errors={s.source_errors} src_retries={s.source_retries}"
+            lines.append(line)
     return "\n".join(lines)
 
 

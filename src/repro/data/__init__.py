@@ -4,13 +4,16 @@ from .dataset import ArrayDataset, SyntheticImageDataset, SyntheticTokenDataset
 from .loader import build_image_loader, build_lm_loader
 from .sampler import CheckpointableSampler
 from .shards import (
+    HttpShardSource,
     LocalShardSource,
+    RetryingSource,
     ShardCorruption,
     ShardDataset,
     ShardPrefetcher,
     ShardReader,
     ShardWriter,
     SimulatedLatencySource,
+    SourceUnavailable,
     pack,
 )
 from .tokenizer import ByteTokenizer
@@ -28,12 +31,15 @@ __all__ = [
     "ByteTokenizer",
     "build_image_loader",
     "build_lm_loader",
+    "HttpShardSource",
     "LocalShardSource",
+    "RetryingSource",
     "ShardCorruption",
     "ShardDataset",
     "ShardPrefetcher",
     "ShardReader",
     "ShardWriter",
     "SimulatedLatencySource",
+    "SourceUnavailable",
     "pack",
 ]

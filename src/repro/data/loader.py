@@ -123,21 +123,51 @@ def _with_shard_prefetch(
     local cache.  Scheduling is advisory — a dropped request just means the
     read stage fetches on demand.
 
+    Index-first sources (``prefetcher.index_first``): instead of scheduling
+    a whole-shard fetch on first sight, the wrapper accumulates the *run*
+    of consecutive same-shard indices the sampler emits (the shard-aware
+    shuffle makes runs the common case) and schedules the shard with those
+    shard-local indices as ``samples=`` hints — the prefetcher then pulls
+    the shard's header + index and fetches only the hinted sample ranges
+    when they cover a small fraction of the payload.  A run that grows past
+    ``lookahead`` clearly wants most of the shard, so it is committed early
+    as a whole-shard fetch.
+
     The buffered indices have already advanced the sampler's cursor, so a
     checkpoint taken mid-stream treats them as consumed: resume skips at
     most ``lookahead`` samples beyond the sink-buffered batches (see the
     module docstring's checkpoint caveat)."""
     pf = dataset.prefetcher
+    want_hints = bool(getattr(pf, "index_first", False))
     buf: deque[int] = deque()
-    last_shard = -1
+    run_shard = -1
+    run_samples: list[int] | None = []  # None = run already committed full
+
+    def commit_run() -> None:
+        if run_shard >= 0 and run_samples:
+            pf.schedule(dataset.shard_names[run_shard], samples=run_samples)
+
     for i in indices:
-        shard = dataset.shard_of(i)
-        if shard != last_shard:  # dedup bursts; pf.schedule also dedups
-            pf.schedule(dataset.shard_names[shard])
-            last_shard = shard
+        shard, local = dataset.shard_and_offset(i)
+        if shard != run_shard:  # run boundary; pf.schedule also dedups
+            commit_run()
+            run_shard, run_samples = shard, []
+            if not want_hints:
+                # no ranged reads available: schedule the whole shard as
+                # early as possible (maximum fetch/decode overlap)
+                pf.schedule(dataset.shard_names[shard])
+                run_samples = None
+        if want_hints and run_samples is not None:
+            run_samples.append(local)
+            if len(run_samples) >= lookahead:
+                # the window wants most of this shard: commit to a full
+                # fetch now rather than waiting for the run to end
+                pf.schedule(dataset.shard_names[shard])
+                run_samples = None
         buf.append(i)
         if len(buf) > lookahead:
             yield buf.popleft()
+    commit_run()
     yield from buf
 
 

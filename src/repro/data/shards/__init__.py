@@ -35,32 +35,82 @@ and verified on every read by default; a mismatch raises
 per-sample hole under the pipeline's ``OnError.SKIP`` instead of a dead
 shard or a silently wrong batch.
 
+Remote source protocol
+----------------------
+The prefetcher talks to storage through a duck type:
+
+``fetch(name) -> bytes``
+    Download one whole object (shard or manifest).  Required.
+
+``fetch_range(name, start, length) -> bytes``
+    Download exactly ``length`` bytes at offset ``start``.  **Optional**;
+    providing it unlocks *index-first fetch*: the prefetcher pulls the
+    32-byte header + 16 B/sample index region first (``ShardIndex``),
+    decides — from the sampler window's hints and the byte budget —
+    whether the payload is worth committing to, and can serve reads from a
+    sparse, partially-fetched shard (``SparseShardReader``), demand-
+    fetching individual sample ranges as needed.  Sources advertise range
+    support simply by having the method (wrappers like ``RetryingSource``
+    forward it iff their inner source has it).
+
+Error contract: ``FileNotFoundError`` = object does not exist (permanent);
+``sources.SourceUnavailable`` (an ``OSError``) = transient, retryable.
+
+Backends: ``LocalShardSource`` (directory), ``SimulatedLatencySource``
+(deterministic object-storage stand-in), ``HttpShardSource`` (real HTTP(S)
+with ``Range`` reads + connection reuse), ``RetryingSource`` (capped
+exponential backoff + jitter around any of the above); S3/GCS and
+peer-to-peer shard exchange are the next targets behind the same duck
+type.
+
 Public surface
 --------------
-``ShardWriter`` / ``ShardReader``  one-file pack/read (``format.py``);
+``ShardWriter`` / ``ShardReader``  one-file pack/read (``format.py``;
+                                   ``ShardIndex`` for index-only parses);
 ``ShardDataset`` / ``pack``        multi-shard dataset + migration tool
-                                   (``dataset.py``);
+                                   (``dataset.py``; an ``http(s)://`` root
+                                   builds the remote stack automatically);
 ``ShardPrefetcher`` + sources      async fetch, LRU-by-bytes local cache,
-                                   simulated-latency remote for tests
-                                   (``prefetch.py``).
+                                   index-first sparse fetch
+                                   (``prefetch.py``, ``sources.py``);
+``testing.serve_shards``           stdlib HTTP fixture with Range support
+                                   for tests/benchmarks.
 
 ``python -m repro.data.shards SRC DST`` packs an ``ArrayDataset``
 directory from the command line.
 """
 
-from .dataset import MANIFEST_NAME, ShardDataset, pack, write_manifest
-from .format import ShardCorruption, ShardReader, ShardWriter
-from .prefetch import LocalShardSource, ShardPrefetcher, SimulatedLatencySource
+from .dataset import (
+    MANIFEST_NAME,
+    ShardDataset,
+    pack,
+    validate_shard_name,
+    write_manifest,
+)
+from .format import ShardCorruption, ShardIndex, ShardReader, ShardWriter
+from .prefetch import (
+    LocalShardSource,
+    ShardPrefetcher,
+    SimulatedLatencySource,
+    SparseShardReader,
+)
+from .sources import HttpShardSource, RetryingSource, SourceUnavailable
 
 __all__ = [
     "MANIFEST_NAME",
+    "HttpShardSource",
     "LocalShardSource",
+    "RetryingSource",
     "ShardCorruption",
     "ShardDataset",
+    "ShardIndex",
     "ShardPrefetcher",
     "ShardReader",
     "ShardWriter",
     "SimulatedLatencySource",
+    "SourceUnavailable",
+    "SparseShardReader",
     "pack",
+    "validate_shard_name",
     "write_manifest",
 ]

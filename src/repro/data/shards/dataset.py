@@ -28,7 +28,14 @@ Two access modes:
 * remote: pass a ``ShardPrefetcher`` (``prefetch.py``) and shards are
   fetched through its bounded local cache — ``read_bytes`` blocks only on a
   cache miss, and loaders overlap upcoming fetches with decode via
-  ``prefetcher.schedule``.
+  ``prefetcher.schedule``.  Passing an ``http(s)://`` URL as ``root`` is
+  shorthand for the standard remote stack: ``HttpShardSource`` (range
+  reads, connection reuse) wrapped in ``RetryingSource`` (backoff +
+  jitter) behind a ``ShardPrefetcher`` at ``cache_dir``.
+
+Shard names from the manifest are validated (``validate_shard_name``) to a
+single bare path component before any cache path is built from them — the
+manifest is remote-controlled data in remote mode.
 
 ``pack(dataset, out_dir)`` converts anything with ``read_bytes``/``len`` —
 an ``ArrayDataset`` directory in particular — into this layout.
@@ -48,6 +55,34 @@ from .format import ShardReader, ShardWriter
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_VERSION = 1
+
+
+def validate_shard_name(name: str) -> str:
+    """Reject shard names that are not a bare, single path component.
+
+    Manifest contents are *remote-controlled data* in remote mode, and the
+    prefetcher joins shard names onto a local cache directory — a hostile
+    or corrupted manifest containing ``../`` (or an absolute path, or a
+    name that hides inside a subdirectory) must never escape it.  Applied
+    at manifest parse AND at every cache entry point (defense in depth).
+    """
+    if (
+        not isinstance(name, str)
+        or not name
+        or name != name.strip()
+        or name in (".", "..")
+        or any(c in name for c in ("/", "\\", "\0"))
+        or name.startswith("~")
+    ):
+        raise ValueError(
+            f"unsafe shard name {name!r}: must be a bare file name "
+            "(single path component, no separators)"
+        )
+    return name
+
+
+def _is_url(root) -> bool:
+    return isinstance(root, str) and root.startswith(("http://", "https://"))
 
 
 def write_manifest(
@@ -72,31 +107,75 @@ class ShardDataset:
         *,
         prefetcher: Any | None = None,
         verify_crc: bool = True,
+        cache_dir: str | pathlib.Path | None = None,
+        cache_bytes: int = 1 << 30,
+        http_timeout: float = 30.0,
+        retries: int = 4,
     ):
-        self.root = pathlib.Path(root)
+        self._auto_cache_dir: pathlib.Path | None = None
+        owns_prefetcher = False
+        if prefetcher is None and _is_url(root):
+            # remote mode from a bare URL: build the standard source stack —
+            # real HTTP range reads behind retry/backoff behind the cache
+            # (imports are local: prefetch.py imports this module)
+            import tempfile
+
+            from .prefetch import ShardPrefetcher
+            from .sources import HttpShardSource, RetryingSource
+
+            if cache_dir is None:
+                cache_dir = tempfile.mkdtemp(prefix="repro-shard-cache-")
+                self._auto_cache_dir = pathlib.Path(cache_dir)
+            prefetcher = ShardPrefetcher(
+                RetryingSource(
+                    HttpShardSource(root, timeout=http_timeout),
+                    max_retries=retries,
+                ),
+                cache_dir,
+                max_bytes=cache_bytes,
+            )
+            owns_prefetcher = True
+        self.root = root if _is_url(root) else pathlib.Path(root)
         self.prefetcher = prefetcher
         self.verify_crc = verify_crc
-        manifest_path = self.root / MANIFEST_NAME
-        if prefetcher is not None:
-            manifest = json.loads(prefetcher.fetch_manifest())
-        else:
-            if not manifest_path.is_file():
-                raise FileNotFoundError(
-                    f"no shard manifest at {manifest_path} — run "
-                    "repro.data.shards.pack() (or python -m repro.data.shards) first"
+        try:
+            if prefetcher is not None:
+                manifest = json.loads(prefetcher.fetch_manifest())
+            else:
+                manifest_path = self.root / MANIFEST_NAME
+                if not manifest_path.is_file():
+                    raise FileNotFoundError(
+                        f"no shard manifest at {manifest_path} — run "
+                        "repro.data.shards.pack() (or python -m repro.data.shards) first"
+                    )
+                manifest = json.loads(manifest_path.read_text())
+            if manifest.get("version", 0) > MANIFEST_VERSION:
+                raise ValueError(
+                    f"manifest version {manifest['version']} is newer than this reader"
                 )
-            manifest = json.loads(manifest_path.read_text())
-        if manifest.get("version", 0) > MANIFEST_VERSION:
-            raise ValueError(
-                f"manifest version {manifest['version']} is newer than this reader"
-            )
-        self.manifest = manifest
-        self.shard_names: list[str] = [s["name"] for s in manifest["shards"]]
+            self.manifest = manifest
+            self.shard_names: list[str] = [
+                validate_shard_name(s["name"]) for s in manifest["shards"]
+            ]
+        except BaseException:
+            # a stack built here must not leak its thread pool, sockets, or
+            # temp cache dir when the manifest turns out to be bad
+            if owns_prefetcher:
+                prefetcher.close()
+                self._cleanup_auto_cache()
+            raise
         self.shard_sizes: list[int] = [int(s["n"]) for s in manifest["shards"]]
         self._cum = np.cumsum([0] + self.shard_sizes)
         self._n = int(self._cum[-1])
         self._readers: dict[int, ShardReader] = {}  # local mode, lazily opened
         self._readers_lock = threading.Lock()
+
+    def _cleanup_auto_cache(self) -> None:
+        if self._auto_cache_dir is not None:
+            import shutil
+
+            shutil.rmtree(self._auto_cache_dir, ignore_errors=True)
+            self._auto_cache_dir = None
 
     # -- topology (consumed by the shard-aware sampler / prefetch wiring) ---
     @property
@@ -108,6 +187,12 @@ class ShardDataset:
         if not 0 <= i < self._n:
             raise IndexError(f"sample {i} out of range [0, {self._n})")
         return int(np.searchsorted(self._cum, i, side="right")) - 1
+
+    def shard_and_offset(self, i: int) -> tuple[int, int]:
+        """(shard index, shard-local sample index) of global sample ``i`` —
+        the shard-local half is what index-first prefetch hints carry."""
+        shard = self.shard_of(i)
+        return shard, i - int(self._cum[shard])
 
     @property
     def sample_meta(self) -> tuple[np.dtype, tuple[int, ...]] | None:
@@ -154,6 +239,9 @@ class ShardDataset:
         self._readers.clear()
         if self.prefetcher is not None:
             self.prefetcher.close()
+        # a cache dir we mkdtemp'd is ours to remove — leaving it would
+        # leak up to cache_bytes of downloaded shards per dataset
+        self._cleanup_auto_cache()
 
     # -- pickling (multiprocessing baselines fork/spawn the dataset) --------
     def __getstate__(self) -> dict:
@@ -232,10 +320,10 @@ def pack(
                 roll()
         roll()
     except BaseException:
-        # failed migration: close and remove the in-progress (unfinalized,
-        # zero-header) shard so a retry doesn't find a stray invalid file
+        # failed migration: abort (never finalize a partial shard) and
+        # remove the zero-header file so a retry doesn't find a stray
         if writer is not None:
-            writer.close()
+            writer.abort()
             writer.path.unlink(missing_ok=True)
         raise
     write_manifest(out_dir, shards, {"sample0": sample0} if sample0 else None)

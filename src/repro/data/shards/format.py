@@ -45,6 +45,7 @@ still in flight).
 from __future__ import annotations
 
 import mmap
+import os
 import pathlib
 import struct
 import zlib
@@ -64,6 +65,90 @@ class ShardCorruption(ValueError):
     """A shard (or one sample inside it) failed an integrity check."""
 
 
+def parse_shard_header(header: bytes, name: str = "shard") -> tuple[int, int, int, int]:
+    """Validate a 32-byte header blob; returns
+    ``(version, n_samples, index_offset, payload_offset)``.
+
+    This is the first step of index-first fetch: a 32-byte ranged read
+    through here tells a remote reader where the index region lives (and
+    rejects unfinalized / foreign files) before any payload moves."""
+    if len(header) < HEADER_SIZE:
+        raise ShardCorruption(
+            f"{name}: header blob is {len(header)} bytes, need {HEADER_SIZE}"
+        )
+    magic, version, n, index_off, payload_off = _HEADER.unpack_from(header, 0)
+    if magic != MAGIC:
+        raise ShardCorruption(
+            f"{name}: bad magic {bytes(magic)!r} (unfinalized or foreign file)"
+        )
+    if version > FORMAT_VERSION:
+        raise ShardCorruption(
+            f"{name}: shard version {version} is newer than reader {FORMAT_VERSION}"
+        )
+    return version, n, index_off, payload_off
+
+
+class ShardIndex:
+    """A shard's parsed header + index, held without its payload.
+
+    This is what **index-first fetch** downloads: the fixed 32-byte header
+    (which says where the index lives) and the 16-byte-per-sample index
+    region — enough to know every sample's offset, length, and crc32, and
+    therefore to fetch any subset of the payload with ranged reads instead
+    of committing to the whole shard.
+    """
+
+    __slots__ = ("n_samples", "payload_off", "index_off", "offsets", "lengths", "crcs")
+
+    def __init__(self, n_samples, payload_off, index_off, offsets, lengths, crcs):
+        self.n_samples = n_samples
+        self.payload_off = payload_off
+        self.index_off = index_off
+        self.offsets = offsets
+        self.lengths = lengths
+        self.crcs = crcs
+
+    @property
+    def total_bytes(self) -> int:
+        """Size of the full shard file (header + payload + index)."""
+        return self.index_off + self.n_samples * ENTRY_SIZE
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.index_off - self.payload_off
+
+    @property
+    def index_nbytes(self) -> int:
+        """Bytes a reader must download to learn the index (header + index)."""
+        return HEADER_SIZE + self.n_samples * ENTRY_SIZE
+
+    @classmethod
+    def parse(cls, header: bytes, index: bytes, name: str = "shard") -> "ShardIndex":
+        """Validate + parse a header blob and its index-region blob.
+
+        Applies the same checks as ``ShardReader.__init__`` (magic, version,
+        extents) so a remote shard with a zero placeholder header — a
+        crashed writer — is rejected here, before any payload is fetched.
+        """
+        version, n, index_off, payload_off = parse_shard_header(header, name)
+        if payload_off > index_off:
+            raise ShardCorruption(f"{name}: payload region starts past the index")
+        if len(index) != n * ENTRY_SIZE:
+            raise ShardCorruption(
+                f"{name}: index region is {len(index)} bytes, expected {n * ENTRY_SIZE}"
+            )
+        parsed = np.frombuffer(index, _INDEX_DTYPE, count=n)
+        offsets, lengths, crcs = parsed["off"], parsed["len"], parsed["crc"]
+        if n and (
+            int(offsets.min(initial=payload_off)) < payload_off
+            or int((offsets.astype(np.int64) + lengths).max()) > index_off
+        ):
+            raise ShardCorruption(
+                f"{name}: corrupt index: sample extents outside the payload region"
+            )
+        return cls(n, payload_off, index_off, offsets, lengths, crcs)
+
+
 class ShardWriter:
     """Streams samples into one shard file; finalizes index + header on close.
 
@@ -76,7 +161,12 @@ class ShardWriter:
     ``add`` returns the sample's position within the shard.  The file is not
     a valid shard until ``close()`` (the header is a zero placeholder while
     streaming), so a crashed writer leaves an obviously-invalid file rather
-    than a silently short one.
+    than a silently short one.  That guarantee extends to exceptions raised
+    inside the ``with`` body: ``__exit__`` then calls ``abort()`` — close
+    without finalizing — instead of stamping a valid-looking header over a
+    partial payload.  ``close()`` fsyncs the payload + index before the
+    header write that validates them, so a crash between the two can't
+    leave a magic-valid file whose contents never reached the disk.
     """
 
     def __init__(self, path: str | pathlib.Path):
@@ -111,19 +201,44 @@ class ShardWriter:
         index_off = self._f.tell()
         for entry in self._entries:
             self._f.write(_ENTRY.pack(*entry))
+        # payload + index must be durable BEFORE the header makes the file
+        # claim to be a valid shard — otherwise a crash between the two
+        # writes leaves a magic-valid header over unsynced (possibly lost)
+        # contents, defeating the zero-placeholder scheme.
+        self._f.flush()
+        os.fsync(self._f.fileno())
         self._f.seek(0)
         self._f.write(
             _HEADER.pack(
                 MAGIC, FORMAT_VERSION, len(self._entries), index_off, HEADER_SIZE
             )
         )
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+
+    def abort(self) -> None:
+        """Abandon the shard: close the file WITHOUT finalizing it.
+
+        The zero placeholder header stays, so readers reject the file —
+        this is the path for an exception mid-stream (``__exit__`` takes it
+        automatically).  Idempotent; a no-op after ``close()``.
+        """
+        if self._closed:
+            return
+        self._closed = True
         self._f.close()
 
     def __enter__(self) -> "ShardWriter":
         return self
 
-    def __exit__(self, *exc) -> None:
-        self.close()
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # an exception inside the `with` body means the stream is partial:
+        # finalizing would stamp a valid header over bad data — abort instead
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.close()
 
 
 class ShardReader:

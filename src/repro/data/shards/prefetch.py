@@ -8,39 +8,77 @@ cache, so the read stage almost never blocks on the network.
 
 Pieces:
 
-``RemoteShardSource``      duck-typed backend: ``fetch(name) -> bytes``.
+``RemoteShardSource``      duck-typed backend: ``fetch(name) -> bytes``
+                           plus optional ``fetch_range(name, start, length)``
+                           (see ``sources.py`` for the real HTTP backend and
+                           the retry/backoff wrapper).
 ``LocalShardSource``       trivial backend reading files from a directory
                            (also the base other sources usually wrap).
 ``SimulatedLatencySource`` wraps a source with a per-fetch latency floor +
                            bandwidth cap — a deterministic stand-in for
                            object storage in tests and benchmarks.
+``SparseShardReader``      ``ShardReader``-compatible reads over a shard
+                           whose index was fetched but whose payload is
+                           only partially resident (index-first fetch).
 ``ShardPrefetcher``        the cache + scheduler: LRU-by-bytes local cache
                            of fetched shard files, fetch dedup (concurrent
                            requests for one shard share one download), and
                            a bounded background fetch pool whose in-flight
                            count is the ``prefetch_depth`` stat.
 
-Eviction contract: evicting a shard unlinks its cache file and drops the
-reader.  In-flight ``memoryview`` reads stay valid — on Linux the mapping
-outlives the unlink and the pages are reclaimed when the last view drops —
-so eviction can never corrupt a sample that is mid-decode.
+Index-first fetch
+-----------------
+When the source supports ``fetch_range`` (``index_first="auto"``), a
+scheduled fetch that carries sample hints (``schedule(name, samples=...)``,
+fed by the loaders' lookahead window) downloads the shard's 32-byte header
++ index region first and *decides* before committing to the payload: if the
+hinted samples cover less than ``sparse_threshold`` of the payload bytes,
+only their (coalesced) ranges are fetched and the cache entry is a
+``SparseShardReader`` — ``bytes_cached`` counts just the resident bytes,
+and a read of an un-fetched sample demand-fetches exactly that range.
+Otherwise (or with no hints) the whole shard is fetched to disk as before.
+
+Security: shard names come from a *remote-controlled* manifest and are
+joined to a local cache directory, so every entry point validates them as
+a single path component (``validate_shard_name``) — a hostile manifest
+containing ``../`` must not escape the cache.
+
+Eviction contract: evicting a shard unlinks its cache file (or drops the
+sparse entry's buffers) and drops the reader.  In-flight ``memoryview``
+reads stay valid — on Linux the mapping outlives the unlink and the pages
+are reclaimed when the last view drops; sparse spans are plain refcounted
+``bytes`` — so eviction can never corrupt a sample that is mid-decode.
 
 Stats (``stats()``) feed the pipeline dashboard: ``hits``/``misses`` per
 *reader* request (a prefetched shard counts as a hit — that is the point),
-``evictions``, ``bytes_cached``, ``prefetch_depth``, and cumulative
-``fetch_time`` seconds spent downloading.
+``evictions``, ``bytes_cached``, ``prefetch_depth``, cumulative
+``fetch_time`` seconds downloading, wire-level ``bytes_fetched`` /
+``index_fetches`` / ``range_fetches``, and — when the source exposes its
+own ``stats()`` (e.g. ``RetryingSource``) — every source counter prefixed
+``source_`` (``source_errors``, ``source_retries``, ...).
 """
 
 from __future__ import annotations
 
+import bisect
+import functools
+import os
 import pathlib
 import threading
 import time
+import zlib
 from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 
-from .dataset import MANIFEST_NAME
-from .format import ShardReader
+from .dataset import MANIFEST_NAME, validate_shard_name
+from .format import (
+    ENTRY_SIZE,
+    HEADER_SIZE,
+    ShardCorruption,
+    ShardIndex,
+    ShardReader,
+    parse_shard_header,
+)
 
 
 class LocalShardSource:
@@ -52,6 +90,11 @@ class LocalShardSource:
     def fetch(self, name: str) -> bytes:
         return (self.root / name).read_bytes()
 
+    def fetch_range(self, name: str, start: int, length: int) -> bytes:
+        with open(self.root / name, "rb") as f:
+            f.seek(start)
+            return f.read(length)
+
 
 class SimulatedLatencySource:
     """A ``RemoteShardSource`` with object-storage-shaped costs.
@@ -60,6 +103,12 @@ class SimulatedLatencySource:
     ``nbytes / bandwidth_bps`` (transfer), then returns the inner source's
     bytes.  ``fetches``/``bytes_fetched`` make tests assert exactly how
     often the network was touched.
+
+    ``ranges=True`` additionally exposes ``fetch_range`` (passing through
+    to the inner source, paying the same per-request latency) so the
+    index-first path can be exercised without a real server; the default
+    stays range-less so whole-shard fetch counts in existing tests and
+    benchmarks are unchanged.
     """
 
     def __init__(
@@ -68,38 +117,230 @@ class SimulatedLatencySource:
         *,
         latency_s: float = 0.01,
         bandwidth_bps: float | None = None,
+        ranges: bool = False,
     ):
         self.inner = inner
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
         self.fetches = 0
+        self.range_fetches = 0
         self.bytes_fetched = 0
         self._lock = threading.Lock()
+        if ranges and callable(getattr(inner, "fetch_range", None)):
+            self.fetch_range = self._fetch_range
+
+    def _pay(self, nbytes: int) -> None:
+        delay = self.latency_s
+        if self.bandwidth_bps:
+            delay += nbytes / self.bandwidth_bps
+        if delay > 0:
+            time.sleep(delay)
 
     def fetch(self, name: str) -> bytes:
         data = self.inner.fetch(name)
-        delay = self.latency_s
-        if self.bandwidth_bps:
-            delay += len(data) / self.bandwidth_bps
-        if delay > 0:
-            time.sleep(delay)
+        self._pay(len(data))
         with self._lock:
             self.fetches += 1
             self.bytes_fetched += len(data)
         return data
+
+    def _fetch_range(self, name: str, start: int, length: int) -> bytes:
+        data = self.inner.fetch_range(name, start, length)
+        self._pay(len(data))
+        with self._lock:
+            self.range_fetches += 1
+            self.bytes_fetched += len(data)
+        return data
+
+
+class SparseShardReader:
+    """``ShardReader``-compatible reads over a partially-fetched shard.
+
+    Built by index-first fetch: the header + index came down first (a
+    ``ShardIndex``), and payload **spans** — coalesced byte ranges covering
+    the hinted samples — arrive via ``fetch_range``.  ``read(i)`` serves
+    resident samples as zero-copy ``memoryview`` slices of their span; a
+    non-resident sample triggers a demand range fetch of exactly that
+    sample.  ``ensure(samples)`` tops up residency in bulk (the background
+    path).
+
+    Spans are plain ``bytes`` objects, so dropping the reader (cache
+    eviction) never invalidates views already handed out — refcounts keep
+    them alive, mirroring the mmap/unlink contract of the on-disk cache.
+    Growth is reported to the owning cache through ``_on_grow(delta)`` so
+    ``bytes_cached`` tracks partial shards accurately.
+    """
+
+    def __init__(self, name: str, index: ShardIndex, range_fetch, *, coalesce_gap: int = 1 << 16):
+        self.name = name
+        self.index = index
+        self._range_fetch = range_fetch  # (start, length) -> bytes
+        self.coalesce_gap = coalesce_gap
+        self._lock = threading.Lock()
+        self._starts: list[int] = []  # sorted span start offsets
+        self._spans: list[bytes] = []  # parallel span payloads
+        self._bytes_held = 0
+        self._closed = False
+        self._on_grow = None  # installed by the owning ShardPrefetcher
+
+    # -- ShardReader-compatible surface ------------------------------------
+    @property
+    def n_samples(self) -> int:
+        return self.index.n_samples
+
+    def __len__(self) -> int:
+        return self.index.n_samples
+
+    @property
+    def offsets(self):
+        return self.index.offsets
+
+    @property
+    def lengths(self):
+        return self.index.lengths
+
+    @property
+    def crcs(self):
+        return self.index.crcs
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes actually resident (index + fetched spans) — what this
+        entry costs the cache, NOT the full shard size."""
+        with self._lock:
+            return self.index.index_nbytes + self._bytes_held
+
+    # -- span bookkeeping ---------------------------------------------------
+    def _find_locked(self, off: int, ln: int) -> memoryview | None:
+        j = bisect.bisect_right(self._starts, off) - 1
+        if j >= 0:
+            start, span = self._starts[j], self._spans[j]
+            if start + len(span) >= off + ln:
+                rel = off - start
+                return memoryview(span)[rel : rel + ln]
+        return None
+
+    def _insert_locked(self, start: int, data: bytes) -> int:
+        """Insert a span, keeping the list **nesting-free**: an incoming
+        span already covered by a resident one is skipped, and resident
+        spans fully inside the incoming one are dropped (their bytes were
+        double-held).  Nesting-freedom is what makes the single-candidate
+        lookup in ``_find_locked`` exact — without it a short later-start
+        span could shadow a longer earlier one and force redundant demand
+        fetches.  Returns the net change in resident bytes."""
+        end = start + len(data)
+        pos = bisect.bisect_left(self._starts, start)
+        if pos > 0 and self._starts[pos - 1] + len(self._spans[pos - 1]) >= end:
+            return 0  # covered by an earlier-starting span
+        removed = 0
+        k = pos
+        while k < len(self._starts) and self._starts[k] + len(self._spans[k]) <= end:
+            removed += len(self._spans[k])
+            del self._starts[k]
+            del self._spans[k]
+        if k < len(self._starts) and self._starts[k] == start:
+            # a same-start, longer span survives: it covers the new one
+            self._bytes_held -= removed
+            return -removed
+        self._starts.insert(pos, start)
+        self._spans.insert(pos, data)
+        self._bytes_held += len(data) - removed
+        return len(data) - removed
+
+    def _intervals(self, samples: list[int]) -> list[tuple[int, int]]:
+        """Coalesce sorted sample indices into (start, length) fetch runs.
+
+        Adjacent samples are byte-adjacent in the packed format, so a run
+        of hinted samples becomes one ranged request; gaps up to
+        ``coalesce_gap`` are fetched too (one round trip beats two)."""
+        offs, lens = self.index.offsets, self.index.lengths
+        out: list[list[int]] = []
+        for s in samples:
+            a = int(offs[s])
+            b = a + int(lens[s])
+            if out and a - out[-1][1] <= self.coalesce_gap:
+                out[-1][1] = max(out[-1][1], b)
+            else:
+                out.append([a, b])
+        return [(a, b - a) for a, b in out]
+
+    def missing(self, samples) -> list[int]:
+        """Hinted samples not yet resident (sorted, deduped, in-range)."""
+        offs, lens = self.index.offsets, self.index.lengths
+        wanted = sorted({int(s) for s in samples if 0 <= int(s) < self.n_samples})
+        with self._lock:
+            return [
+                s
+                for s in wanted
+                if self._find_locked(int(offs[s]), int(lens[s])) is None
+            ]
+
+    def ensure(self, samples) -> int:
+        """Fetch any non-resident hinted samples (coalesced); returns bytes
+        added.  Used by the background top-up path."""
+        gap = self.missing(samples)
+        if not gap:
+            return 0
+        grown = 0
+        for start, length in self._intervals(gap):
+            data = self._range_fetch(start, length)
+            with self._lock:
+                if self._closed:
+                    break
+                grown += self._insert_locked(start, data)
+        if grown and self._on_grow is not None:
+            self._on_grow(grown)
+        return grown
+
+    def read(self, i: int, *, verify: bool = True) -> memoryview:
+        if not 0 <= i < self.n_samples:
+            raise IndexError(f"sample {i} out of range [0, {self.n_samples})")
+        off, ln = int(self.index.offsets[i]), int(self.index.lengths[i])
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"SparseShardReader({self.name}) is closed")
+            view = self._find_locked(off, ln)
+        if view is None:
+            data = self._range_fetch(off, ln)  # demand: exactly this sample
+            grown = 0
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError(f"SparseShardReader({self.name}) is closed")
+                view = self._find_locked(off, ln)  # demand race: keep winner
+                if view is None:
+                    grown = self._insert_locked(off, data)
+                    view = self._find_locked(off, ln)  # nesting-free: found
+            if grown and self._on_grow is not None:
+                self._on_grow(grown)
+        if verify and zlib.crc32(view) != int(self.index.crcs[i]):
+            raise ShardCorruption(f"{self.name}: sample {i} failed crc32 check")
+        return view
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            # dropping the lists releases our refs; views already handed
+            # out keep their span's bytes alive on their own
+            self._starts = []
+            self._spans = []
+            self._bytes_held = 0
 
 
 class ShardPrefetcher:
     """Bounded local shard cache + background fetch scheduler.
 
     ``reader(name)`` is the synchronous path the dataset uses: cache hit →
-    mmap reader immediately; miss → fetch (joining an in-flight background
+    reader immediately; miss → fetch (joining an in-flight background
     fetch if one exists), install, evict LRU shards past ``max_bytes``.
 
-    ``schedule(name)`` is the asynchronous path the loader uses: start a
-    background fetch (up to ``max_inflight`` concurrent) unless the shard is
-    already cached or being fetched.  Scheduling is advisory — dropping a
-    request is always safe because ``reader`` fetches on demand.
+    ``schedule(name, samples=None)`` is the asynchronous path the loader
+    uses: start a background fetch (up to ``max_inflight`` concurrent)
+    unless the shard is already cached or being fetched.  ``samples`` is
+    the set of shard-local indices the caller's lookahead window wants —
+    with an index-first-capable source it drives the sparse-vs-full
+    decision (see the module docstring).  Scheduling is advisory —
+    dropping a request is always safe because ``reader`` fetches on
+    demand.
     """
 
     def __init__(
@@ -109,6 +350,9 @@ class ShardPrefetcher:
         *,
         max_bytes: int = 1 << 30,
         max_inflight: int = 2,
+        index_first: bool | str = "auto",
+        sparse_threshold: float = 0.75,
+        coalesce_gap: int = 1 << 16,
     ):
         if max_bytes < 1:
             raise ValueError("max_bytes must be >= 1")
@@ -117,45 +361,165 @@ class ShardPrefetcher:
         self.cache_dir.mkdir(parents=True, exist_ok=True)
         self.max_bytes = max_bytes
         self.max_inflight = max_inflight
+        has_range = callable(getattr(source, "fetch_range", None))
+        if index_first == "auto":
+            self.index_first = has_range
+        else:
+            self.index_first = bool(index_first)
+            if self.index_first and not has_range:
+                raise ValueError(
+                    "index_first=True needs a source with fetch_range "
+                    f"({type(source).__name__} has none)"
+                )
+        self.sparse_threshold = sparse_threshold
+        self.coalesce_gap = coalesce_gap
         self._pool = ThreadPoolExecutor(
             max_workers=max_inflight, thread_name_prefix="shard-prefetch"
         )
         self._lock = threading.Lock()
         # name -> (reader, nbytes); insertion order is the LRU order
-        self._cached: OrderedDict[str, tuple[ShardReader, int]] = OrderedDict()
+        self._cached: OrderedDict[str, tuple[ShardReader | SparseShardReader, int]] = (
+            OrderedDict()
+        )
         self._inflight: dict[str, Future] = {}
+        self._indexes: dict[str, ShardIndex] = {}  # tiny: 16 B/sample arrays
+        self._ensuring: set[str] = set()  # sparse top-ups in flight
         self._bg_inflight = 0  # pool fetches only (demand fetches excluded)
         self._closed = False
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.bytes_cached = 0
+        self.bytes_fetched = 0  # wire bytes: payloads + indexes + ranges
+        self.index_fetches = 0
+        self.range_fetches = 0
         self.fetch_time = 0.0
 
     # -- manifest -----------------------------------------------------------
     def fetch_manifest(self) -> bytes:
         """The dataset manifest comes over the same wire as the shards."""
-        return self.source.fetch(MANIFEST_NAME)
+        data = self.source.fetch(MANIFEST_NAME)
+        with self._lock:
+            self.bytes_fetched += len(data)
+        return data
 
     # -- fetch machinery ----------------------------------------------------
-    def _fetch_to_cache(self, name: str) -> ShardReader:
-        """Download one shard, persist it, open a reader (pool thread)."""
-        t0 = time.monotonic()
+    def _range_fetch(self, name: str, start: int, length: int) -> bytes:
+        data = self.source.fetch_range(name, start, length)
+        if len(data) != length:
+            raise ShardCorruption(
+                f"{name}: range {start}+{length} returned {len(data)} bytes"
+            )
+        with self._lock:
+            self.range_fetches += 1
+            self.bytes_fetched += len(data)
+        return data
+
+    def _get_index(self, name: str) -> ShardIndex:
+        """Header + index region of ``name`` via two small ranged reads.
+
+        Cached in memory (indexes are 16 B/sample — thousands of shards fit
+        in a few MB).  Concurrent first fetches of one index may duplicate
+        the ~KB download; the setdefault keeps exactly one parse."""
+        with self._lock:
+            idx = self._indexes.get(name)
+        if idx is not None:
+            return idx
+        header = self.source.fetch_range(name, 0, HEADER_SIZE)
+        _version, n, index_off, _payload_off = parse_shard_header(header, name)
+        index_bytes = self.source.fetch_range(name, index_off, n * ENTRY_SIZE)
+        idx = ShardIndex.parse(header, index_bytes, name)
+        with self._lock:
+            self.index_fetches += 1
+            self.bytes_fetched += len(header) + len(index_bytes)
+            return self._indexes.setdefault(name, idx)
+
+    def _fetch_full(self, name: str) -> ShardReader:
+        """Download one whole shard, persist it, open a reader."""
         data = self.source.fetch(name)
+        with self._lock:
+            self.bytes_fetched += len(data)
         path = self.cache_dir / name
         # unique temp per fetch: two racing fetches of one shard must not
         # share a staging file (the loser's replace() would find it gone)
-        tmp = path.with_suffix(
-            f"{path.suffix}.{threading.get_ident():x}.part"
-        )
-        tmp.write_bytes(data)
-        tmp.replace(path)  # atomic: a reader never sees a torn file
-        reader = ShardReader(path)
-        with self._lock:
-            self.fetch_time += time.monotonic() - t0
-        return reader
+        tmp = path.with_suffix(f"{path.suffix}.{threading.get_ident():x}.part")
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            # durable before the atomic rename: a crash right after
+            # replace() must not leave a torn-but-magic-valid cache file
+            os.fsync(f.fileno())
+        tmp.replace(path)
+        return ShardReader(path)
 
-    def _install(self, name: str, reader: ShardReader) -> None:
+    def _fetch_entry(self, name: str, samples=None) -> ShardReader | SparseShardReader:
+        """Fetch ``name`` honoring the index-first policy (any thread).
+
+        With sample hints and a range-capable source: pull the index first,
+        and if the hinted samples cover < ``sparse_threshold`` of the
+        payload, fetch only their coalesced ranges (sparse entry).
+        Otherwise — no hints, no ranges, or the window wants most of the
+        shard anyway — fetch the whole shard to disk."""
+        t0 = time.monotonic()
+        try:
+            # range_supported goes False the moment the source sees a server
+            # ignore a Range header — from then on "ranged" reads move whole
+            # bodies, so sparse fetch would COST bytes, not save them
+            if (
+                samples
+                and self.index_first
+                and getattr(self.source, "range_supported", True)
+            ):
+                idx = self._get_index(name)
+                wanted = sorted(
+                    {int(s) for s in samples if 0 <= int(s) < idx.n_samples}
+                )
+                wanted_bytes = sum(int(idx.lengths[s]) for s in wanted)
+                if wanted and wanted_bytes <= self.sparse_threshold * max(
+                    idx.payload_bytes, 1
+                ):
+                    reader = SparseShardReader(
+                        name,
+                        idx,
+                        functools.partial(self._range_fetch, name),
+                        coalesce_gap=self.coalesce_gap,
+                    )
+                    reader.ensure(wanted)
+                    return reader
+            return self._fetch_full(name)
+        finally:
+            with self._lock:
+                self.fetch_time += time.monotonic() - t0
+
+    def _evict_over_budget_locked(self) -> list[str]:
+        """LRU-evict past the byte budget; caller holds the lock and must
+        pass the result to ``_unlink_evicted`` after releasing it."""
+        evicted: list[str] = []
+        while self.bytes_cached > self.max_bytes and len(self._cached) > 1:
+            old_name, (old_reader, nbytes) = self._cached.popitem(last=False)
+            self.bytes_cached -= nbytes
+            self.evictions += 1
+            evicted.append(old_name)
+        return evicted
+
+    def _unlink_evicted(self, evicted: list[str]) -> None:
+        for old_name in evicted:
+            # Unlink the file but do NOT close the reader: a concurrent
+            # ``read`` may hold it (or views into it) right now.  The
+            # mapping is dropped by refcount once the last holder lets go,
+            # and the disk space returns with it (Linux unlink semantics).
+            # Sparse entries have no file — unlink(missing_ok) covers both.
+            # Re-check under the lock first: the shard may have been
+            # re-fetched since we evicted it, in which case the file on
+            # disk is the NEWER copy and belongs to that install (every
+            # path write is covered by _inflight membership until its
+            # install lands in _cached, so this check is race-free).
+            with self._lock:
+                if old_name in self._cached or old_name in self._inflight:
+                    continue
+                (self.cache_dir / old_name).unlink(missing_ok=True)
+
+    def _install(self, name: str, reader) -> None:
         """Insert a fetched shard and evict LRU past the byte budget."""
         evicted: list[str] = []
         with self._lock:
@@ -169,29 +533,29 @@ class ShardPrefetcher:
                 return
             self._cached[name] = (reader, reader.nbytes)
             self.bytes_cached += reader.nbytes
-            while self.bytes_cached > self.max_bytes and len(self._cached) > 1:
-                old_name, (_old_reader, nbytes) = self._cached.popitem(last=False)
-                self.bytes_cached -= nbytes
-                self.evictions += 1
-                evicted.append(old_name)
-        for old_name in evicted:
-            # Unlink the file but do NOT close the reader: a concurrent
-            # ``read_bytes`` may hold it (or views into it) right now.  The
-            # mapping is dropped by refcount once the last holder lets go,
-            # and the disk space returns with it (Linux unlink semantics).
-            # Re-check under the lock first: the shard may have been
-            # re-fetched since we evicted it, in which case the file on
-            # disk is the NEWER copy and belongs to that install (every
-            # path write is covered by _inflight membership until its
-            # install lands in _cached, so this check is race-free).
-            with self._lock:
-                if old_name in self._cached or old_name in self._inflight:
-                    continue
-                (self.cache_dir / old_name).unlink(missing_ok=True)
+            if isinstance(reader, SparseShardReader):
+                # from here on demand/top-up growth adjusts bytes_cached
+                reader._on_grow = functools.partial(self._sparse_grow, name, reader)
+            evicted = self._evict_over_budget_locked()
+        self._unlink_evicted(evicted)
 
-    def _fetch_and_install(self, name: str) -> ShardReader:
+    def _sparse_grow(self, name: str, reader: SparseShardReader, delta: int) -> None:
+        """A sparse entry fetched more payload: keep ``bytes_cached`` honest
+        and re-run eviction.  No-op if the entry was already evicted (the
+        orphaned reader's spans are refcount-reclaimed on their own)."""
+        evicted: list[str] = []
+        with self._lock:
+            entry = self._cached.get(name)
+            if entry is None or entry[0] is not reader:
+                return
+            self._cached[name] = (reader, entry[1] + delta)
+            self.bytes_cached += delta
+            evicted = self._evict_over_budget_locked()
+        self._unlink_evicted(evicted)
+
+    def _fetch_and_install(self, name: str, samples=None):
         try:
-            reader = self._fetch_to_cache(name)
+            reader = self._fetch_entry(name, samples)
             self._install(name, reader)
             with self._lock:
                 installed = self._cached.get(name)
@@ -203,32 +567,72 @@ class ShardPrefetcher:
                 self._inflight.pop(name, None)
                 self._bg_inflight -= 1
 
-    def schedule(self, name: str) -> bool:
+    def _ensure_task(self, name: str, reader: SparseShardReader, samples) -> None:
+        try:
+            reader.ensure(samples)
+        except Exception:
+            pass  # advisory top-up: demand reads cover whatever is missing
+        finally:
+            with self._lock:
+                self._ensuring.discard(name)
+                self._bg_inflight -= 1
+
+    def schedule(self, name: str, samples=None) -> bool:
         """Start a background fetch of ``name``; False if dropped (cached,
         already in flight, saturated, or closed).  Saturation counts only
         *background* fetches: a demand fetch runs on its caller's thread,
         so it must not consume a prefetch slot — otherwise a cold-miss
         stall would starve exactly the lookahead meant to prevent the next
-        one."""
+        one.
+
+        ``samples`` (shard-local indices the caller will read) feeds the
+        index-first sparse/full decision; for an already-cached *sparse*
+        entry it instead schedules a background top-up of any hinted
+        samples not yet resident."""
+        validate_shard_name(name)
         with self._lock:
+            if self._closed:
+                return False
+            entry = self._cached.get(name)
+            if entry is None:
+                if name in self._inflight or self._bg_inflight >= self.max_inflight:
+                    return False
+                self._bg_inflight += 1
+                fut = self._pool.submit(self._fetch_and_install, name, samples)
+                self._inflight[name] = fut
+                return True
+            reader = entry[0]
             if (
-                self._closed
-                or name in self._cached
-                or name in self._inflight
+                not samples
+                or not isinstance(reader, SparseShardReader)
+                or name in self._ensuring
                 or self._bg_inflight >= self.max_inflight
             ):
                 return False
+        # sparse top-up candidacy: compute missing() OUTSIDE the global lock
+        # (it bisects per hinted sample under the reader's own lock — too
+        # much work to serialize every concurrent cache hit behind)
+        if not reader.missing(samples):
+            return False
+        with self._lock:
+            if (
+                self._closed
+                or name in self._ensuring
+                or self._bg_inflight >= self.max_inflight
+            ):
+                return False
+            self._ensuring.add(name)
             self._bg_inflight += 1
-            fut = self._pool.submit(self._fetch_and_install, name)
-            self._inflight[name] = fut
+            self._pool.submit(self._ensure_task, name, reader, samples)
         return True
 
-    def reader(self, name: str) -> ShardReader:
-        """Blocking get: the mmap reader for ``name``, fetching on miss.
+    def reader(self, name: str, samples=None) -> ShardReader | SparseShardReader:
+        """Blocking get: the reader for ``name``, fetching on miss.
 
         Concurrent requests for one shard share a single download: the
         first requester (or an earlier ``schedule``) owns the fetch, later
-        ones join its future.
+        ones join its future.  ``samples`` hints behave as in
+        ``schedule`` (they only matter on a miss).
         """
         my_fut: Future | None = None
         with self._lock:
@@ -236,17 +640,27 @@ class ShardPrefetcher:
                 raise RuntimeError("ShardPrefetcher is closed")
             entry = self._cached.get(name)
             if entry is not None:
-                self._cached.move_to_end(name)  # refresh LRU position
+                # hit path: no name validation — everything in _cached came
+                # through a validated fetch.  Skip the LRU shuffle when the
+                # name is already most-recent (the sequential common case).
+                if next(reversed(self._cached)) != name:
+                    self._cached.move_to_end(name)  # refresh LRU position
                 self.hits += 1
                 return entry[0]
+            validate_shard_name(name)
             self.misses += 1
             fut = self._inflight.get(name)
             if fut is None:
                 my_fut = self._inflight[name] = Future()
         if my_fut is None:
-            return fut.result()  # join the in-flight fetch
+            try:
+                return fut.result()  # join the in-flight fetch
+            except CancelledError:
+                # close() cancelled the queued background fetch we joined;
+                # surface the documented shutdown error, not pool internals
+                raise RuntimeError("ShardPrefetcher is closed") from None
         try:
-            reader = self._fetch_to_cache(name)
+            reader = self._fetch_entry(name, samples)
             self._install(name, reader)
             with self._lock:
                 installed = self._cached.get(name)
@@ -270,7 +684,7 @@ class ShardPrefetcher:
 
     def stats(self) -> dict[str, float]:
         with self._lock:
-            return {
+            out = {
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
@@ -278,7 +692,20 @@ class ShardPrefetcher:
                 "max_bytes": self.max_bytes,
                 "prefetch_depth": self._bg_inflight,
                 "fetch_time": self.fetch_time,
+                "bytes_fetched": self.bytes_fetched,
+                "index_fetches": self.index_fetches,
+                "range_fetches": self.range_fetches,
+                "sparse_shards": sum(
+                    1
+                    for r, _ in self._cached.values()
+                    if isinstance(r, SparseShardReader)
+                ),
             }
+        source_stats = getattr(self.source, "stats", None)
+        if callable(source_stats):
+            for k, v in source_stats().items():
+                out[f"source_{k}"] = v
+        return out
 
     def close(self) -> None:
         with self._lock:
@@ -286,14 +713,19 @@ class ShardPrefetcher:
                 return
             self._closed = True
         # Queued-but-unstarted background fetches are cancelled by the pool
-        # shutdown; running ones finish (their install no-ops once closed).
-        # Demand-fetch futures in ``_inflight`` are hand-made and owned by
-        # the fetching thread — cancelling them here would make that
-        # thread's set_result() blow up with InvalidStateError, so they are
-        # left to complete on their own.
+        # shutdown (joiners of a cancelled future get the documented
+        # RuntimeError, translated in ``reader``); running ones finish
+        # (their install no-ops once closed).  Demand-fetch futures in
+        # ``_inflight`` are hand-made and owned by the fetching thread —
+        # cancelling them here would make that thread's set_result() blow
+        # up with InvalidStateError, so they are left to complete.
         self._pool.shutdown(wait=True, cancel_futures=True)
         with self._lock:
             for reader, _ in self._cached.values():
                 reader.close()
             self._cached.clear()
+            self._indexes.clear()
             self.bytes_cached = 0
+        source_close = getattr(self.source, "close", None)
+        if callable(source_close):
+            source_close()

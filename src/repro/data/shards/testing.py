@@ -1,0 +1,132 @@
+"""In-process HTTP shard server: the fixture behind HTTP-backend tests,
+``benchmarks/bench_shards.py``, and ``examples/imagenet_pipeline.py``.
+
+Pure stdlib (``http.server``) so the suite needs no extra dependency, but
+with the two behaviors a real object-store front end has that
+``SimpleHTTPRequestHandler`` lacks:
+
+* ``Range: bytes=a-b`` → ``206 Partial Content`` (the thing index-first
+  fetch exists to exploit) — disable with ``support_ranges=False`` to model
+  a server that ignores Range and always sends the full body;
+* keep-alive (HTTP/1.1 + explicit ``Content-Length``) so connection-reuse
+  in ``HttpShardSource`` is actually exercised.
+
+Observability for assertions: ``requests``, ``bytes_served``,
+``connections`` counters, and ``fail_next = N`` to answer the next N
+requests with 503 (drives the retry/backoff path deterministically).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import http.server
+import pathlib
+import re
+import threading
+import urllib.parse
+
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
+
+
+class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"  # keep-alive: connection reuse is real
+    server_version = "ShardHTTP/1"
+
+    def setup(self) -> None:
+        super().setup()
+        srv = self.server
+        with srv.lock:
+            srv.connections += 1
+
+    def _send(self, status: int, body: bytes, extra: dict | None = None) -> None:
+        self.send_response(status)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+        with self.server.lock:
+            self.server.bytes_served += len(body)
+
+    def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        srv = self.server
+        with srv.lock:
+            srv.requests += 1
+            fail = srv.fail_next > 0
+            if fail:
+                srv.fail_next -= 1
+        if fail:
+            self._send(503, b"injected failure")
+            return
+        # resolve strictly within the served root (the server side of the
+        # same traversal defense the shard cache applies to names)
+        rel = urllib.parse.unquote(self.path.lstrip("/"))
+        path = (srv.root / rel).resolve()
+        if srv.root not in path.parents and path != srv.root:
+            self._send(404, b"")
+            return
+        if not path.is_file():
+            self._send(404, b"")
+            return
+        data = path.read_bytes()
+        range_header = self.headers.get("Range")
+        if range_header and srv.support_ranges:
+            m = _RANGE_RE.match(range_header.strip())
+            if m:
+                start = int(m.group(1))
+                end = int(m.group(2)) if m.group(2) is not None else len(data) - 1
+                if start >= len(data):
+                    self._send(
+                        416, b"", {"Content-Range": f"bytes */{len(data)}"}
+                    )
+                    return
+                end = min(end, len(data) - 1)
+                body = data[start : end + 1]
+                self._send(
+                    206,
+                    body,
+                    {"Content-Range": f"bytes {start}-{end}/{len(data)}"},
+                )
+                return
+        self._send(200, data)
+
+    def log_message(self, *args) -> None:  # quiet: tests read counters
+        pass
+
+
+class ShardHTTPServer(http.server.ThreadingHTTPServer):
+    """Serves a shard directory; counters under ``lock`` for assertions."""
+
+    daemon_threads = True
+
+    def __init__(self, root: str | pathlib.Path, *, support_ranges: bool = True):
+        self.root = pathlib.Path(root).resolve()
+        self.support_ranges = support_ranges
+        self.lock = threading.Lock()
+        self.requests = 0
+        self.bytes_served = 0
+        self.connections = 0
+        self.fail_next = 0
+        super().__init__(("127.0.0.1", 0), _ShardRequestHandler)
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+
+@contextlib.contextmanager
+def serve_shards(root: str | pathlib.Path, *, support_ranges: bool = True):
+    """Context manager: serve ``root`` on a loopback port; yields the server
+    (use ``server.url`` as an ``HttpShardSource`` root)."""
+    server = ShardHTTPServer(root, support_ranges=support_ranges)
+    thread = threading.Thread(
+        target=server.serve_forever, name="shard-http", daemon=True
+    )
+    thread.start()
+    try:
+        yield server
+    finally:
+        server.shutdown()
+        server.server_close()
+        thread.join(timeout=5)

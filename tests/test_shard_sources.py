@@ -1,0 +1,639 @@
+"""Remote shard backends + crash/race hardening: HTTP source (range reads,
+connection reuse, 404 vs 5xx), retry/backoff wrapper + stats plumbing,
+index-first sparse fetch, writer abort-on-exception, shard-name
+sanitization, cancelled-fetch join, and fsync crash-safety hooks."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.stats import StageStats
+from repro.data import (
+    CheckpointableSampler,
+    ShardCorruption,
+    ShardDataset,
+    ShardPrefetcher,
+    ShardReader,
+    ShardWriter,
+    SourceUnavailable,
+    SyntheticImageDataset,
+    build_image_loader,
+    decode_sample,
+    pack,
+)
+from repro.data.shards import validate_shard_name
+from repro.data.shards.prefetch import SparseShardReader
+from repro.data.shards.sources import HttpShardSource, RetryingSource
+from repro.data.shards.testing import serve_shards
+
+
+@pytest.fixture()
+def packed(tmp_path):
+    """(files dataset, packed shard dir) — 40 samples in 5 shards of 8."""
+    ds = SyntheticImageDataset.materialize(tmp_path / "src", 40, hw=(16, 16), seed=0)
+    pack(ds, tmp_path / "shards", samples_per_shard=8)
+    return ds, tmp_path / "shards"
+
+
+# ---------------------------------------------------------------------------
+# HttpShardSource
+# ---------------------------------------------------------------------------
+def test_http_fetch_roundtrip_and_404(packed, tmp_path):
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        src = HttpShardSource(srv.url)
+        name = "shard-00000.rpshard"
+        assert src.fetch(name) == (shards / name).read_bytes()
+        with pytest.raises(FileNotFoundError):
+            src.fetch("no-such-shard.rpshard")
+        src.close()
+
+
+def test_http_fetch_range_206(packed, tmp_path):
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    with serve_shards(shards) as srv:
+        src = HttpShardSource(srv.url)
+        assert src.fetch_range(name, 0, 32) == raw[:32]
+        assert src.fetch_range(name, 100, 57) == raw[100:157]
+        assert src.range_supported is True
+        assert src.fetch_range(name, 5, 0) == b""
+        src.close()
+
+
+def test_http_fetch_range_server_ignores_range(packed, tmp_path):
+    """A server that answers 200 to a ranged request still yields correct
+    bytes (sliced locally) and flips ``range_supported`` off."""
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    with serve_shards(shards, support_ranges=False) as srv:
+        src = HttpShardSource(srv.url)
+        assert src.fetch_range(name, 100, 57) == raw[100:157]
+        assert src.range_supported is False
+        src.close()
+
+
+def test_http_connection_reuse(packed, tmp_path):
+    """Sequential fetches from one thread ride one keep-alive connection."""
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        src = HttpShardSource(srv.url)
+        for _ in range(3):
+            src.fetch("shard-00000.rpshard")
+            src.fetch_range("shard-00001.rpshard", 0, 32)
+        assert srv.requests == 6
+        assert srv.connections == 1
+        src.close()
+
+
+def test_http_5xx_is_source_unavailable(packed, tmp_path):
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        src = HttpShardSource(srv.url)
+        srv.fail_next = 1
+        with pytest.raises(SourceUnavailable):
+            src.fetch("shard-00000.rpshard")
+        # the connection survives the 503 (body drained): next fetch works
+        assert src.fetch("shard-00000.rpshard")
+        src.close()
+
+
+# ---------------------------------------------------------------------------
+# RetryingSource
+# ---------------------------------------------------------------------------
+class _FlakySource:
+    """fetch fails ``n_failures`` times, then succeeds."""
+
+    def __init__(self, n_failures, exc=SourceUnavailable("boom")):
+        self.n_failures = n_failures
+        self.exc = exc
+        self.calls = 0
+
+    def fetch(self, name):
+        self.calls += 1
+        if self.calls <= self.n_failures:
+            raise self.exc
+        return b"payload:" + name.encode()
+
+
+def test_retrying_source_retries_then_succeeds():
+    inner = _FlakySource(2)
+    src = RetryingSource(inner, max_retries=4, base_delay_s=0.001, sleep=lambda s: None)
+    assert src.fetch("a") == b"payload:a"
+    assert inner.calls == 3
+    st = src.stats()
+    assert st["errors"] == 2 and st["retries"] == 2
+
+
+def test_retrying_source_backoff_caps_and_jitters():
+    delays = []
+    inner = _FlakySource(5)
+    src = RetryingSource(
+        inner,
+        max_retries=5,
+        base_delay_s=0.1,
+        max_delay_s=0.25,
+        jitter=0.5,
+        sleep=delays.append,
+    )
+    src.fetch("a")
+    assert len(delays) == 5
+    base = [0.1, 0.2, 0.25, 0.25, 0.25]  # doubling, capped
+    for d, b in zip(delays, base):
+        assert b <= d <= b * 1.5 + 1e-9  # jitter in [1, 1.5)
+
+
+def test_retrying_source_gives_up_and_skips_404():
+    inner = _FlakySource(100)
+    src = RetryingSource(inner, max_retries=2, sleep=lambda s: None)
+    with pytest.raises(SourceUnavailable):
+        src.fetch("a")
+    assert inner.calls == 3  # 1 attempt + 2 retries
+    missing = _FlakySource(100, exc=FileNotFoundError("gone"))
+    src = RetryingSource(missing, max_retries=5, sleep=lambda s: None)
+    with pytest.raises(FileNotFoundError):
+        src.fetch("a")
+    assert missing.calls == 1  # permanent error: never retried
+    assert src.stats()["retries"] == 0
+
+
+def test_retrying_source_mirrors_inner_range_support(packed, tmp_path):
+    assert not hasattr(RetryingSource(_FlakySource(0)), "fetch_range")
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        wrapped = RetryingSource(HttpShardSource(srv.url))
+        assert hasattr(wrapped, "fetch_range")
+        raw = (shards / "shard-00000.rpshard").read_bytes()
+        assert wrapped.fetch_range("shard-00000.rpshard", 0, 32) == raw[:32]
+        wrapped.close()
+
+
+def test_retry_counters_reach_pipeline_stats(packed, tmp_path):
+    """source errors/retries flow: RetryingSource → prefetcher.stats() →
+    StageStats cache probe → snapshot fields → dashboard line."""
+    from repro.core.stats import format_stats
+
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        src = RetryingSource(
+            HttpShardSource(srv.url), base_delay_s=0.001, max_delay_s=0.002
+        )
+        pf = ShardPrefetcher(src, tmp_path / "cache", max_bytes=1 << 30)
+        srv.fail_next = 2
+        pf.reader("shard-00000.rpshard")  # retries through the 503s
+        st = pf.stats()
+        assert st["source_retries"] == 2 and st["source_errors"] == 2
+        assert st["bytes_fetched"] > 0
+        probe = StageStats(name="read", cache=pf)
+        snap = probe.snapshot()
+        assert snap.source_retries == 2 and snap.source_errors == 2
+        assert snap.bytes_fetched == st["bytes_fetched"]
+        assert "src_retries=2" in format_stats([snap])
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# index-first fetch + sparse entries
+# ---------------------------------------------------------------------------
+def test_index_first_downloads_strictly_fewer_bytes(packed, tmp_path):
+    """A window touching 2 of 8 samples per shard: index-first (header +
+    index + hinted ranges) must move strictly fewer wire bytes than
+    whole-shard fetch, and serve byte-identical samples."""
+    ds, shards = packed
+    hinted = [0, 1]  # per-shard window
+    with serve_shards(shards) as srv:
+        whole = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "cw",
+            index_first=False,
+            max_inflight=8,
+        )
+        rds = ShardDataset(shards, prefetcher=whole)
+        for s in range(rds.num_shards):
+            base = 8 * s
+            for k in hinted:
+                np.testing.assert_array_equal(rds[base + k], ds[base + k])
+        whole_stats = whole.stats()
+        whole_bytes = whole_stats["bytes_fetched"]
+        rds.close()
+
+        sparse = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "cs",
+            index_first=True,
+            max_inflight=8,
+        )
+        rds = ShardDataset(shards, prefetcher=sparse)
+        assert sparse.index_first is True
+        for name in rds.shard_names:
+            sparse.schedule(name, samples=hinted)
+        for s in range(rds.num_shards):
+            base = 8 * s
+            for k in hinted:
+                np.testing.assert_array_equal(rds[base + k], ds[base + k])
+        st = sparse.stats()
+        assert st["bytes_fetched"] < whole_bytes  # the acceptance gate
+        assert st["index_fetches"] == rds.num_shards
+        assert st["sparse_shards"] == rds.num_shards
+        # partial-shard accounting: resident bytes are a fraction of the
+        # full shards, and stats track them exactly
+        assert 0 < st["bytes_cached"] < whole_stats["bytes_cached"]
+        rds.close()
+
+
+def test_sparse_reader_demand_fetches_unhinted_sample(packed, tmp_path):
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        pf.schedule(rds.shard_names[0], samples=[0, 1])
+        reader = pf.reader(rds.shard_names[0])
+        assert isinstance(reader, SparseShardReader)
+        before = pf.stats()
+        np.testing.assert_array_equal(rds[5], ds[5])  # never hinted
+        after = pf.stats()
+        assert after["range_fetches"] == before["range_fetches"] + 1
+        assert after["bytes_cached"] > before["bytes_cached"]  # growth counted
+        # crc still verified on the sparse path
+        with pytest.raises(IndexError):
+            reader.read(99)
+        rds.close()
+
+
+def test_sparse_whole_window_promotes_to_full_fetch(packed, tmp_path):
+    """Hints covering (nearly) the whole payload skip the sparse path —
+    one whole-shard GET beats index + ranged reads."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        pf.schedule(rds.shard_names[0], samples=list(range(8)))
+        reader = pf.reader(rds.shard_names[0])
+        assert isinstance(reader, ShardReader)  # full, on-disk entry
+        assert pf.stats()["sparse_shards"] == 0
+        rds.close()
+
+
+def test_sparse_schedule_tops_up_cached_entry(packed, tmp_path):
+    """schedule() on an already-cached sparse entry with new hints fetches
+    the missing ranges in the background."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        name = rds.shard_names[0]
+        pf.schedule(name, samples=[0])
+        reader = pf.reader(name)
+        assert isinstance(reader, SparseShardReader)
+        assert reader.missing([3, 4]) == [3, 4]
+        assert pf.schedule(name, samples=[3, 4]) is True  # top-up accepted
+        deadline = time.monotonic() + 5
+        while reader.missing([3, 4]) and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert reader.missing([3, 4]) == []
+        np.testing.assert_array_equal(rds[3], ds[3])
+        # nothing missing → nothing to do
+        assert pf.schedule(name, samples=[3]) is False
+        rds.close()
+
+
+def test_sparse_eviction_keeps_inflight_views_valid(packed, tmp_path):
+    """The sparse twin of the mmap/unlink contract: evicting a sparse entry
+    drops its spans, but views already handed out stay valid (refcounted
+    bytes)."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "c",
+            max_bytes=1,  # floor: at most one resident entry
+            index_first=True,
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        pf.schedule(rds.shard_names[0], samples=[0])
+        view = rds.read_bytes(0)  # memoryview into shard 0's sparse span
+        for i in range(8, 40):  # touch the other shards: shard 0 evicted
+            rds.read_bytes(i)
+        assert pf.stats()["evictions"] >= 1
+        np.testing.assert_array_equal(decode_sample(view), ds[0])  # still valid
+        rds.close()
+
+
+def test_range_ignoring_server_counts_wire_bytes_and_falls_back(packed, tmp_path):
+    """Against a server that ignores Range: bytes_fetched must count the
+    full bodies that actually crossed the wire, and once range_supported
+    flips off the prefetcher must stop going sparse (whole-shard fetches
+    only — 'ranged' reads would COST bytes there)."""
+    ds, shards = packed
+    name = "shard-00000.rpshard"
+    raw_len = (shards / name).stat().st_size
+    with serve_shards(shards, support_ranges=False) as srv:
+        src = RetryingSource(HttpShardSource(srv.url))
+        assert src.range_supported is True
+        got = src.fetch_range(name, 0, 32)
+        assert len(got) == 32
+        assert src.range_supported is False
+        assert src.stats()["bytes_fetched"] == raw_len  # wire truth
+        pf = ShardPrefetcher(src, tmp_path / "c", index_first=True)
+        rds = ShardDataset(shards, prefetcher=pf)
+        pf.schedule(rds.shard_names[1], samples=[0, 1])
+        reader = pf.reader(rds.shard_names[1])
+        assert isinstance(reader, ShardReader)  # fell back to full fetch
+        assert pf.stats()["sparse_shards"] == 0
+        np.testing.assert_array_equal(rds[8], ds[8])
+        rds.close()
+
+
+def test_url_dataset_cleans_up_auto_cache_dir(packed, tmp_path):
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        rds = ShardDataset(srv.url)  # no cache_dir: mkdtemp'd internally
+        auto = rds._auto_cache_dir
+        assert auto is not None and auto.is_dir()
+        rds.read_bytes(0)
+        rds.close()
+        assert not auto.exists()  # removed with the dataset
+        # explicit cache_dir: caller owns it, close() must leave it alone
+        mine = tmp_path / "mine"
+        rds = ShardDataset(srv.url, cache_dir=mine)
+        rds.read_bytes(0)
+        rds.close()
+        assert mine.is_dir()
+
+
+def test_url_dataset_bad_manifest_does_not_leak_stack(packed, tmp_path):
+    """__init__ failing after the stack was built (hostile manifest) must
+    close the prefetcher and remove the auto cache dir."""
+    import json
+
+    _, shards = packed
+    manifest = json.loads((shards / "manifest.json").read_text())
+    manifest["shards"][0]["name"] = "../evil"
+    (shards / "manifest.json").write_text(json.dumps(manifest))
+    before = set(os.listdir(tempfile_dir()))
+    with serve_shards(shards) as srv:
+        with pytest.raises(ValueError, match="unsafe shard name"):
+            ShardDataset(srv.url)
+    leaked = [
+        d for d in set(os.listdir(tempfile_dir())) - before
+        if d.startswith("repro-shard-cache-")
+    ]
+    assert leaked == []
+
+
+def tempfile_dir():
+    import tempfile
+
+    return tempfile.gettempdir()
+
+
+def test_sparse_insert_keeps_spans_nesting_free(packed, tmp_path):
+    """A coalesced span that swallows an earlier single-sample span must
+    replace it (no double-held bytes, no shadowed lookups forcing redundant
+    demand fetches)."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        name = rds.shard_names[0]
+        pf.schedule(name, samples=[5])  # lone middle sample
+        reader = pf.reader(name)
+        assert isinstance(reader, SparseShardReader)
+        # top-up around it: [4, 6] coalesces across resident sample 5
+        reader.ensure([4, 6])
+        assert len(reader._spans) == 1  # the nested span was absorbed
+        payload = sum(int(reader.lengths[k]) for k in (4, 5, 6))
+        assert reader.nbytes == reader.index.index_nbytes + payload  # no double count
+        ranges_before = pf.stats()["range_fetches"]
+        for k in (4, 5, 6):  # all resident: reads must not re-fetch
+            np.testing.assert_array_equal(decode_sample(reader.read(k)), ds[k])
+        assert pf.stats()["range_fetches"] == ranges_before
+        rds.close()
+
+
+def test_concurrent_demand_dedup_over_http(packed, tmp_path):
+    """Hammering one remote dataset from many threads: every shard crosses
+    the wire exactly once (fetch dedup holds under the real HTTP backend)."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "c",
+            max_bytes=1 << 30,
+            index_first=False,
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        errs = []
+
+        def hammer():
+            try:
+                for i in range(0, len(rds), 3):
+                    np.testing.assert_array_equal(rds[i], ds[i])
+            except Exception as e:  # pragma: no cover - failure path
+                errs.append(e)
+
+        threads = [threading.Thread(target=hammer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        # manifest + one GET per shard, no duplicates despite 6 threads
+        assert srv.requests == rds.num_shards + 1
+        rds.close()
+
+
+def test_url_root_dataset_end_to_end(packed, tmp_path):
+    """ShardDataset('http://...') builds the full stack (HTTP → retry →
+    prefetcher) and feeds the image loader, hints and all."""
+    ds, shards = packed
+    with serve_shards(shards) as srv:
+        rds = ShardDataset(srv.url, cache_dir=tmp_path / "cache")
+        assert len(rds) == 40
+        assert rds.prefetcher is not None and rds.prefetcher.index_first
+        p = build_image_loader(
+            rds,
+            batch_size=8,
+            hw=(16, 16),
+            num_threads=4,
+            sampler=CheckpointableSampler(len(rds), batch_size=1, shuffle=False),
+        )
+        with p.auto_stop():
+            batches = list(p)
+        assert len(batches) == 5
+        for b in batches:
+            assert np.asarray(b["images"]).shape == (8, 16, 16, 3)
+        stats = {s.name: s for s in p.stats()}
+        assert stats["read"].num_failed == 0
+        assert stats["read"].bytes_fetched > 0
+        rds.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: ShardWriter abort / fsync
+# ---------------------------------------------------------------------------
+def test_writer_exception_leaves_invalid_file(tmp_path):
+    """An exception inside the `with` body must NOT finalize the shard: the
+    zero placeholder header stays and readers reject the file."""
+    path = tmp_path / "crash.rpshard"
+    with pytest.raises(RuntimeError, match="mid-stream"):
+        with ShardWriter(path) as w:
+            w.add(b"partial payload")
+            raise RuntimeError("mid-stream failure")
+    assert path.exists()
+    with pytest.raises(ShardCorruption):
+        ShardReader(path)
+
+
+def test_writer_abort_is_explicit_and_idempotent(tmp_path):
+    path = tmp_path / "ab.rpshard"
+    w = ShardWriter(path)
+    w.add(b"x" * 100)
+    w.abort()
+    w.abort()  # idempotent
+    with pytest.raises(RuntimeError):
+        w.add(b"more")  # closed
+    with pytest.raises(ShardCorruption):
+        ShardReader(path)
+    # abort after close is a no-op: the finalized shard stays valid
+    path2 = tmp_path / "ok.rpshard"
+    w2 = ShardWriter(path2)
+    w2.add(b"y" * 10)
+    w2.close()
+    w2.abort()
+    ShardReader(path2).close()
+
+
+def test_writer_close_fsyncs_before_header(tmp_path, monkeypatch):
+    """The payload+index fsync must land BEFORE the header write that
+    validates the file (crash between them must not leave a magic-valid
+    shard with unsynced contents)."""
+    events = []
+    real_fsync = os.fsync
+
+    def spy_fsync(fd):
+        events.append("fsync")
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy_fsync)
+    path = tmp_path / "s.rpshard"
+    w = ShardWriter(path)
+    orig_seek = w._f.seek
+
+    def spy_seek(pos, *a):
+        if pos == 0:
+            events.append("header_write")
+        return orig_seek(pos, *a)
+
+    w._f.seek = spy_seek
+    w.add(b"z" * 64)
+    w.close()
+    assert "fsync" in events
+    assert events.index("fsync") < events.index("header_write")
+    ShardReader(path).close()
+
+
+def test_cache_fetch_fsyncs_before_rename(packed, tmp_path, monkeypatch):
+    """_fetch_full must fsync the staged bytes before the atomic replace —
+    a crash after the rename must not leave a torn magic-valid cache file."""
+    _, shards = packed
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (synced.append(fd), real_fsync(fd))[1])
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=False
+        )
+        pf.reader("shard-00000.rpshard")
+        assert synced  # the staged cache file was fsynced
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: shard-name sanitization
+# ---------------------------------------------------------------------------
+def test_validate_shard_name_rejects_traversal():
+    for bad in ("../evil", "a/b", "..", ".", "", "a\\b", " pad ", "~root", "a\0b"):
+        with pytest.raises(ValueError, match="unsafe shard name"):
+            validate_shard_name(bad)
+    assert validate_shard_name("shard-00000.rpshard") == "shard-00000.rpshard"
+
+
+def test_hostile_manifest_rejected_at_parse(packed, tmp_path):
+    import json
+
+    _, shards = packed
+    manifest = json.loads((shards / "manifest.json").read_text())
+    manifest["shards"][0]["name"] = "../../etc/evil.rpshard"
+    (shards / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="unsafe shard name"):
+        ShardDataset(shards)
+    with serve_shards(shards) as srv:
+        with pytest.raises(ValueError, match="unsafe shard name"):
+            ShardDataset(srv.url, cache_dir=tmp_path / "cache")
+
+
+def test_prefetcher_rejects_traversal_names(packed, tmp_path):
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(RetryingSource(HttpShardSource(srv.url)), tmp_path / "c")
+        with pytest.raises(ValueError, match="unsafe shard name"):
+            pf.reader("../escape.rpshard")
+        with pytest.raises(ValueError, match="unsafe shard name"):
+            pf.schedule("../escape.rpshard")
+        assert not (tmp_path / "escape.rpshard").exists()
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: close() vs in-flight / queued fetches
+# ---------------------------------------------------------------------------
+def test_reader_joining_cancelled_fetch_gets_runtime_error(packed, tmp_path):
+    """A background fetch queued (not yet started) when close() runs is
+    cancelled by the pool; a reader() that joined it must see the
+    documented RuntimeError, not a raw CancelledError."""
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "c",
+            max_inflight=1,
+        )
+        # occupy the single pool worker so the next schedule stays queued
+        gate = threading.Event()
+        pf._pool.submit(gate.wait)
+        assert pf.schedule("shard-00000.rpshard") is True  # queued, not started
+        results = []
+
+        def join():
+            try:
+                results.append(pf.reader("shard-00000.rpshard"))
+            except BaseException as e:
+                results.append(e)
+
+        t = threading.Thread(target=join)
+        t.start()
+        time.sleep(0.05)  # joiner is blocked on the queued future
+        closer = threading.Thread(target=pf.close)
+        closer.start()
+        time.sleep(0.05)
+        gate.set()  # let the pool drain so close() can finish
+        closer.join(timeout=5)
+        t.join(timeout=5)
+        assert not t.is_alive() and not closer.is_alive()
+        assert len(results) == 1
+        assert isinstance(results[0], RuntimeError), results[0]
+        assert "closed" in str(results[0])
