@@ -20,12 +20,21 @@ bench_zero_copy's job:
   index-first fetch (header + index + just the hinted ranges) must move
   strictly fewer wire bytes than committing to whole shards; the warm pass
   re-reads the cache and should land within ~10% of plain local shard
-  reads.
+  reads;
+- ``origin_cold`` / ``peer_warm``: the peer exchange tier — rank A pays
+  the origin cold, then serves its warm cache over a ``PeerShardServer``;
+  rank B reads every shard through a ``TieredSource`` and must touch the
+  origin ZERO times (asserted via the origin server's request counter).
+
+``shard_mmap_epoch2`` re-reads the same warm mapping: per-sample crc
+verification is memoized on first read, so epoch 2 is pure pointer math
+(it should land at or above the ``verify_crc=False`` rate).
 
 Results persist to ``BENCH_shards.json`` at the repo root; gates:
 ``speedup_cold >= 2`` (packed shards at least 2x per-file items/s cold),
-``http_index_first_bytes < http_whole_bytes`` (strict), and
-``http_warm_vs_local`` ≈ 1 (±10%).
+``http_index_first_bytes < http_whole_bytes`` (strict),
+``http_warm_vs_local`` ≈ 1 (±10%), and ``peer_zero_origin`` (no origin
+shard requests during rank B's peer-served pass).
 """
 
 from __future__ import annotations
@@ -41,11 +50,14 @@ import numpy as np
 from repro.data import (
     HttpShardSource,
     LocalShardSource,
+    PeerShardServer,
+    PeerShardSource,
     RetryingSource,
     ShardDataset,
     ShardPrefetcher,
     SimulatedLatencySource,
     SyntheticImageDataset,
+    TieredSource,
     pack,
 )
 from repro.data.shards.testing import serve_shards
@@ -166,6 +178,63 @@ def _http_section(shards_dir: pathlib.Path, cache_root: pathlib.Path) -> dict:
     return results
 
 
+def _peer_section(shards_dir: pathlib.Path, cache_root: pathlib.Path) -> dict:
+    """Peer exchange: rank A pulls every shard cold from the origin, then
+    rank B reads the same data entirely from A's warm cache — zero origin
+    requests — through the origin → retry → peers → prefetcher stack."""
+    local_ds = ShardDataset(shards_dir)
+    order = np.arange(len(local_ds))
+    with serve_shards(shards_dir) as origin:
+        inflight = max(2, local_ds.num_shards)
+        pf_a = ShardPrefetcher(
+            RetryingSource(HttpShardSource(origin.url)),
+            cache_root / "rank_a",
+            max_bytes=1 << 32,
+            index_first=False,
+            max_inflight=inflight,
+        )
+        ds_a = ShardDataset(shards_dir, prefetcher=pf_a)
+        for name in ds_a.shard_names:
+            pf_a.schedule(name)
+        origin_cold = _read_throughput(ds_a, order)
+        with PeerShardServer(pf_a) as peer:
+            tiered = TieredSource(
+                RetryingSource(HttpShardSource(origin.url)),
+                PeerShardSource([peer.url]),
+            )
+            pf_b = ShardPrefetcher(
+                tiered,
+                cache_root / "rank_b",
+                max_bytes=1 << 32,
+                index_first=False,
+                max_inflight=inflight,
+            )
+            ds_b = ShardDataset(shards_dir, prefetcher=pf_b)
+            origin_requests_before = origin.requests
+            for name in ds_b.shard_names:
+                pf_b.schedule(name)
+            peer_warm = _read_throughput(ds_b, order)
+            origin_delta = origin.requests - origin_requests_before
+            tstats = tiered.stats()
+            results = {
+                "origin_cold": origin_cold,
+                "peer_warm": peer_warm,
+                "peer_hits": tstats["peer_hits"],
+                "peer_bytes": tstats["peer_bytes"],
+                "origin_bytes": tstats["origin_bytes"],
+                "peer_server": peer.stats(),
+                "origin_requests_during_peer_pass": origin_delta,
+                "peer_zero_origin": bool(origin_delta == 0),
+                "peer_warm_over_origin_cold": peer_warm["items_per_sec"]
+                / max(origin_cold["items_per_sec"], 1e-9),
+            }
+            ds_b.close()
+        ds_a.close()
+    local_ds.close()
+    shutil.rmtree(cache_root, ignore_errors=True)
+    return results
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     n = 256 if smoke else N_ITEMS
     per_shard = 64 if smoke else SAMPLES_PER_SHARD
@@ -182,6 +251,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
 
         shard_ds = ShardDataset(d / "shards")  # fresh mapping: cold mmap
         shard = _read_throughput(shard_ds, order)
+        # epoch 2 over the same warm mapping: crc verification is memoized
+        # per sample, so this pass pays no checksum work at all
+        shard_epoch2 = _read_throughput(shard_ds, order)
         shard_ds.close()
         shard_ds = ShardDataset(d / "shards", verify_crc=False)
         shard_nocrc = _read_throughput(shard_ds, order)
@@ -202,6 +274,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         shutil.rmtree(d / "cache", ignore_errors=True)
 
         http = _http_section(d / "shards", d / "http_caches")
+        peer = _peer_section(d / "shards", d / "peer_caches")
 
     speedup_cold = shard["items_per_sec"] / max(per_file["items_per_sec"], 1e-9)
     warm_speedup = remote_warm["items_per_sec"] / max(
@@ -216,6 +289,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         },
         "per_file": per_file,
         "shard_mmap": shard,
+        "shard_mmap_epoch2": shard_epoch2,
         "shard_mmap_nocrc": shard_nocrc,
         "remote_cold": {**remote_cold, "cache": cold_stats},
         "remote_warm": {
@@ -228,6 +302,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         "speedup_cold": speedup_cold,
         "remote_warm_over_cold": warm_speedup,
         **http,
+        **peer,
     }
     if not smoke:  # persist only full runs; smoke numbers are noise
         OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
@@ -236,12 +311,15 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     for tag, r in (
         ("per_file", per_file),
         ("shard_mmap", shard),
+        ("shard_mmap_epoch2", shard_epoch2),
         ("shard_mmap_nocrc", shard_nocrc),
         ("remote_cold", remote_cold),
         ("remote_warm", remote_warm),
         ("http_whole", http["http_whole"]),
         ("http_index_first", http["http_index_first"]),
         ("http_warm", http["http_warm"]),
+        ("origin_cold", peer["origin_cold"]),
+        ("peer_warm", peer["peer_warm"]),
     ):
         rows.append(
             (
@@ -267,6 +345,14 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
             "shards_http_warm_vs_local",
             0.0,
             f"x{http['http_warm_vs_local']:.2f}_warm_cache_vs_local_mmap",
+        )
+    )
+    rows.append(
+        (
+            "shards_peer_exchange",
+            0.0,
+            f"x{peer['peer_warm_over_origin_cold']:.2f}_peer_warm_vs_origin_cold"
+            f"_{'ZERO_ORIGIN' if peer['peer_zero_origin'] else 'ORIGIN_LEAK'}",
         )
     )
     return rows

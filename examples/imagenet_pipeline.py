@@ -124,6 +124,37 @@ def main() -> None:
                   f"({srv.requests} requests, "
                   f"{srv.bytes_served / 2**20:.1f}MB served)")
             print(pipe.format_stats())
+
+            # peer shard exchange: "rank A" above warmed its cache — serve
+            # it over a PeerShardServer and let "rank B" read the whole
+            # epoch through the origin → retry → peers → prefetcher stack.
+            # Warm data comes from the peer (whole shards and resident
+            # sparse spans); only what rank A never fetched falls through
+            # to the origin, and the dashboard grows a peers line.
+            from repro.data import PeerShardServer
+
+            with PeerShardServer(http_ds.prefetcher) as peer:
+                origin_before = srv.requests
+                peer_ds = ShardDataset(
+                    srv.url, cache_dir=d + "/peer_cache", peers=[peer.url]
+                )
+                pipe = build_image_loader(
+                    peer_ds, batch_size=16, hw=(112, 112), decode_concurrency=4,
+                    sampler=CheckpointableSampler(
+                        len(peer_ds),
+                        batch_size=1,
+                        seed=0,
+                        shard_sizes=peer_ds.shard_sizes,
+                        shard_window=48,
+                    ),
+                )
+                n_img, dt = consume(pipe)
+                print(f"\nSPDL (peer shards, rank B): {n_img / dt:.0f} img/s "
+                      f"({srv.requests - origin_before} origin requests, "
+                      f"{peer.stats()['bytes_served'] / 2**20:.1f}MB "
+                      f"peer-served)")
+                print(pipe.format_stats())
+                peer_ds.close()
             http_ds.close()
 
         # baselines: the seed per-file dataset through the same pipeline,

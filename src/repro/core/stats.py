@@ -93,6 +93,10 @@ class StageStats:
             bytes_fetched=int(cache.get("bytes_fetched", 0)),
             source_errors=int(cache.get("source_errors", 0)),
             source_retries=int(cache.get("source_retries", 0)),
+            promotions=int(cache.get("promotions", 0)),
+            peer_hits=int(cache.get("source_peer_hits", 0)),
+            peer_bytes=int(cache.get("source_peer_bytes", 0)),
+            origin_bytes=int(cache.get("source_origin_bytes", 0)),
         )
 
 
@@ -124,6 +128,13 @@ class StageStatsSnapshot:
     bytes_fetched: int = 0
     source_errors: int = 0
     source_retries: int = 0
+    # peer-exchange visibility (nonzero only behind a peer.TieredSource):
+    # fetches answered by warm peer ranks vs bytes that had to come from the
+    # origin object store, plus sparse→full cache promotions
+    promotions: int = 0
+    peer_hits: int = 0
+    peer_bytes: int = 0
+    origin_bytes: int = 0
 
 
 def format_stats(snaps: list[StageStatsSnapshot]) -> str:
@@ -162,9 +173,17 @@ def format_stats(snaps: list[StageStatsSnapshot]) -> str:
             )
             if s.bytes_fetched:
                 line += f" fetched={s.bytes_fetched / 2**20:.1f}MB"
+            if s.promotions:
+                line += f" promotions={s.promotions}"
             if s.source_errors or s.source_retries:
                 line += f" src_errors={s.source_errors} src_retries={s.source_retries}"
             lines.append(line)
+            if s.peer_hits or s.peer_bytes or s.origin_bytes:
+                lines.append(
+                    f"[{s.name}] peers: peer_hits={s.peer_hits}"
+                    f" peer_bytes={s.peer_bytes / 2**20:.1f}MB"
+                    f" origin_bytes={s.origin_bytes / 2**20:.1f}MB"
+                )
     return "\n".join(lines)
 
 

@@ -6,6 +6,8 @@ from .sampler import CheckpointableSampler
 from .shards import (
     HttpShardSource,
     LocalShardSource,
+    PeerShardServer,
+    PeerShardSource,
     RetryingSource,
     ShardCorruption,
     ShardDataset,
@@ -14,6 +16,7 @@ from .shards import (
     ShardWriter,
     SimulatedLatencySource,
     SourceUnavailable,
+    TieredSource,
     pack,
 )
 from .tokenizer import ByteTokenizer
@@ -33,6 +36,8 @@ __all__ = [
     "build_lm_loader",
     "HttpShardSource",
     "LocalShardSource",
+    "PeerShardServer",
+    "PeerShardSource",
     "RetryingSource",
     "ShardCorruption",
     "ShardDataset",
@@ -41,5 +46,6 @@ __all__ = [
     "ShardWriter",
     "SimulatedLatencySource",
     "SourceUnavailable",
+    "TieredSource",
     "pack",
 ]

@@ -58,7 +58,11 @@ in the background ``_PREFETCH_LOOKAHEAD`` samples ahead of the read stage,
 and the prefetcher's cache counters surface on the read stage's row in
 ``Pipeline.stats()``.  Pair with the sampler's shard-aware shuffle
 (``shard_sizes=dataset.shard_sizes``) so consecutive samples share shards
-and the cache actually hits.
+and the cache actually hits.  At multi-rank scale, construct the dataset
+with ``peers=[...]`` (other ranks' ``PeerShardServer`` URLs): a cache miss
+then tries the peers' warm caches before the origin, and the read stage's
+dashboard row grows ``peer_hits``/``origin_bytes`` (see
+``repro.data.shards.peer``).
 
 Checkpoint caveat: the lookahead wrapper holds up to ``_PREFETCH_LOOKAHEAD``
 already-drawn indices that the sampler has counted as handed out, so a

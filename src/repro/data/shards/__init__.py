@@ -59,9 +59,12 @@ Error contract: ``FileNotFoundError`` = object does not exist (permanent);
 Backends: ``LocalShardSource`` (directory), ``SimulatedLatencySource``
 (deterministic object-storage stand-in), ``HttpShardSource`` (real HTTP(S)
 with ``Range`` reads + connection reuse), ``RetryingSource`` (capped
-exponential backoff + jitter around any of the above); S3/GCS and
-peer-to-peer shard exchange are the next targets behind the same duck
-type.
+exponential backoff + jitter around any of the above), and the peer
+exchange tier (``peer.py``): ``PeerShardServer`` serves a rank's warm
+cache out, ``PeerShardSource``/``TieredSource`` consult peers' warm caches
+before the origin — the composed stack is origin → retry → peers →
+prefetcher (``ShardDataset(url, peers=[...])`` builds it).  S3/GCS-native
+sources are the next target behind the same duck type.
 
 Public surface
 --------------
@@ -71,10 +74,13 @@ Public surface
                                    (``dataset.py``; an ``http(s)://`` root
                                    builds the remote stack automatically);
 ``ShardPrefetcher`` + sources      async fetch, LRU-by-bytes local cache,
-                                   index-first sparse fetch
+                                   index-first sparse fetch, sparse→full
+                                   promotion
                                    (``prefetch.py``, ``sources.py``);
-``testing.serve_shards``           stdlib HTTP fixture with Range support
-                                   for tests/benchmarks.
+``PeerShardServer`` + tiers        peer-to-peer shard exchange between
+                                   data ranks (``peer.py``);
+``testing.serve_shards``           stdlib HTTP *origin* fixture with Range
+                                   support for tests/benchmarks.
 
 ``python -m repro.data.shards SRC DST`` packs an ``ArrayDataset``
 directory from the command line.
@@ -88,18 +94,28 @@ from .dataset import (
     write_manifest,
 )
 from .format import ShardCorruption, ShardIndex, ShardReader, ShardWriter
+from .peer import PeerMiss, PeerShardServer, PeerShardSource, TieredSource
 from .prefetch import (
     LocalShardSource,
     ShardPrefetcher,
     SimulatedLatencySource,
     SparseShardReader,
 )
-from .sources import HttpShardSource, RetryingSource, SourceUnavailable
+from .sources import (
+    HttpShardSource,
+    RangeNotSupported,
+    RetryingSource,
+    SourceUnavailable,
+)
 
 __all__ = [
     "MANIFEST_NAME",
     "HttpShardSource",
     "LocalShardSource",
+    "PeerMiss",
+    "PeerShardServer",
+    "PeerShardSource",
+    "RangeNotSupported",
     "RetryingSource",
     "ShardCorruption",
     "ShardDataset",
@@ -110,6 +126,7 @@ __all__ = [
     "SimulatedLatencySource",
     "SourceUnavailable",
     "SparseShardReader",
+    "TieredSource",
     "pack",
     "validate_shard_name",
     "write_manifest",

@@ -31,7 +31,11 @@ Two access modes:
   ``prefetcher.schedule``.  Passing an ``http(s)://`` URL as ``root`` is
   shorthand for the standard remote stack: ``HttpShardSource`` (range
   reads, connection reuse) wrapped in ``RetryingSource`` (backoff +
-  jitter) behind a ``ShardPrefetcher`` at ``cache_dir``.
+  jitter) behind a ``ShardPrefetcher`` at ``cache_dir``.  Adding
+  ``peers=[url, ...]`` (other ranks' ``PeerShardServer`` addresses) slots
+  a ``peer.TieredSource`` between retry and cache, so a local miss tries
+  the peers' warm caches before the origin — the full stack is
+  origin → retry → peers → prefetcher.
 
 Shard names from the manifest are validated (``validate_shard_name``) to a
 single bare path component before any cache path is built from them — the
@@ -111,12 +115,22 @@ class ShardDataset:
         cache_bytes: int = 1 << 30,
         http_timeout: float = 30.0,
         retries: int = 4,
+        peers: list[str] | None = None,
+        peer_timeout: float = 2.0,
     ):
         self._auto_cache_dir: pathlib.Path | None = None
         owns_prefetcher = False
+        if peers and prefetcher is not None:
+            raise TypeError(
+                "peers= belongs to the URL-mode stack; with your own "
+                "prefetcher, wrap its source in a peer.TieredSource instead"
+            )
+        if peers and not _is_url(root):
+            raise TypeError("peers= needs an http(s):// root (no origin to tier)")
         if prefetcher is None and _is_url(root):
             # remote mode from a bare URL: build the standard source stack —
-            # real HTTP range reads behind retry/backoff behind the cache
+            # origin HTTP range reads → retry/backoff → (optional) warm-peer
+            # tier → the prefetcher's local cache
             # (imports are local: prefetch.py imports this module)
             import tempfile
 
@@ -126,14 +140,17 @@ class ShardDataset:
             if cache_dir is None:
                 cache_dir = tempfile.mkdtemp(prefix="repro-shard-cache-")
                 self._auto_cache_dir = pathlib.Path(cache_dir)
-            prefetcher = ShardPrefetcher(
-                RetryingSource(
-                    HttpShardSource(root, timeout=http_timeout),
-                    max_retries=retries,
-                ),
-                cache_dir,
-                max_bytes=cache_bytes,
+            source = RetryingSource(
+                HttpShardSource(root, timeout=http_timeout),
+                max_retries=retries,
             )
+            if peers:
+                from .peer import PeerShardSource, TieredSource
+
+                source = TieredSource(
+                    source, PeerShardSource(peers, timeout=peer_timeout)
+                )
+            prefetcher = ShardPrefetcher(source, cache_dir, max_bytes=cache_bytes)
             owns_prefetcher = True
         self.root = root if _is_url(root) else pathlib.Path(root)
         self.prefetcher = prefetcher

@@ -24,11 +24,14 @@ On-disk layout (little-endian throughout)::
         crc32         u32  zlib.crc32 of the sample bytes
 
 CRC policy: the crc is computed over the *encoded* sample bytes at write
-time and verified on every read by default (``ShardReader.read(i)``); a
+time and verified on first read by default (``ShardReader.read(i)``); a
 mismatch raises ``ShardCorruption`` for that sample only, so a flipped bit
 surfaces as a per-sample hole in the pipeline rather than a dead shard.
-Callers doing their own integrity checking pass ``verify=False`` and the
-read is pure pointer math.
+Verification is memoized per sample (a bitset): the bytes behind a shard
+file never change, so epoch 2+ over a warm cache skips the crc pass it
+already paid — a failed check is never memoized, so a corrupt sample stays
+a per-sample hole on every read.  Callers doing their own integrity
+checking pass ``verify=False`` and the read is pure pointer math.
 
 Versioning: the header magic pins the major layout; ``version`` is the
 minor revision.  Readers reject a magic they don't know and a version newer
@@ -121,6 +124,23 @@ class ShardIndex:
     def index_nbytes(self) -> int:
         """Bytes a reader must download to learn the index (header + index)."""
         return HEADER_SIZE + self.n_samples * ENTRY_SIZE
+
+    def header_bytes(self) -> bytes:
+        """Re-serialize the 32-byte header.  A sparse cache entry holds only
+        the *parsed* index, so this is how a ``PeerShardServer`` answers a
+        peer's header ranged read without keeping the original blob."""
+        return _HEADER.pack(
+            MAGIC, FORMAT_VERSION, self.n_samples, self.index_off, self.payload_off
+        )
+
+    def index_bytes(self) -> bytes:
+        """Re-serialize the index region (16 B/sample) — the peer-serving
+        twin of ``header_bytes``."""
+        arr = np.empty(self.n_samples, dtype=_INDEX_DTYPE)
+        arr["off"] = self.offsets
+        arr["len"] = self.lengths
+        arr["crc"] = self.crcs
+        return arr.tobytes()
 
     @classmethod
     def parse(cls, header: bytes, index: bytes, name: str = "shard") -> "ShardIndex":
@@ -270,6 +290,7 @@ class ShardReader:
         if index_off + n * ENTRY_SIZE > size or payload_off > index_off:
             self._fail("truncated shard: index region extends past end of file")
         self.n_samples = n
+        self._verified = np.zeros(n, dtype=bool)  # per-sample crc memo
         index = np.frombuffer(self._buf, _INDEX_DTYPE, count=n, offset=index_off)
         self.offsets = index["off"]
         self.lengths = index["len"]
@@ -298,9 +319,26 @@ class ShardReader:
             raise IndexError(f"sample {i} out of range [0, {self.n_samples})")
         off, ln = int(self.offsets[i]), int(self.lengths[i])
         view = self._buf[off : off + ln]
-        if verify and zlib.crc32(view) != int(self.crcs[i]):
-            raise ShardCorruption(f"{self.path}: sample {i} failed crc32 check")
+        # crc memo: the mapping is immutable, so one successful verification
+        # covers every later read of the same sample (epoch 2+ of a warm
+        # cache is pure pointer math).  A mismatch is never memoized — a
+        # corrupt sample raises on every read, keeping the per-sample-hole
+        # semantics.  Racing first reads both verify; both set the bit.
+        if verify and not self._verified[i]:
+            if zlib.crc32(view) != int(self.crcs[i]):
+                raise ShardCorruption(f"{self.path}: sample {i} failed crc32 check")
+            self._verified[i] = True
         return view
+
+    def raw(self, start: int, length: int) -> memoryview:
+        """Zero-copy raw file bytes ``[start, start+length)`` — the ranged
+        read a ``PeerShardServer`` serves to other ranks (unverified here;
+        the consuming rank's reader applies the per-sample crc)."""
+        if start < 0 or length < 0 or start + length > len(self._mm):
+            raise ValueError(
+                f"{self.path}: range {start}+{length} outside {len(self._mm)}-byte shard"
+            )
+        return self._buf[start : start + length]
 
     def close(self) -> None:
         """Release the mapping.  Best-effort: if sample views are still

@@ -1,0 +1,471 @@
+"""Peer-to-peer shard exchange between data ranks.
+
+At multi-rank scale the object store is the last serialization point: every
+rank independently re-downloads the same shards.  This module turns N
+independent loaders into one cooperative cache — each rank serves its warm
+``ShardPrefetcher`` cache to its peers, and a cache miss consults those
+warm peers *before* anyone goes back to the origin.
+
+The composed read path (``ShardDataset(url, peers=[...])`` assembles it)::
+
+    origin (HttpShardSource)        authoritative, slow, retried
+      └─ RetryingSource             backoff + jitter on origin flakiness
+           └─ TieredSource          try warm peers first, then origin
+                ├─ PeerShardSource  round-robin, health-tracked, fast-fail
+                └─ (origin stack)
+                     └─ ShardPrefetcher   local disk cache + scheduler
+                          └─ PeerShardServer   serves THIS rank's cache out
+
+Tier contract per request: the prefetcher's local cache answers first (no
+network); on a miss the ``TieredSource`` asks each healthy peer once with a
+short fast-fail timeout — a peer answers only from memory/disk it already
+holds (whole shards, ranged reads, and resident sparse spans) and replies
+with a structured 404 miss (``X-Shard-Miss``) for anything else, so a peer
+miss costs one cheap round trip, never a cascading fetch.  Only when every
+peer misses or is unhealthy does the request fall through to the retrying
+origin.  Peers are an optimization tier: they are never authoritative for
+existence (``PeerShardSource`` raises ``PeerMiss``, not
+``FileNotFoundError``), and a dead or flaky peer is benched for
+``cooldown_s`` and silently bypassed rather than retried.
+
+Pieces:
+
+``PeerShardServer``  HTTP server over a live ``ShardPrefetcher``: whole
+                     shards (``200``) from full disk entries, ranged reads
+                     (``206``) from full entries *and* resident sparse
+                     spans (header/index regions of a sparse entry are
+                     re-serialized from its parsed index), structured
+                     ``404`` + ``X-Shard-Miss`` for non-resident data.
+                     Strictly read-only: lookups go through
+                     ``ShardPrefetcher.peek`` — serving a peer never
+                     triggers a fetch or perturbs LRU order on this rank.
+``PeerShardSource``  client half: a ``RemoteShardSource`` over a list of
+                     peer URLs — round-robin start, one attempt per healthy
+                     peer per request, failure cooldown, fast-fail timeout.
+``TieredSource``     composes ``PeerShardSource`` in front of any origin
+                     source; counts ``peer_hits`` / ``peer_bytes`` /
+                     ``origin_bytes`` which flow through
+                     ``ShardPrefetcher.stats()`` (``source_``-prefixed)
+                     into ``StageStatsSnapshot`` and ``format_stats``.
+
+Sparse→full promotion (``prefetch.py``) closes the loop: a sparse entry
+that demand-fetches past ``promote_threshold`` upgrades to a whole-shard
+disk entry — which this server can then serve whole to every other rank.
+
+``testing.ShardHTTPServer`` remains the *origin* fixture (serving a shard
+directory); this module is the production peer tier grown out of it.
+"""
+
+from __future__ import annotations
+
+import http.client
+import http.server
+import itertools
+import re
+import threading
+import time
+import urllib.parse
+
+from .dataset import validate_shard_name
+from .format import ShardReader
+from .sources import HttpShardSource, RangeNotSupported, SourceUnavailable
+
+_RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
+
+#: response header naming why a peer could not serve a request
+MISS_HEADER = "X-Shard-Miss"
+
+
+class PeerMiss(Exception):
+    """No peer could serve the request (not resident anywhere, or every
+    peer is unhealthy).  The tiered source falls through to the origin on
+    this — it never reaches the read path, and it never means the object
+    does not exist (only the origin is authoritative for existence)."""
+
+
+# ---------------------------------------------------------------------------
+# serving side
+# ---------------------------------------------------------------------------
+class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"  # keep-alive: peers reuse connections
+    server_version = "ShardPeer/1"
+
+    def setup(self) -> None:
+        super().setup()
+        with self.server.lock:
+            self.server.connections += 1
+
+    def _send(self, status: int, body, extra: dict | None = None) -> None:
+        self.send_response(status)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+        with self.server.lock:
+            self.server.bytes_served += len(body)
+
+    def _miss(self, why: str) -> None:
+        """Structured miss: 404 + X-Shard-Miss so a client (or a human with
+        curl) can tell 'peer doesn't hold this' apart from a real origin
+        404 — and observability can count sparse vs absent misses."""
+        with self.server.lock:
+            self.server.misses += 1
+        self._send(404, why.encode(), {MISS_HEADER: why})
+
+    def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        srv = self.server
+        with srv.lock:
+            srv.requests += 1
+        name = urllib.parse.unquote(self.path.lstrip("/"))
+        try:
+            validate_shard_name(name)
+        except ValueError:
+            self._miss("bad-name")  # peers only ever serve bare shard names
+            return
+        reader = srv.prefetcher.peek(name)  # never fetches, never touches LRU
+        if reader is None:
+            self._miss("absent")
+            return
+        range_header = self.headers.get("Range")
+        try:
+            if range_header:
+                self._serve_range(reader, range_header.strip())
+            else:
+                self._serve_whole(reader)
+        except Exception:
+            # reader torn down mid-serve (prefetcher closed, entry evicted
+            # and unmapped): a miss, not a 500 — the client has the origin
+            self._miss("unavailable")
+
+    def _serve_whole(self, reader) -> None:
+        if not isinstance(reader, ShardReader):
+            # sparse entries cannot answer a whole-shard GET (only the
+            # origin holds the full payload until promotion lands)
+            self._miss("sparse")
+            return
+        body = reader.raw(0, reader.nbytes)
+        with self.server.lock:
+            self.server.served_whole += 1
+        self._send(200, body)
+
+    def _serve_range(self, reader, range_header: str) -> None:
+        m = _RANGE_RE.match(range_header)
+        if m is None:
+            self._miss("bad-range")
+            return
+        total = (
+            reader.nbytes
+            if isinstance(reader, ShardReader)
+            else reader.index.total_bytes
+        )
+        start = int(m.group(1))
+        end = int(m.group(2)) if m.group(2) is not None else total - 1
+        if start >= total:
+            self._send(416, b"", {"Content-Range": f"bytes */{total}"})
+            return
+        end = min(end, total - 1)
+        length = end - start + 1
+        body = reader.raw(start, length)
+        if body is None:  # sparse entry: the range is not resident
+            self._miss("cold-range")
+            return
+        with self.server.lock:
+            self.server.served_ranges += 1
+        self._send(206, body, {"Content-Range": f"bytes {start}-{end}/{total}"})
+
+    def log_message(self, *args) -> None:  # quiet: callers read counters
+        pass
+
+
+class PeerShardServer(http.server.ThreadingHTTPServer):
+    """Serves a live ``ShardPrefetcher``'s warm cache to peer data ranks.
+
+    Read-only window over the cache: whole shards and ranged reads from
+    full disk entries, ranged reads of resident spans (plus re-serialized
+    header/index regions) from sparse entries, and a structured
+    ``404``/``X-Shard-Miss`` for everything else.  Never triggers a fetch.
+
+    Usage (typically one per rank, next to the rank's prefetcher)::
+
+        server = PeerShardServer(prefetcher).start()   # or: with ... as server:
+        ...hand server.url to the other ranks' ``peers=[...]``...
+        server.close()
+
+    Counters (under ``lock``, also via ``stats()``): ``requests``,
+    ``misses``, ``served_whole``, ``served_ranges``, ``bytes_served``,
+    ``connections``.
+    """
+
+    daemon_threads = True
+
+    def __init__(self, prefetcher, *, host: str = "127.0.0.1", port: int = 0):
+        self.prefetcher = prefetcher
+        self.lock = threading.Lock()
+        self.requests = 0
+        self.misses = 0
+        self.served_whole = 0
+        self.served_ranges = 0
+        self.bytes_served = 0
+        self.connections = 0
+        self._thread: threading.Thread | None = None
+        super().__init__((host, port), _PeerRequestHandler)
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "PeerShardServer":
+        """Serve in a daemon thread; returns self for chaining."""
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self.serve_forever, name="peer-shard-server", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stats(self) -> dict[str, int]:
+        with self.lock:
+            return {
+                "requests": self.requests,
+                "misses": self.misses,
+                "served_whole": self.served_whole,
+                "served_ranges": self.served_ranges,
+                "bytes_served": self.bytes_served,
+                "connections": self.connections,
+            }
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self.shutdown()  # only valid once serve_forever is running
+            self._thread.join(timeout=5)
+            self._thread = None
+        self.server_close()
+
+    def __enter__(self) -> "PeerShardServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# client side
+# ---------------------------------------------------------------------------
+class PeerShardSource:
+    """Reads from peer ranks' warm caches: round-robin, health-tracked,
+    fast-fail.
+
+    One ``HttpShardSource`` per peer (keep-alive reuse, short ``timeout`` —
+    a peer on the same fabric answers in milliseconds or not at all).  Each
+    request starts at a rotating peer and tries each *healthy* peer at most
+    once: a structured 404 miss moves on to the next peer; a transport
+    error benches the peer for ``cooldown_s`` (a dead rank must not add its
+    timeout to every fetch).  Exhausting all peers raises ``PeerMiss`` —
+    never ``FileNotFoundError``, because peers are not authoritative for
+    existence.
+    """
+
+    def __init__(
+        self,
+        peer_urls,
+        *,
+        timeout: float = 2.0,
+        cooldown_s: float = 5.0,
+        headers: dict[str, str] | None = None,
+        clock=time.monotonic,
+    ):
+        urls = list(peer_urls)
+        if not urls:
+            raise ValueError("PeerShardSource needs at least one peer URL")
+        self._sources = [
+            HttpShardSource(u, timeout=timeout, headers=headers) for u in urls
+        ]
+        self.peer_urls = [s.root_url for s in self._sources]
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._down_until = [0.0] * len(self._sources)
+        self._rr = itertools.count()
+        self.hits = 0
+        self.misses = 0  # requests no peer could serve
+        self.errors = 0  # transport failures observed (benching events)
+        self.bytes_fetched = 0
+
+    def _try_each(self, op, what: str) -> bytes:
+        n = len(self._sources)
+        with self._lock:
+            start = next(self._rr) % n
+            now = self._clock()
+            eligible = [
+                (start + k) % n
+                for k in range(n)
+                if self._down_until[(start + k) % n] <= now
+            ]
+        for i in eligible:
+            try:
+                data = op(self._sources[i])
+            except FileNotFoundError:
+                continue  # structured miss: this peer doesn't hold it
+            except (
+                SourceUnavailable,
+                OSError,
+                http.client.HTTPException,
+                # ValueError: the peer answered with malformed data — a
+                # short 206 or a 416 from a stale/torn copy under the same
+                # name.  Peers are never authoritative, so that copy must
+                # read as a benching event, not crash the read path.
+                ValueError,
+            ):
+                # dead/flaky/stale peer: bench it so its timeout stops
+                # taxing every subsequent fetch; the origin tier covers it
+                with self._lock:
+                    self.errors += 1
+                    self._down_until[i] = self._clock() + self.cooldown_s
+                continue
+            with self._lock:
+                self.hits += 1
+                self.bytes_fetched += len(data)
+            return data
+        with self._lock:
+            self.misses += 1
+        raise PeerMiss(f"no peer could serve {what}")
+
+    # -- RemoteShardSource protocol ----------------------------------------
+    def fetch(self, name: str) -> bytes:
+        return self._try_each(lambda s: s.fetch(name), name)
+
+    def fetch_range(self, name: str, start: int, length: int) -> bytes:
+        def op(src):
+            try:
+                return src.fetch_range(name, start, length)
+            except RangeNotSupported as e:
+                # defensive (a proxy in front of a peer answered 200): the
+                # body is in hand, serve the slice — still a peer hit
+                return bytes(memoryview(e.body)[start : start + length])
+
+        data = self._try_each(op, f"{name}[{start}:+{length}]")
+        if len(data) != length:
+            # a torn peer copy must read as a miss, not corrupt the range
+            raise PeerMiss(f"peer returned {len(data)} bytes for {name}+{length}")
+        return data
+
+    # -- visibility / lifecycle --------------------------------------------
+    def stats(self) -> dict[str, float]:
+        with self._lock:
+            now = self._clock()
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "errors": self.errors,
+                "bytes_fetched": self.bytes_fetched,
+                "peers": len(self._sources),
+                "peers_down": sum(1 for t in self._down_until if t > now),
+            }
+
+    def close(self) -> None:
+        for src in self._sources:
+            src.close()
+
+
+class TieredSource:
+    """Warm peers in front of an origin source — the middle of the
+    ``origin → retry → peers → prefetcher`` stack.
+
+    Every ``fetch``/``fetch_range`` first asks ``PeerShardSource`` (cheap,
+    fast-fail, may miss) and falls through to ``origin`` (authoritative,
+    retried by its own ``RetryingSource`` wrapper) on ``PeerMiss``.  A
+    ``RangeNotSupported`` from the origin propagates untouched so the
+    prefetcher can install the whole body it carries.
+
+    ``fetch_range`` is exposed iff the origin has it (the prefetcher's
+    protocol sniffing must see the stack exactly as it would see the bare
+    origin); ``range_supported`` mirrors the origin's view.
+
+    Counters — ``peer_hits`` / ``peer_misses`` / ``peer_bytes`` /
+    ``origin_fetches`` / ``origin_bytes`` — flow through
+    ``ShardPrefetcher.stats()`` as ``source_peer_hits`` etc. into
+    ``StageStatsSnapshot`` and the ``format_stats`` dashboard.
+    """
+
+    def __init__(self, origin, peers):
+        self.origin = origin
+        self.peers = (
+            peers if isinstance(peers, PeerShardSource) else PeerShardSource(peers)
+        )
+        self._lock = threading.Lock()
+        self.peer_hits = 0
+        self.peer_misses = 0
+        self.peer_bytes = 0
+        self.origin_fetches = 0
+        self.origin_bytes = 0
+        # mirror the origin's protocol surface exactly (see class docstring)
+        if callable(getattr(origin, "fetch_range", None)):
+            self.fetch_range = self._fetch_range
+
+    def _peer_try(self, op) -> bytes | None:
+        try:
+            data = op(self.peers)
+        except PeerMiss:
+            with self._lock:
+                self.peer_misses += 1
+            return None
+        with self._lock:
+            self.peer_hits += 1
+            self.peer_bytes += len(data)
+        return data
+
+    # -- RemoteShardSource protocol ----------------------------------------
+    def fetch(self, name: str) -> bytes:
+        data = self._peer_try(lambda p: p.fetch(name))
+        if data is not None:
+            return data
+        data = self.origin.fetch(name)
+        with self._lock:
+            self.origin_fetches += 1
+            self.origin_bytes += len(data)
+        return data
+
+    def _fetch_range(self, name: str, start: int, length: int) -> bytes:
+        data = self._peer_try(lambda p: p.fetch_range(name, start, length))
+        if data is not None:
+            return data
+        try:
+            data = self.origin.fetch_range(name, start, length)
+        except RangeNotSupported as e:
+            with self._lock:
+                self.origin_fetches += 1
+                self.origin_bytes += len(e.body)  # the whole body crossed the wire
+            raise
+        with self._lock:
+            self.origin_fetches += 1
+            self.origin_bytes += len(data)
+        return data
+
+    @property
+    def range_supported(self) -> bool:
+        return bool(getattr(self.origin, "range_supported", True))
+
+    # -- visibility / lifecycle --------------------------------------------
+    def stats(self) -> dict[str, float]:
+        origin_stats = getattr(self.origin, "stats", None)
+        out = dict(origin_stats()) if callable(origin_stats) else {}
+        with self._lock:
+            out.update(
+                peer_hits=self.peer_hits,
+                peer_misses=self.peer_misses,
+                peer_bytes=self.peer_bytes,
+                origin_fetches=self.origin_fetches,
+                origin_bytes=self.origin_bytes,
+            )
+        peer_stats = self.peers.stats()
+        out["peer_errors"] = peer_stats.get("errors", 0)
+        out["peers_down"] = peer_stats.get("peers_down", 0)
+        return out
+
+    def close(self) -> None:
+        self.peers.close()
+        origin_close = getattr(self.origin, "close", None)
+        if callable(origin_close):
+            origin_close()

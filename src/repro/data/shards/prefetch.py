@@ -38,6 +38,28 @@ only their (coalesced) ranges are fetched and the cache entry is a
 and a read of an un-fetched sample demand-fetches exactly that range.
 Otherwise (or with no hints) the whole shard is fetched to disk as before.
 
+Sparse→full promotion
+---------------------
+A sparse entry that keeps paying demand round trips was mis-predicted: once
+its cumulative *demand-fetched* bytes (reads outside the hinted window, not
+background top-ups) cross ``promote_threshold`` of the payload, the
+prefetcher schedules ONE whole-shard GET in the background and swaps the
+entry for a normal disk cache entry — subsequent reads are mmap slices, and
+a ``PeerShardServer`` can then serve the whole shard to other ranks.  The
+swap is an install, not a teardown: the displaced sparse reader is never
+closed (an in-flight demand read may be holding it), just dropped, and the
+``_promoting`` guard makes the upgrade a single fetch no matter how many
+demand reads cross the threshold concurrently.
+
+A Range-ignoring origin (a ranged read answered with a whole-shard ``200``,
+surfaced by the source as ``RangeNotSupported`` carrying the body) takes
+the same install path: the body that already crossed the wire becomes the
+disk entry — exactly one wire fetch, never download-slice-discard-refetch.
+
+Tier composition: with ``peer.TieredSource`` as the source, every fetch
+here first consults warm peer ranks and only then the retrying origin —
+see ``peer.py`` for the full origin → retry → peers → prefetcher stack.
+
 Security: shard names come from a *remote-controlled* manifest and are
 joined to a local cache directory, so every entry point validates them as
 a single path component (``validate_shard_name``) — a hostile manifest
@@ -53,9 +75,11 @@ Stats (``stats()``) feed the pipeline dashboard: ``hits``/``misses`` per
 *reader* request (a prefetched shard counts as a hit — that is the point),
 ``evictions``, ``bytes_cached``, ``prefetch_depth``, cumulative
 ``fetch_time`` seconds downloading, wire-level ``bytes_fetched`` /
-``index_fetches`` / ``range_fetches``, and — when the source exposes its
-own ``stats()`` (e.g. ``RetryingSource``) — every source counter prefixed
-``source_`` (``source_errors``, ``source_retries``, ...).
+``index_fetches`` / ``range_fetches``, sparse→full ``promotions``, and —
+when the source exposes its own ``stats()`` (e.g. ``RetryingSource`` or
+``peer.TieredSource``) — every source counter prefixed ``source_``
+(``source_errors``, ``source_retries``, ``source_peer_hits``,
+``source_origin_bytes``, ...).
 """
 
 from __future__ import annotations
@@ -70,6 +94,8 @@ import zlib
 from collections import OrderedDict
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 
+import numpy as np
+
 from .dataset import MANIFEST_NAME, validate_shard_name
 from .format import (
     ENTRY_SIZE,
@@ -79,6 +105,7 @@ from .format import (
     ShardReader,
     parse_shard_header,
 )
+from .sources import RangeNotSupported
 
 
 class LocalShardSource:
@@ -182,6 +209,10 @@ class SparseShardReader:
         self._bytes_held = 0
         self._closed = False
         self._on_grow = None  # installed by the owning ShardPrefetcher
+        self._verified = np.zeros(index.n_samples, dtype=bool)  # crc memo
+        #: wire bytes pulled by demand ``read()`` misses (NOT hinted ensure
+        #: top-ups) — the mis-prediction signal sparse→full promotion watches
+        self.demand_bytes = 0
 
     # -- ShardReader-compatible surface ------------------------------------
     @property
@@ -306,15 +337,45 @@ class SparseShardReader:
             with self._lock:
                 if self._closed:
                     raise RuntimeError(f"SparseShardReader({self.name}) is closed")
+                # demand_bytes counts the wire bytes this miss cost even if
+                # a racing read landed the same range first — promotion
+                # watches what demand reads actually paid, not residency
+                self.demand_bytes += len(data)
                 view = self._find_locked(off, ln)  # demand race: keep winner
                 if view is None:
                     grown = self._insert_locked(off, data)
                     view = self._find_locked(off, ln)  # nesting-free: found
             if grown and self._on_grow is not None:
                 self._on_grow(grown)
-        if verify and zlib.crc32(view) != int(self.index.crcs[i]):
-            raise ShardCorruption(f"{self.name}: sample {i} failed crc32 check")
+        # crc memo (see ShardReader.read): spans are immutable once resident,
+        # so one verification covers every later read; a mismatch is never
+        # memoized, keeping the per-sample-hole corruption semantics
+        if verify and not self._verified[i]:
+            if zlib.crc32(view) != int(self.index.crcs[i]):
+                raise ShardCorruption(f"{self.name}: sample {i} failed crc32 check")
+            self._verified[i] = True
         return view
+
+    def raw(self, start: int, length: int) -> memoryview | None:
+        """Resident raw shard bytes ``[start, start+length)`` or ``None``
+        (the ``PeerShardServer`` ranged-read path).  The header and index
+        regions are re-serialized from the parsed index — a sparse entry
+        can always answer the index-first reads a peer's prefetcher issues;
+        a payload range is served iff one resident span covers it whole."""
+        if start < 0 or length < 0:
+            return None
+        with self._lock:
+            if self._closed:
+                return None
+            if start + length <= HEADER_SIZE:
+                return memoryview(self.index.header_bytes())[start : start + length]
+            if start >= self.index.index_off:
+                raw = self.index.index_bytes()
+                rel = start - self.index.index_off
+                if rel + length <= len(raw):
+                    return memoryview(raw)[rel : rel + length]
+                return None
+            return self._find_locked(start, length)
 
     def close(self) -> None:
         with self._lock:
@@ -352,6 +413,7 @@ class ShardPrefetcher:
         max_inflight: int = 2,
         index_first: bool | str = "auto",
         sparse_threshold: float = 0.75,
+        promote_threshold: float | None = 0.5,
         coalesce_gap: int = 1 << 16,
     ):
         if max_bytes < 1:
@@ -372,6 +434,9 @@ class ShardPrefetcher:
                     f"({type(source).__name__} has none)"
                 )
         self.sparse_threshold = sparse_threshold
+        #: sparse→full promotion trigger: demand-fetched bytes as a fraction
+        #: of the payload (None disables promotion)
+        self.promote_threshold = promote_threshold
         self.coalesce_gap = coalesce_gap
         self._pool = ThreadPoolExecutor(
             max_workers=max_inflight, thread_name_prefix="shard-prefetch"
@@ -384,11 +449,17 @@ class ShardPrefetcher:
         self._inflight: dict[str, Future] = {}
         self._indexes: dict[str, ShardIndex] = {}  # tiny: 16 B/sample arrays
         self._ensuring: set[str] = set()  # sparse top-ups in flight
+        self._promoting: set[str] = set()  # sparse→full upgrades in flight
+        #: cache-path writes running OUTSIDE _inflight/_promoting coverage
+        #: (the demand-read RangeNotSupported install); counted because two
+        #: demand reads on one shard can overlap
+        self._writing: dict[str, int] = {}
         self._bg_inflight = 0  # pool fetches only (demand fetches excluded)
         self._closed = False
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.promotions = 0
         self.bytes_cached = 0
         self.bytes_fetched = 0  # wire bytes: payloads + indexes + ranges
         self.index_fetches = 0
@@ -405,14 +476,52 @@ class ShardPrefetcher:
 
     # -- fetch machinery ----------------------------------------------------
     def _range_fetch(self, name: str, start: int, length: int) -> bytes:
-        data = self.source.fetch_range(name, start, length)
+        with self._lock:
+            # Owner-closed guard: a sparse reader that outlived the cache
+            # (evicted, or handed out mid-shutdown) must not demand-fetch
+            # into a closed/closing source — that surfaces backend socket
+            # errors instead of the documented shutdown error.
+            if self._closed:
+                raise RuntimeError("ShardPrefetcher is closed")
+            entry = self._cached.get(name)
+        if entry is not None and isinstance(entry[0], ShardReader):
+            # A full copy landed since this sparse reader was built
+            # (promotion, or a Range-ignoring origin below): serve the range
+            # locally — zero wire bytes, so no fetch counters move.
+            return bytes(entry[0].raw(start, length))
+        try:
+            data = self.source.fetch_range(name, start, length)
+        except RangeNotSupported as e:
+            # the server ignored Range and the whole shard arrived: install
+            # it as the disk entry (displacing the sparse one) and serve the
+            # requested slice from the body in hand — one wire fetch, not
+            # download-slice-discard-refetch
+            with self._lock:
+                self.range_fetches += 1
+                self.bytes_fetched += len(e.body)
+                # cover the path write: this runs on a demand reader's
+                # thread, outside _inflight/_promoting, so a concurrent
+                # eviction's unlink must be told the file is being replaced
+                self._writing[name] = self._writing.get(name, 0) + 1
+            try:
+                reader = self._persist(name, e.body)
+            finally:
+                with self._lock:
+                    left = self._writing[name] - 1
+                    if left:
+                        self._writing[name] = left
+                    else:
+                        del self._writing[name]
+            self._replace_with_full(name, reader)
+            data = bytes(memoryview(e.body)[start : start + length])
+        else:
+            with self._lock:
+                self.range_fetches += 1
+                self.bytes_fetched += len(data)
         if len(data) != length:
             raise ShardCorruption(
                 f"{name}: range {start}+{length} returned {len(data)} bytes"
             )
-        with self._lock:
-            self.range_fetches += 1
-            self.bytes_fetched += len(data)
         return data
 
     def _get_index(self, name: str) -> ShardIndex:
@@ -439,6 +548,10 @@ class ShardPrefetcher:
         data = self.source.fetch(name)
         with self._lock:
             self.bytes_fetched += len(data)
+        return self._persist(name, data)
+
+    def _persist(self, name: str, data: bytes) -> ShardReader:
+        """Stage ``data`` durably under the cache dir and open a reader."""
         path = self.cache_dir / name
         # unique temp per fetch: two racing fetches of one shard must not
         # share a staging file (the loser's replace() would find it gone)
@@ -470,7 +583,16 @@ class ShardPrefetcher:
                 and self.index_first
                 and getattr(self.source, "range_supported", True)
             ):
-                idx = self._get_index(name)
+                try:
+                    idx = self._get_index(name)
+                except RangeNotSupported as e:
+                    # the index ranged read came back as the whole shard:
+                    # the fetch is already done — persist the body in hand
+                    # (one wire fetch; range_supported is now False, so
+                    # later shards skip straight to _fetch_full)
+                    with self._lock:
+                        self.bytes_fetched += len(e.body)
+                    return self._persist(name, e.body)
                 wanted = sorted(
                     {int(s) for s in samples if 0 <= int(s) < idx.n_samples}
                 )
@@ -512,10 +634,17 @@ class ShardPrefetcher:
             # Re-check under the lock first: the shard may have been
             # re-fetched since we evicted it, in which case the file on
             # disk is the NEWER copy and belongs to that install (every
-            # path write is covered by _inflight membership until its
-            # install lands in _cached, so this check is race-free).
+            # path write is covered by _inflight — or _promoting for a
+            # sparse→full upgrade, or _writing for a demand-read whole-body
+            # install — until the written file is safely open, so this
+            # check is race-free).
             with self._lock:
-                if old_name in self._cached or old_name in self._inflight:
+                if (
+                    old_name in self._cached
+                    or old_name in self._inflight
+                    or old_name in self._promoting
+                    or old_name in self._writing
+                ):
                     continue
                 (self.cache_dir / old_name).unlink(missing_ok=True)
 
@@ -540,9 +669,10 @@ class ShardPrefetcher:
         self._unlink_evicted(evicted)
 
     def _sparse_grow(self, name: str, reader: SparseShardReader, delta: int) -> None:
-        """A sparse entry fetched more payload: keep ``bytes_cached`` honest
-        and re-run eviction.  No-op if the entry was already evicted (the
-        orphaned reader's spans are refcount-reclaimed on their own)."""
+        """A sparse entry fetched more payload: keep ``bytes_cached`` honest,
+        re-run eviction, and check the sparse→full promotion trigger.
+        No-op if the entry was already evicted (the orphaned reader's spans
+        are refcount-reclaimed on their own)."""
         evicted: list[str] = []
         with self._lock:
             entry = self._cached.get(name)
@@ -551,7 +681,67 @@ class ShardPrefetcher:
             self._cached[name] = (reader, entry[1] + delta)
             self.bytes_cached += delta
             evicted = self._evict_over_budget_locked()
+            # Promotion trigger: demand reads (not hinted top-ups) have paid
+            # promote_threshold of the payload in round trips — the sparse
+            # bet lost, so upgrade via ONE whole-shard GET.  The _promoting
+            # guard makes this deterministic under concurrent demand reads:
+            # however many cross the threshold at once, exactly one fetch.
+            if (
+                self.promote_threshold is not None
+                and not self._closed
+                and name in self._cached  # eviction above may have taken it
+                and name not in self._promoting
+                and reader.demand_bytes
+                >= self.promote_threshold * max(reader.index.payload_bytes, 1)
+            ):
+                self._promoting.add(name)
+                self._bg_inflight += 1
+                self._pool.submit(self._promote_task, name, reader)
         self._unlink_evicted(evicted)
+
+    def _replace_with_full(self, name: str, reader: ShardReader, *, promotion: bool = False) -> None:
+        """Install a freshly-persisted full reader over ``name``'s current
+        entry (typically its sparse predecessor).  The displaced sparse
+        reader is NOT closed — the caller is often one of its in-flight
+        demand reads — just dropped; refcounts reclaim its spans."""
+        evicted: list[str] = []
+        with self._lock:
+            if self._closed:
+                # shutdown race: don't cache, but leave the reader open for
+                # the caller (reclaimed by refcount once dropped)
+                return
+            entry = self._cached.get(name)
+            if entry is not None and isinstance(entry[0], ShardReader):
+                reader.close()  # lost the race to another full copy
+                return
+            self.bytes_cached += reader.nbytes - (entry[1] if entry else 0)
+            self._cached[name] = (reader, reader.nbytes)
+            self._cached.move_to_end(name)  # the shard is hot: refresh LRU
+            if promotion:
+                self.promotions += 1
+            evicted = self._evict_over_budget_locked()
+        self._unlink_evicted(evicted)
+
+    def _promote_task(self, name: str, sparse_reader: SparseShardReader) -> None:
+        """Sparse→full promotion (pool thread): one whole-shard GET turns a
+        demand-chatty sparse entry into a normal disk entry — which a
+        ``PeerShardServer`` can then serve whole to other ranks."""
+        try:
+            with self._lock:
+                entry = self._cached.get(name)
+                live = (
+                    not self._closed
+                    and entry is not None
+                    and entry[0] is sparse_reader
+                )
+            if live:
+                self._replace_with_full(name, self._fetch_full(name), promotion=True)
+        except Exception:
+            pass  # advisory: the sparse entry keeps serving; demand reads may retrigger
+        finally:
+            with self._lock:
+                self._promoting.discard(name)
+                self._bg_inflight -= 1
 
     def _fetch_and_install(self, name: str, samples=None):
         try:
@@ -674,6 +864,18 @@ class ShardPrefetcher:
             with self._lock:
                 self._inflight.pop(name, None)
 
+    def peek(self, name: str) -> ShardReader | SparseShardReader | None:
+        """Non-mutating cache lookup — the ``PeerShardServer`` read path.
+
+        Returns the resident reader or ``None``: no hit/miss accounting, no
+        LRU refresh, and **never a fetch** — a peer asking for a shard must
+        not make THIS rank download anything on its behalf."""
+        with self._lock:
+            if self._closed:
+                return None
+            entry = self._cached.get(name)
+            return entry[0] if entry is not None else None
+
     # -- visibility / lifecycle --------------------------------------------
     @property
     def prefetch_depth(self) -> int:
@@ -695,6 +897,7 @@ class ShardPrefetcher:
                 "bytes_fetched": self.bytes_fetched,
                 "index_fetches": self.index_fetches,
                 "range_fetches": self.range_fetches,
+                "promotions": self.promotions,
                 "sparse_shards": sum(
                     1
                     for r, _ in self._cached.values()

@@ -28,9 +28,10 @@ Backends here:
                       ``ShardPrefetcher.stats()`` into the pipeline
                       dashboard (``source_errors`` / ``source_retries``).
 
-S3/GCS-native backends and a peer-to-peer shard exchange between data
-ranks are the next targets (see ROADMAP) — both slot behind the same two
-methods.
+The peer-to-peer shard exchange (``peer.py``: ``PeerShardSource`` reading
+other ranks' warm caches, ``TieredSource`` composing peers in front of the
+retrying origin) sits behind the same two methods; S3/GCS-native backends
+are the next target (see ROADMAP).
 """
 
 from __future__ import annotations
@@ -47,6 +48,28 @@ class SourceUnavailable(OSError):
     timeout).  Distinct from ``FileNotFoundError``, which is permanent."""
 
 
+class RangeNotSupported(Exception):
+    """A ranged GET came back as a whole-object ``200`` — the server ignored
+    the ``Range`` header and the ENTIRE body crossed the wire.
+
+    Carries that body so the caller can *install* the already-downloaded
+    object instead of keeping a slice and discarding the rest (which would
+    force the same bytes over the wire again on the next read — the
+    prefetcher turns this into a normal whole-shard cache entry, so a
+    Range-ignoring origin costs exactly one wire fetch per shard).
+
+    Deliberately not an ``OSError``: nothing failed, a retry would download
+    the whole body again, so ``RetryingSource`` must let it propagate.
+    """
+
+    def __init__(self, name: str, body: bytes):
+        super().__init__(
+            f"{name}: server ignored Range ({len(body)}-byte whole body returned)"
+        )
+        self.name = name
+        self.body = body
+
+
 class HttpShardSource:
     """Fetches shards over HTTP(S) with connection reuse and range reads.
 
@@ -58,10 +81,11 @@ class HttpShardSource:
 
     ``fetch_range`` sends ``Range: bytes=a-b``.  A server that answers
     ``206 Partial Content`` gives us the true ranged read; a server that
-    ignores the header and answers ``200`` still works — the full body is
-    sliced locally (correct, just not cheaper), and ``range_supported``
-    flips to False so callers can see ranged reads are not actually saving
-    bytes on the wire.
+    ignores the header and answers ``200`` moved the whole body over the
+    wire — ``fetch_range`` then raises ``RangeNotSupported`` carrying that
+    body (so the caller can install it instead of re-downloading) and flips
+    ``range_supported`` to False so callers stop issuing ranged reads that
+    do not save wire bytes.
     """
 
     def __init__(
@@ -172,13 +196,15 @@ class HttpShardSource:
         if resp.status == 404:
             raise FileNotFoundError(f"{self.root_url}/{name}: 404")
         if resp.status == 200:
-            # server ignored the Range header: slice the full body locally.
-            # Correct, but the WHOLE body crossed the wire — flip
-            # range_supported so the prefetcher stops pretending ranged
-            # reads are cheap, and count the true wire bytes.
+            # server ignored the Range header: the WHOLE body crossed the
+            # wire.  Flip range_supported so the prefetcher stops pretending
+            # ranged reads are cheap, count the true wire bytes, and hand
+            # the body up — the caller installs it rather than re-fetching.
             with self._lock:
                 self.range_supported = False
-            data = body[start : start + length]
+                self.range_fetches += 1
+                self.bytes_fetched += len(body)
+            raise RangeNotSupported(name, body)
         elif resp.status == 206:
             data = body
         elif resp.status == 416:
@@ -191,7 +217,7 @@ class HttpShardSource:
             )
         with self._lock:
             self.range_fetches += 1
-            self.bytes_fetched += len(body)  # wire truth, not the local slice
+            self.bytes_fetched += len(body)
         if len(data) != length:
             # shorter than the index promised: the remote object is torn or
             # being overwritten — not something a retry fixes
@@ -238,6 +264,8 @@ class RetryingSource:
 
     ``fetch_range`` is exposed **iff the inner source has it**, so wrapping
     never changes what the prefetcher's protocol sniffing sees.
+    ``RangeNotSupported`` is neither an error nor retryable (the body
+    already arrived) — it propagates untouched.
     """
 
     def __init__(

@@ -1,5 +1,8 @@
-"""In-process HTTP shard server: the fixture behind HTTP-backend tests,
-``benchmarks/bench_shards.py``, and ``examples/imagenet_pipeline.py``.
+"""In-process HTTP shard server: the *origin* fixture behind HTTP-backend
+tests, ``benchmarks/bench_shards.py``, and ``examples/imagenet_pipeline.py``
+(it serves a shard *directory*, modeling the object store; the production
+peer tier that serves a live prefetcher's warm cache grew out of this into
+``peer.PeerShardServer``).
 
 Pure stdlib (``http.server``) so the suite needs no extra dependency, but
 with the two behaviors a real object-store front end has that

@@ -1,0 +1,393 @@
+"""Peer-to-peer shard exchange + sparse→full promotion: PeerShardServer
+serving a live prefetcher cache (whole shards, ranged reads, resident
+sparse spans, structured misses), PeerShardSource health tracking,
+TieredSource peer→origin fall-through, ShardDataset(peers=[...]) wiring,
+stats plumbing to the dashboard, and promotion determinism."""
+
+import http.server
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.stats import StageStats, format_stats
+from repro.data import (
+    LocalShardSource,
+    PeerShardServer,
+    PeerShardSource,
+    ShardDataset,
+    ShardPrefetcher,
+    ShardReader,
+    SimulatedLatencySource,
+    SyntheticImageDataset,
+    TieredSource,
+    pack,
+)
+from repro.data.shards import PeerMiss
+from repro.data.shards.format import HEADER_SIZE, parse_shard_header
+from repro.data.shards.prefetch import SparseShardReader
+from repro.data.shards.sources import HttpShardSource, RetryingSource
+from repro.data.shards.testing import serve_shards
+
+
+@pytest.fixture()
+def packed(tmp_path):
+    """(files dataset, packed shard dir) — 40 samples in 5 shards of 8."""
+    ds = SyntheticImageDataset.materialize(tmp_path / "src", 40, hw=(16, 16), seed=0)
+    pack(ds, tmp_path / "shards", samples_per_shard=8)
+    return ds, tmp_path / "shards"
+
+
+def _wait_for(cond, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while not cond() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert cond(), "condition not reached before timeout"
+
+
+# ---------------------------------------------------------------------------
+# PeerShardServer: serving the warm cache
+# ---------------------------------------------------------------------------
+def test_peer_serves_warm_whole_shard_and_ranges(packed, tmp_path):
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    pf = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a", index_first=False)
+    pf.reader(name)  # warm the cache with a full disk entry
+    with PeerShardServer(pf) as peer:
+        client = HttpShardSource(peer.url)
+        assert client.fetch(name) == raw  # whole shard, byte-exact
+        assert client.fetch_range(name, 100, 57) == raw[100:157]  # 206 path
+        with pytest.raises(FileNotFoundError):  # structured 404 miss
+            client.fetch("shard-00001.rpshard")  # exists at origin, not warm here
+        st = peer.stats()
+        assert st["served_whole"] == 1 and st["served_ranges"] == 1
+        assert st["misses"] == 1
+        assert st["bytes_served"] >= len(raw) + 57
+        client.close()
+    pf.close()
+
+
+def test_peer_serves_resident_sparse_spans_and_misses_cold(packed, tmp_path):
+    """A sparse entry answers header/index ranged reads (re-serialized from
+    the parsed index) and resident payload spans; everything else is a
+    structured miss — including a whole-shard GET."""
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    _, n, index_off, _ = parse_shard_header(raw[:HEADER_SIZE], name)
+    local = ShardReader(shards / name)
+    offs, lens = local.offsets, local.lengths
+    pf = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a", index_first=True)
+    reader = pf.reader(name, samples=[0, 1])
+    assert isinstance(reader, SparseShardReader)
+    with PeerShardServer(pf) as peer:
+        ps = PeerShardSource([peer.url])
+        # index-first reads a peer prefetcher would issue: served from the
+        # sparse entry without the original header/index blobs
+        assert ps.fetch_range(name, 0, HEADER_SIZE) == raw[:HEADER_SIZE]
+        assert ps.fetch_range(name, index_off, n * 16) == raw[index_off : index_off + n * 16]
+        a, ln = int(offs[0]), int(lens[0]) + int(lens[1])
+        assert ps.fetch_range(name, a, ln) == raw[a : a + ln]  # resident span
+        with pytest.raises(PeerMiss):  # cold payload range
+            ps.fetch_range(name, int(offs[5]), int(lens[5]))
+        with pytest.raises(PeerMiss):  # sparse entries can't serve whole shards
+            ps.fetch(name)
+        assert ps.stats()["misses"] == 2
+        ps.close()
+    local.close()
+    pf.close()
+
+
+def test_peek_is_non_mutating(packed, tmp_path):
+    _, shards = packed
+    pf = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a")
+    pf.reader("shard-00000.rpshard")
+    before = pf.stats()
+    assert pf.peek("shard-00000.rpshard") is not None
+    assert pf.peek("shard-00001.rpshard") is None  # never fetches
+    after = pf.stats()
+    assert (after["hits"], after["misses"]) == (before["hits"], before["misses"])
+    assert after["bytes_fetched"] == before["bytes_fetched"]
+    pf.close()
+    assert pf.peek("shard-00000.rpshard") is None  # closed: nothing served
+
+
+# ---------------------------------------------------------------------------
+# the acceptance path: rank B reads rank A's warm cache, zero origin GETs
+# ---------------------------------------------------------------------------
+def test_rank_b_reads_warm_shards_from_peer_with_zero_origin_requests(packed, tmp_path):
+    ds, shards = packed
+    with serve_shards(shards) as origin:
+        # rank A: warm every shard from the origin
+        pf_a = ShardPrefetcher(
+            RetryingSource(HttpShardSource(origin.url)),
+            tmp_path / "rank_a",
+            index_first=False,
+        )
+        ds_a = ShardDataset(shards, prefetcher=pf_a)
+        for name in ds_a.shard_names:
+            pf_a.reader(name)
+        with PeerShardServer(pf_a) as peer:
+            # rank B: origin → retry → peers → prefetcher
+            origin_b = HttpShardSource(origin.url)
+            tiered = TieredSource(
+                RetryingSource(origin_b), PeerShardSource([peer.url])
+            )
+            pf_b = ShardPrefetcher(tiered, tmp_path / "rank_b", index_first=False)
+            ds_b = ShardDataset(shards, prefetcher=pf_b)  # manifest → origin
+            origin_requests_before = origin.requests
+            for i in range(len(ds_b)):
+                np.testing.assert_array_equal(ds_b[i], ds[i])
+            # every shard came from the peer: ZERO origin requests
+            assert origin.requests == origin_requests_before
+            assert origin_b.fetches == 1  # the manifest, nothing else
+            tstats = tiered.stats()
+            assert tstats["peer_hits"] == ds_b.num_shards
+            assert tstats["peer_bytes"] > 0
+            assert peer.stats()["served_whole"] == ds_b.num_shards
+            # stats flow: tiered → prefetcher (source_*) → snapshot → dashboard
+            st = pf_b.stats()
+            assert st["source_peer_hits"] == ds_b.num_shards
+            assert st["source_origin_bytes"] > 0  # the manifest bytes
+            snap = StageStats(name="read", cache=pf_b).snapshot()
+            assert snap.peer_hits == ds_b.num_shards
+            assert snap.peer_bytes == tstats["peer_bytes"]
+            assert snap.origin_bytes == tstats["origin_bytes"]
+            rendered = format_stats([snap])
+            assert "peer_hits=" in rendered and "origin_bytes=" in rendered
+            ds_b.close()
+        ds_a.close()
+
+
+def test_rank_b_ranged_reads_served_by_peer(packed, tmp_path):
+    """Index-first rank B: header/index/sample ranged reads all land on the
+    peer's full entry — the origin is never consulted for the shard."""
+    ds, shards = packed
+    pf_a = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a", index_first=False)
+    pf_a.reader("shard-00000.rpshard")
+    with serve_shards(shards) as origin, PeerShardServer(pf_a) as peer:
+        origin_b = HttpShardSource(origin.url)
+        tiered = TieredSource(RetryingSource(origin_b), PeerShardSource([peer.url]))
+        pf_b = ShardPrefetcher(tiered, tmp_path / "b", index_first=True)
+        reader = pf_b.reader("shard-00000.rpshard", samples=[0, 1])
+        assert isinstance(reader, SparseShardReader)
+        assert origin.requests == 0  # header + index + span: all peer-served
+        assert peer.stats()["served_ranges"] >= 3
+        assert tiered.stats()["origin_fetches"] == 0
+        assert bytes(reader.read(0)) == bytes(
+            pf_a.reader("shard-00000.rpshard").read(0)
+        )
+        pf_b.close()
+    pf_a.close()
+
+
+def test_shard_dataset_peers_argument_builds_tiered_stack(packed, tmp_path):
+    ds, shards = packed
+    pf_a = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a", index_first=False)
+    for name in ["shard-%05d.rpshard" % k for k in range(5)]:
+        pf_a.reader(name)
+    with serve_shards(shards) as origin, PeerShardServer(pf_a) as peer:
+        rds = ShardDataset(
+            origin.url, cache_dir=tmp_path / "b", peers=[peer.url], peer_timeout=1.0
+        )
+        requests_after_manifest = origin.requests
+        for i in range(len(rds)):
+            np.testing.assert_array_equal(rds[i], ds[i])
+        assert origin.requests == requests_after_manifest  # shards: peers only
+        assert rds.prefetcher.stats()["source_peer_hits"] > 0
+        rds.close()
+    pf_a.close()
+    # misuse is loud
+    with pytest.raises(TypeError, match="http"):
+        ShardDataset(shards, peers=["http://127.0.0.1:1"])
+    with pytest.raises(TypeError, match="TieredSource"):
+        ShardDataset("http://127.0.0.1:1", prefetcher=object(), peers=["http://x"])
+
+
+# ---------------------------------------------------------------------------
+# fault paths
+# ---------------------------------------------------------------------------
+class _DyingPeerHandler(http.server.BaseHTTPRequestHandler):
+    """Advertises a body, sends a fragment, kills the connection."""
+
+    protocol_version = "HTTP/1.1"
+
+    def do_GET(self):  # noqa: N802
+        self.send_response(200)
+        self.send_header("Content-Length", "1000000")
+        self.end_headers()
+        self.wfile.write(b"x" * 64)
+        self.wfile.flush()
+        self.connection.close()
+
+    def log_message(self, *args):
+        pass
+
+
+def test_peer_dying_mid_transfer_falls_back_without_poisoning_dedup(packed, tmp_path):
+    ds, shards = packed
+    dying = http.server.ThreadingHTTPServer(("127.0.0.1", 0), _DyingPeerHandler)
+    threading.Thread(target=dying.serve_forever, daemon=True).start()
+    try:
+        with serve_shards(shards) as origin:
+            host, port = dying.server_address[:2]
+            tiered = TieredSource(
+                RetryingSource(HttpShardSource(origin.url)),
+                PeerShardSource([f"http://{host}:{port}"], timeout=1.0),
+            )
+            pf = ShardPrefetcher(tiered, tmp_path / "c", index_first=False)
+            name = "shard-00000.rpshard"
+            reader = pf.reader(name)  # peer dies mid-body → origin covers
+            assert isinstance(reader, ShardReader)
+            assert len(reader.read(0)) > 0
+            st = tiered.stats()
+            assert st["peer_errors"] == 1 and st["peers_down"] == 1
+            assert st["origin_fetches"] == 1
+            # dedup not poisoned: no stuck in-flight entry, next read is a hit
+            assert name not in pf._inflight
+            hits_before = pf.stats()["hits"]
+            pf.reader(name)
+            assert pf.stats()["hits"] == hits_before + 1
+            # the benched peer is skipped outright: next shard goes straight
+            # to origin without paying another error/timeout
+            pf.reader("shard-00001.rpshard")
+            assert tiered.stats()["peer_errors"] == 1
+            pf.close()
+    finally:
+        dying.shutdown()
+        dying.server_close()
+
+
+def test_peer_with_stale_short_copy_is_benched_not_fatal(packed, tmp_path):
+    """A peer holding a stale/shorter object under the same shard name
+    answers with a 416 or a short 206 — that must bench the peer and fall
+    through to the origin, never crash the read path."""
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    stale = tmp_path / "stale"
+    stale.mkdir()
+    (stale / name).write_bytes(b"x" * 50)  # much shorter than the real shard
+    with serve_shards(shards) as origin, serve_shards(stale) as bad_peer:
+        tiered = TieredSource(
+            RetryingSource(HttpShardSource(origin.url)),
+            PeerShardSource([bad_peer.url], timeout=1.0),
+        )
+        assert tiered.fetch_range(name, 100, 57) == raw[100:157]  # origin covered
+        st = tiered.stats()
+        assert st["peer_errors"] == 1 and st["peers_down"] == 1
+        assert st["origin_fetches"] == 1
+        tiered.close()
+
+
+def test_peer_sparse_miss_falls_through_to_origin(packed, tmp_path):
+    """A peer holding only a sparse slice of a shard answers 404 for cold
+    ranges; the tier falls through to origin and the read still succeeds."""
+    ds, shards = packed
+    pf_a = ShardPrefetcher(LocalShardSource(shards), tmp_path / "a", index_first=True)
+    pf_a.reader("shard-00000.rpshard", samples=[0, 1])  # sparse on rank A
+    with serve_shards(shards) as origin, PeerShardServer(pf_a) as peer:
+        tiered = TieredSource(
+            RetryingSource(HttpShardSource(origin.url)),
+            PeerShardSource([peer.url]),
+        )
+        pf_b = ShardPrefetcher(tiered, tmp_path / "b", index_first=True)
+        reader = pf_b.reader("shard-00000.rpshard", samples=[0])  # peer-served
+        assert origin.requests == 0
+        # sample 5 is cold on the peer: structured miss → origin range read
+        view = reader.read(5)
+        local = ShardReader(shards / "shard-00000.rpshard")
+        assert bytes(view) == bytes(local.read(5))
+        local.close()
+        assert origin.requests >= 1
+        st = tiered.stats()
+        assert st["peer_misses"] >= 1 and st["origin_fetches"] >= 1
+        pf_b.close()
+    pf_a.close()
+
+
+# ---------------------------------------------------------------------------
+# sparse→full promotion
+# ---------------------------------------------------------------------------
+def test_promotion_upgrades_with_exactly_one_whole_shard_get(packed, tmp_path):
+    ds, shards = packed
+    src = SimulatedLatencySource(LocalShardSource(shards), latency_s=0, ranges=True)
+    pf = ShardPrefetcher(
+        src, tmp_path / "c", index_first=True, promote_threshold=0.25
+    )
+    rds = ShardDataset(shards, prefetcher=pf)
+    name = rds.shard_names[0]
+    reader = pf.reader(name, samples=[0])
+    assert isinstance(reader, SparseShardReader)
+    assert src.fetches == 1  # the manifest; no shard GET yet
+    for k in range(1, 5):  # demand reads push demand_bytes past 25% of payload
+        np.testing.assert_array_equal(rds[k], ds[k])
+    _wait_for(lambda: pf.stats()["promotions"] == 1)
+    assert src.fetches == 2  # manifest + EXACTLY ONE whole-shard GET
+    promoted = pf.reader(name)
+    assert isinstance(promoted, ShardReader)  # a normal disk cache entry
+    assert pf.stats()["sparse_shards"] == 0
+    ranges_after = pf.stats()["range_fetches"]
+    for k in range(8):  # all samples now served from disk, zero wire traffic
+        np.testing.assert_array_equal(rds[k], ds[k])
+    assert pf.stats()["range_fetches"] == ranges_after
+    assert src.fetches == 2
+    # the orphaned sparse reader still answers (local-serve, no wire fetch)
+    assert bytes(reader.read(7)) == bytes(promoted.read(7))
+    assert src.fetches == 2 and pf.stats()["range_fetches"] == ranges_after
+    rds.close()
+
+
+def test_promotion_is_deterministic_under_concurrent_demand_reads(packed, tmp_path):
+    ds, shards = packed
+    src = SimulatedLatencySource(LocalShardSource(shards), latency_s=0, ranges=True)
+    pf = ShardPrefetcher(
+        src, tmp_path / "c", index_first=True, promote_threshold=0.1
+    )
+    rds = ShardDataset(shards, prefetcher=pf)
+    name = rds.shard_names[0]
+    pf.reader(name, samples=[0])
+    fetches_before = src.fetches
+    errs = []
+
+    def demand(k):
+        try:
+            np.testing.assert_array_equal(rds[k], ds[k])
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=demand, args=(k,)) for k in range(1, 8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    _wait_for(lambda: pf.stats()["promotions"] == 1)
+    time.sleep(0.1)  # any duplicate upgrade would land in this window
+    assert pf.stats()["promotions"] == 1
+    assert src.fetches == fetches_before + 1  # exactly one whole-shard GET
+    assert isinstance(pf.reader(name), ShardReader)
+    rds.close()
+
+
+def test_promoted_entry_becomes_peer_servable(packed, tmp_path):
+    """The point of promotion at multi-rank scale: once rank A upgrades a
+    sparse entry, its peer server can hand the WHOLE shard to rank B."""
+    _, shards = packed
+    name = "shard-00000.rpshard"
+    raw = (shards / name).read_bytes()
+    src = SimulatedLatencySource(LocalShardSource(shards), latency_s=0, ranges=True)
+    pf = ShardPrefetcher(src, tmp_path / "a", index_first=True, promote_threshold=0.1)
+    reader = pf.reader(name, samples=[0])
+    with PeerShardServer(pf) as peer:
+        client = HttpShardSource(peer.url)
+        with pytest.raises(FileNotFoundError):  # sparse: whole GET misses
+            client.fetch(name)
+        for k in range(1, 4):
+            reader.read(k)  # demand reads cross the promotion threshold
+        _wait_for(lambda: pf.stats()["promotions"] == 1)
+        assert client.fetch(name) == raw  # now served whole to peers
+        client.close()
+    pf.close()

@@ -26,7 +26,11 @@ from repro.data import (
 )
 from repro.data.shards import validate_shard_name
 from repro.data.shards.prefetch import SparseShardReader
-from repro.data.shards.sources import HttpShardSource, RetryingSource
+from repro.data.shards.sources import (
+    HttpShardSource,
+    RangeNotSupported,
+    RetryingSource,
+)
 from repro.data.shards.testing import serve_shards
 
 
@@ -66,15 +70,20 @@ def test_http_fetch_range_206(packed, tmp_path):
 
 
 def test_http_fetch_range_server_ignores_range(packed, tmp_path):
-    """A server that answers 200 to a ranged request still yields correct
-    bytes (sliced locally) and flips ``range_supported`` off."""
+    """A server that answers 200 to a ranged request moved the WHOLE body:
+    fetch_range surfaces it via RangeNotSupported (so the caller can install
+    it instead of re-downloading), counts the true wire bytes, and flips
+    ``range_supported`` off."""
     _, shards = packed
     name = "shard-00000.rpshard"
     raw = (shards / name).read_bytes()
     with serve_shards(shards, support_ranges=False) as srv:
         src = HttpShardSource(srv.url)
-        assert src.fetch_range(name, 100, 57) == raw[100:157]
+        with pytest.raises(RangeNotSupported) as ei:
+            src.fetch_range(name, 100, 57)
+        assert ei.value.body == raw  # the already-downloaded body, intact
         assert src.range_supported is False
+        assert src.stats()["bytes_fetched"] == len(raw)  # wire truth
         src.close()
 
 
@@ -330,29 +339,75 @@ def test_sparse_eviction_keeps_inflight_views_valid(packed, tmp_path):
         rds.close()
 
 
-def test_range_ignoring_server_counts_wire_bytes_and_falls_back(packed, tmp_path):
-    """Against a server that ignores Range: bytes_fetched must count the
-    full bodies that actually crossed the wire, and once range_supported
-    flips off the prefetcher must stop going sparse (whole-shard fetches
-    only — 'ranged' reads would COST bytes there)."""
+def test_range_ignoring_server_installs_body_exactly_one_fetch(packed, tmp_path):
+    """Against ShardHTTPServer(support_ranges=False): the whole body the
+    'ranged' index read brought down must be INSTALLED and served — exactly
+    one wire fetch of the shard, never download-slice-discard-refetch."""
     ds, shards = packed
-    name = "shard-00000.rpshard"
-    raw_len = (shards / name).stat().st_size
     with serve_shards(shards, support_ranges=False) as srv:
-        src = RetryingSource(HttpShardSource(srv.url))
-        assert src.range_supported is True
-        got = src.fetch_range(name, 0, 32)
-        assert len(got) == 32
-        assert src.range_supported is False
-        assert src.stats()["bytes_fetched"] == raw_len  # wire truth
-        pf = ShardPrefetcher(src, tmp_path / "c", index_first=True)
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
         rds = ShardDataset(shards, prefetcher=pf)
-        pf.schedule(rds.shard_names[1], samples=[0, 1])
-        reader = pf.reader(rds.shard_names[1])
-        assert isinstance(reader, ShardReader)  # fell back to full fetch
+        manifest_requests = srv.requests
+        reader = pf.reader(rds.shard_names[0], samples=[0, 1])
+        assert isinstance(reader, ShardReader)  # installed as a full disk entry
+        assert srv.requests - manifest_requests == 1  # ONE wire fetch, total
         assert pf.stats()["sparse_shards"] == 0
+        for k in range(8):  # every sample of shard 0 served from the install
+            np.testing.assert_array_equal(rds[k], ds[k])
+        assert srv.requests - manifest_requests == 1
+        # range_supported flipped: the NEXT shard skips straight to one
+        # whole-shard GET (no doomed index read first)
+        pf.schedule(rds.shard_names[1], samples=[0, 1])
         np.testing.assert_array_equal(rds[8], ds[8])
+        assert isinstance(pf.reader(rds.shard_names[1]), ShardReader)
+        assert srv.requests - manifest_requests == 2
         rds.close()
+
+
+def test_demand_read_installs_whole_body_from_range_ignoring_source(packed, tmp_path):
+    """A source that STOPS honoring ranges mid-run (CDN tier change): a
+    sparse reader's demand fetch gets the whole body back, the prefetcher
+    installs it over the sparse entry, and later demand reads are served
+    locally — no further wire fetches."""
+    from repro.data import LocalShardSource
+    from repro.data.shards import RangeNotSupported
+
+    ds, shards = packed
+
+    class FlipFlopSource:
+        """Honors ranges for the header+index reads, then answers every
+        ranged read with the whole object."""
+
+        def __init__(self, root):
+            self.inner = LocalShardSource(root)
+            self.range_calls = 0
+            self.whole_bodies = 0
+
+        def fetch(self, name):
+            return self.inner.fetch(name)
+
+        def fetch_range(self, name, start, length):
+            self.range_calls += 1
+            if self.range_calls <= 2:  # header, then index region
+                return self.inner.fetch_range(name, start, length)
+            self.whole_bodies += 1
+            raise RangeNotSupported(name, self.inner.fetch(name))
+
+    src = FlipFlopSource(shards)
+    pf = ShardPrefetcher(src, tmp_path / "c", index_first=True)
+    rds = ShardDataset(shards, prefetcher=pf)
+    name = rds.shard_names[0]
+    # hinted ensure([0]) is the 3rd ranged read → whole body → installed
+    reader = pf.reader(name, samples=[0])
+    assert isinstance(reader, ShardReader)
+    assert src.whole_bodies == 1
+    assert pf.stats()["sparse_shards"] == 0
+    for k in range(8):
+        np.testing.assert_array_equal(rds[k], ds[k])
+    assert src.whole_bodies == 1  # the one body covered everything
+    rds.close()
 
 
 def test_url_dataset_cleans_up_auto_cache_dir(packed, tmp_path):
@@ -479,6 +534,106 @@ def test_url_root_dataset_end_to_end(packed, tmp_path):
         stats = {s.name: s for s in p.stats()}
         assert stats["read"].num_failed == 0
         assert stats["read"].bytes_fetched > 0
+        rds.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: closed-prefetcher demand fetch
+# ---------------------------------------------------------------------------
+def test_closed_prefetcher_demand_fetch_raises_documented_error(packed, tmp_path):
+    """A sparse reader that outlives the prefetcher (evicted before
+    close()): its demand read must surface the documented
+    RuntimeError('ShardPrefetcher is closed'), not whatever socket error
+    the closed backend produces."""
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)),
+            tmp_path / "c",
+            max_bytes=1,  # floor: at most one resident entry
+            index_first=True,
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        reader = pf.reader(rds.shard_names[0], samples=[0])
+        assert isinstance(reader, SparseShardReader)
+        pf.reader(rds.shard_names[1], samples=[0])  # evicts shard 0's entry
+        assert pf.stats()["evictions"] >= 1
+        pf.close()
+        with pytest.raises(RuntimeError, match="ShardPrefetcher is closed"):
+            reader.read(5)  # non-resident: would demand-fetch
+        rds.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: crc verification memoized per sample
+# ---------------------------------------------------------------------------
+def test_crc_verified_once_per_sample(tmp_path, monkeypatch):
+    """Epoch 2+ over a warm shard must not re-pay the crc32 pass; opting
+    out with verify=False never pays (or memoizes) it."""
+    import repro.data.shards.format as fmt
+
+    path = tmp_path / "s.rpshard"
+    with ShardWriter(path) as w:
+        w.add(b"a" * 512)
+        w.add(b"b" * 512)
+    counts = {"n": 0}
+    real_crc = fmt.zlib.crc32
+
+    def spy(data, *a):
+        counts["n"] += 1
+        return real_crc(data, *a)
+
+    monkeypatch.setattr(fmt.zlib, "crc32", spy)
+    r = ShardReader(path)
+    r.read(0)
+    r.read(0)
+    r.read(0)
+    assert counts["n"] == 1  # verified exactly once
+    r.read(1)
+    assert counts["n"] == 2
+    r.read(1, verify=False)
+    assert counts["n"] == 2
+    r.close()
+
+
+def test_crc_failure_is_never_memoized(tmp_path):
+    """A corrupt sample must raise on EVERY read (per-sample hole), not
+    sneak through after the first failure."""
+    path = tmp_path / "s.rpshard"
+    with ShardWriter(path) as w:
+        w.add(b"a" * 512)
+    raw = bytearray(path.read_bytes())
+    raw[40] ^= 0xFF  # flip a payload bit
+    path.write_bytes(raw)
+    r = ShardReader(path)
+    for _ in range(3):
+        with pytest.raises(ShardCorruption):
+            r.read(0)
+    r.close()
+
+
+def test_sparse_crc_verified_once_per_sample(packed, tmp_path, monkeypatch):
+    import repro.data.shards.prefetch as pfm
+
+    _, shards = packed
+    with serve_shards(shards) as srv:
+        pf = ShardPrefetcher(
+            RetryingSource(HttpShardSource(srv.url)), tmp_path / "c", index_first=True
+        )
+        rds = ShardDataset(shards, prefetcher=pf)
+        reader = pf.reader(rds.shard_names[0], samples=[0, 1])
+        assert isinstance(reader, SparseShardReader)
+        counts = {"n": 0}
+        real_crc = pfm.zlib.crc32
+
+        def spy(data, *a):
+            counts["n"] += 1
+            return real_crc(data, *a)
+
+        monkeypatch.setattr(pfm.zlib, "crc32", spy)
+        reader.read(0)
+        reader.read(0)
+        assert counts["n"] == 1
         rds.close()
 
 
