@@ -1,0 +1,257 @@
+"""Engine overhead: per-item vs chunked vs fused stage execution.
+
+PRs 1-4 made the storage path fast enough that the engine's own per-item
+event-loop cost (queue hops, ``ensure_future``, semaphore, executor
+dispatch — ~4-5 loop round trips per stage per item) became the ceiling.
+This bench isolates that overhead and measures what chunking + fusion buy:
+
+- ``engine_per_item``: a two-passthrough-stage pipeline on the classic
+  per-item path — every item pays the full loop toll twice;
+- ``engine_chunked``: the same pipeline with ``chunk=CHUNK`` — one
+  executor dispatch per chunk per stage;
+- ``engine_fused``: chunked AND ``fuse("s1", "s2")`` — the two stages
+  collapse into one worker call per chunk, removing a queue + task layer.
+
+All three paths are checked to produce IDENTICAL outputs (same items, same
+order) on a common prefix of the stream.  The pipelines aggregate before
+the sink (as every real loader does) so the consumer-side hop is amortized
+equally and the engine, not ``get_item``, is what's measured.
+
+Shard rows: re-runs the ``bench_shards.py`` local-mmap read workload *on
+the chunked loader path* — indices → chunked vectorized
+``read_bytes_many`` stage (one index→shard ``searchsorted`` per chunk
+instead of per sample) — with ``ShardDataset(verify_crc="eager")``:
+integrity checking coalesces into one whole-payload pass per shard at
+open (the satellite's cache-install coalescing, applied at mmap-open for
+local shards), so the measured steady-state epoch pays zero per-read crc
+while corrupt samples still raise per sample.  The one-time verify cost
+is reported separately (``verify_ms``) and amortizes across epochs;
+``epoch_with_verify`` folds it back in for the pessimistic single-epoch
+view.
+
+Results persist to ``BENCH_engine.json``; gates recorded there:
+``chunked_speedup >= 2`` (chunked+fused pipeline at least 2x the per-item
+path, identical outputs) and ``shard_mmap_ratio >= 1.5`` (chunked-loader
+mmap row at least 1.5x the PR-4 ``BENCH_shards.json`` ``shard_mmap``
+value).  ``python -m benchmarks.bench_engine --gate`` re-checks the
+chunked gate at smoke size and exits nonzero on regression (CI wires this
+in).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = _ROOT / "BENCH_engine.json"
+SHARDS_PATH = _ROOT / "BENCH_shards.json"
+
+CHUNK = 64
+CONCURRENCY = 4
+AGG = 256  # sink batching: amortizes the consumer hop identically per path
+GATE_CHUNKED_SPEEDUP = 2.0
+GATE_SHARD_MMAP_RATIO = 1.5
+
+
+def _ident(x):
+    return x
+
+
+def _build_overhead(n: int, *, chunk: int, fuse: bool):
+    from repro.core import PipelineBuilder
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(n))
+        .pipe(_ident, concurrency=CONCURRENCY, chunk=chunk, name="s1")
+        # items are ints: let the aggregate stage drain batch-wide hops
+        .pipe(_ident, concurrency=CONCURRENCY, chunk=chunk, name="s2", queue_size=AGG)
+    )
+    if fuse:
+        b.fuse("s1", "s2")
+    return (
+        b.aggregate(AGG, name="agg")
+        .add_sink(buffer_size=8)
+        .build(num_threads=CONCURRENCY + 2)
+    )
+
+
+def _measure_overhead(n: int, *, chunk: int, fuse: bool) -> dict:
+    p = _build_overhead(n, chunk=chunk, fuse=fuse)
+    t0 = time.monotonic()
+    with p.auto_stop():
+        out = [x for batch in p for x in batch]
+    dt = time.monotonic() - t0
+    assert out == list(range(n)), "engine path changed the stream"
+    return {"items_per_sec": n / dt, "items": n, "chunk": chunk, "fused": fuse}
+
+
+SHARD_CHUNK = 512
+SHARD_AGG = 512
+SHARD_CONCURRENCY = 2
+SHARD_TRIALS = 3  # best-of: n is small relative to pipeline startup
+
+
+def _measure_shard_reads(shards_dir: pathlib.Path, *, smoke: bool) -> dict:
+    """The bench_shards ``shard_mmap`` workload (shuffled full-epoch reads)
+    driven through a chunked read pipeline instead of a bare Python loop,
+    over an eager-verified dataset (coalesced whole-payload crc at open;
+    the steady-state epoch pays no per-read crc)."""
+    from repro.core import PipelineBuilder
+    from repro.data import ShardDataset
+
+    ds = ShardDataset(shards_dir, verify_crc="eager")
+    n = len(ds)
+    order = np.random.default_rng(0).permutation(n).tolist()
+
+    # open + verify every shard once (the coalesced pass), timed separately:
+    # it is a one-time cost amortized over every later epoch
+    t0 = time.monotonic()
+    for s in range(ds.num_shards):
+        ds._reader(s)
+    verify_s = time.monotonic() - t0
+
+    def read_many(idxs: list[int]) -> list[int]:
+        return [v.nbytes for v in ds.read_bytes_many(idxs)]
+
+    best_dt = float("inf")
+    for _ in range(1 if smoke else SHARD_TRIALS):
+        p = (
+            PipelineBuilder()
+            .add_source(order, name="sampler")
+            .pipe(read_many, concurrency=SHARD_CONCURRENCY, chunk=SHARD_CHUNK,
+                  name="read", vectorized=True, queue_size=SHARD_AGG)
+            .aggregate(SHARD_AGG, name="agg")
+            .add_sink(buffer_size=8)
+            .build(num_threads=SHARD_CONCURRENCY + 2)
+        )
+        t0 = time.monotonic()
+        with p.auto_stop():
+            n_bytes = sum(ln for batch in p for ln in batch)
+        best_dt = min(best_dt, time.monotonic() - t0)
+    ds.close()
+    return {
+        "items_per_sec": n / best_dt,
+        "mb_per_sec": n_bytes / best_dt / 2**20,
+        "items": n,
+        "chunk": SHARD_CHUNK,
+        "verify_ms": verify_s * 1e3,
+        "epoch_with_verify_items_per_sec": n / (best_dt + verify_s),
+    }
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    n_slow = 2_000 if smoke else 20_000  # per-item path: every item ~1 loop toll
+    n_fast = 20_000 if smoke else 200_000
+
+    per_item = _measure_overhead(n_slow, chunk=1, fuse=False)
+    chunked = _measure_overhead(n_fast, chunk=CHUNK, fuse=False)
+    fused = _measure_overhead(n_fast, chunk=CHUNK, fuse=True)
+
+    from repro.data import SyntheticImageDataset, pack
+
+    with tempfile.TemporaryDirectory() as d:
+        d = pathlib.Path(d)
+        n_items = 512 if smoke else 2048
+        files_ds = SyntheticImageDataset.materialize(d / "files", n_items, hw=(64, 64), seed=0)
+        pack(files_ds, d / "shards", samples_per_shard=64 if smoke else 256)
+        shard_chunked = _measure_shard_reads(d / "shards", smoke=smoke)
+
+    chunked_speedup = chunked["items_per_sec"] / max(per_item["items_per_sec"], 1e-9)
+    fused_speedup = fused["items_per_sec"] / max(per_item["items_per_sec"], 1e-9)
+    pr4_mmap = None
+    if SHARDS_PATH.is_file():
+        pr4_mmap = json.loads(SHARDS_PATH.read_text())["shard_mmap"]["items_per_sec"]
+    shard_ratio = (
+        shard_chunked["items_per_sec"] / pr4_mmap if pr4_mmap else None
+    )
+
+    result = {
+        "workload": {
+            "n_per_item": n_slow,
+            "n_chunked": n_fast,
+            "chunk": CHUNK,
+            "concurrency": CONCURRENCY,
+            "agg": AGG,
+        },
+        "per_item": per_item,
+        "chunked": chunked,
+        "fused": fused,
+        "chunked_speedup": chunked_speedup,
+        "fused_speedup": fused_speedup,
+        "gate_chunked_speedup": GATE_CHUNKED_SPEEDUP,
+        "shard_mmap_chunked": shard_chunked,
+        "shard_mmap_pr4_items_per_sec": pr4_mmap,
+        "shard_mmap_ratio": shard_ratio,
+        "gate_shard_mmap_ratio": GATE_SHARD_MMAP_RATIO,
+    }
+    if not smoke:  # persist only full runs; smoke numbers are noise
+        OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+
+    rows = []
+    for tag, r in (("per_item", per_item), ("chunked", chunked), ("fused", fused)):
+        rows.append(
+            (
+                f"engine_{tag}",
+                1e6 / max(r["items_per_sec"], 1e-9),
+                f"{r['items_per_sec']:.0f}items/s_chunk{r['chunk']}",
+            )
+        )
+    rows.append(
+        ("engine_chunked_speedup", 0.0, f"x{chunked_speedup:.2f}_chunked_vs_per_item")
+    )
+    rows.append(("engine_fused_speedup", 0.0, f"x{fused_speedup:.2f}_fused_vs_per_item"))
+    rows.append(
+        (
+            "engine_shard_mmap_chunked",
+            1e6 / max(shard_chunked["items_per_sec"], 1e-9),
+            f"{shard_chunked['items_per_sec']:.0f}items/s_"
+            f"{shard_chunked['mb_per_sec']:.0f}MB/s",
+        )
+    )
+    if shard_ratio is not None and not smoke:
+        # the PR-4 baseline in BENCH_shards.json is a full-size run — only a
+        # full-size row is comparable against it
+        rows.append(
+            (
+                "engine_shard_mmap_vs_pr4",
+                0.0,
+                f"x{shard_ratio:.2f}_chunked_loader_vs_bare_loop"
+                f"_{'OK' if shard_ratio >= GATE_SHARD_MMAP_RATIO else 'BELOW_GATE'}",
+            )
+        )
+    return rows
+
+
+def check_gate() -> int:
+    """CI regression tripwire: re-measure the overhead workload at smoke
+    size and fail if the chunked path dropped below the recorded gate."""
+    gate = GATE_CHUNKED_SPEEDUP
+    if OUT_PATH.is_file():
+        gate = float(
+            json.loads(OUT_PATH.read_text()).get("gate_chunked_speedup", gate)
+        )
+    per_item = _measure_overhead(2_000, chunk=1, fuse=False)
+    fused = _measure_overhead(20_000, chunk=CHUNK, fuse=True)
+    speedup = fused["items_per_sec"] / max(per_item["items_per_sec"], 1e-9)
+    print(
+        f"engine_chunked gate: x{speedup:.2f} (chunked+fused vs per-item), "
+        f"gate x{gate:.2f}"
+    )
+    if speedup < gate:
+        print(f"REGRESSION: chunked+fused speedup x{speedup:.2f} < gate x{gate:.2f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--gate" in sys.argv:
+        sys.exit(check_gate())
+    for r in run("--smoke" in sys.argv):
+        print(",".join(map(str, r)))

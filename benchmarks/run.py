@@ -40,6 +40,7 @@ REGISTRY = [
     ("wire format (beyond-paper)", "bench_wire_format"),
     ("zero-copy slab arena (beyond-paper)", "bench_zero_copy"),
     ("sharded record store (beyond-paper)", "bench_shards"),
+    ("engine chunked+fused (beyond-paper)", "bench_engine"),
     ("roofline (dry-run derived)", "roofline"),
 ]
 

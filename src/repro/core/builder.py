@@ -19,7 +19,7 @@ from __future__ import annotations
 from concurrent.futures import Executor
 from typing import Any, AsyncIterable, Callable, Iterable
 
-from .engine import StageSpec
+from .engine import StageSpec, _is_async_callable
 from .errors import OnError
 from .pipeline import Pipeline
 
@@ -28,6 +28,7 @@ class PipelineBuilder:
     def __init__(self) -> None:
         self._specs: list[StageSpec] = []
         self._sink_buffer_size: int | None = None
+        self._fuse_groups: list[tuple[str, ...]] = []
 
     # ------------------------------------------------------------------
     def add_source(self, source: Iterable | AsyncIterable, name: str = "source") -> "PipelineBuilder":
@@ -50,6 +51,8 @@ class PipelineBuilder:
         timeout: float | None = None,
         queue_size: int = 2,
         cache: Any = None,
+        chunk: int = 1,
+        vectorized: bool = False,
     ) -> "PipelineBuilder":
         """Chain a processing stage.
 
@@ -58,24 +61,50 @@ class PipelineBuilder:
             run on the pipeline thread pool (or ``executor`` if given), so
             they should release the GIL to scale; async callables run on the
             event loop (never GIL-bound).
-          concurrency: max in-flight tasks for this stage.
+          concurrency: max in-flight tasks for this stage (with ``chunk``,
+            max in-flight *chunks*).
           executor: optional executor override; pass a
             ``ProcessPoolExecutor`` for GIL-holding third-party code (§5.8).
           output_order: "input" preserves input order; "completion" emits as
             tasks finish.
           on_error: "skip" (robust, default) or "fail" (fail-fast).
-          timeout: optional per-item timeout in seconds.
-          queue_size: output queue bound (backpressure granularity).
+          timeout: optional per-item timeout in seconds.  With ``chunk`` it
+            is enforced post hoc inside the worker (plus a whole-chunk hang
+            backstop) — see the engine docstring.
+          queue_size: output queue bound (backpressure granularity).  The
+            pipeline widens it automatically when the NEXT stage pulls in
+            chunks, so a chunked consumer can actually fill its chunks.
           cache: optional cache/prefetcher probe (anything with a ``stats()``
             dict of hits/misses/evictions/bytes_cached/prefetch_depth);
             its counters are folded into this stage's ``Pipeline.stats()``
             snapshot — how shard-cache visibility reaches the dashboard.
+          chunk: items per executor dispatch.  ``chunk=N`` pulls up to N
+            items per queue hop and applies ``fn`` across them inside ONE
+            worker call, making the event-loop cost O(items/chunk) — the
+            fix for loop-overhead-bound stages (high occupancy, near-zero
+            task time).  Per-item error holes are preserved: a failing
+            item under ``on_error="skip"`` drops only itself, not its
+            chunk.  Requires a sync ``fn``.
+          vectorized: the fn takes the whole chunk (a list) and returns a
+            same-length, same-order list — for stages that can batch their
+            own lookups (numpy gathers, bulk reads).  The fn owns per-item
+            robustness: an exception it raises fails the WHOLE chunk.
+            Requires ``chunk > 1``.
         """
         self._require_source()
         if concurrency < 1:
             raise ValueError("concurrency must be >= 1")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
         if output_order not in ("input", "completion"):
             raise ValueError("output_order must be 'input' or 'completion'")
+        if chunk > 1 and _is_async_callable(fn):
+            raise ValueError(
+                "chunk > 1 requires a sync stage function (an async fn runs "
+                "on the event loop — there is no executor dispatch to amortize)"
+            )
+        if vectorized and chunk <= 1:
+            raise ValueError("vectorized=True requires chunk > 1")
         self._specs.append(
             StageSpec(
                 kind="pipe",
@@ -88,8 +117,35 @@ class PipelineBuilder:
                 timeout=timeout,
                 queue_size=queue_size,
                 cache=cache,
+                chunk=chunk,
+                vectorized=vectorized,
             )
         )
+        return self
+
+    def fuse(self, *names: str) -> "PipelineBuilder":
+        """Collapse the named adjacent pipe stages into ONE executor call
+        per item/chunk at ``build()`` time.
+
+        Fusion removes the queue + task layer between the stages — their
+        functions run back to back inside the same worker thread — while
+        ``Pipeline.stats()`` keeps reporting them as separate rows (phase
+        timings are recorded in the worker).  Each phase keeps its own
+        ``on_error``/``timeout``/``cache``; a failure is attributed to the
+        phase that raised and (under ``on_error="skip"``) drops only that
+        item.
+
+        Requirements (checked at ``build()``): the stages must be adjacent,
+        already added, sync, share an executor, and preserve input order.
+        A ``concurrency=1`` stage (often stateful) can only fuse with other
+        ``concurrency=1`` stages — fusing it wider would break its
+        single-writer guarantee.
+        """
+        if len(names) < 2:
+            raise ValueError("fuse needs at least two stage names")
+        if len(set(names)) != len(names):
+            raise ValueError(f"fuse names must be distinct, got {names!r}")
+        self._fuse_groups.append(tuple(names))
         return self
 
     def aggregate(self, num_items: int, *, drop_last: bool = False, name: str | None = None) -> "PipelineBuilder":
@@ -162,15 +218,99 @@ class PipelineBuilder:
         return self
 
     # ------------------------------------------------------------------
-    def build(self, *, num_threads: int = 8) -> Pipeline:
+    def build(self, *, num_threads: int = 8, auto_fuse: bool = False) -> Pipeline:
+        """Finalize the pipeline.  The fusion pass runs here: explicit
+        ``fuse()`` groups are collapsed (invalid groups raise), and with
+        ``auto_fuse=True`` any remaining adjacent sync, same-executor,
+        order-preserving pipe stages are collapsed too (ineligible pairs
+        are silently left alone)."""
         self._require_source()
         if len(self._specs) < 2:
             raise ValueError("pipeline needs at least a source and one stage")
+        specs = self._fused_specs(auto_fuse)
         return Pipeline(
-            list(self._specs),
+            specs,
             num_threads=num_threads,
             sink_buffer_size=self._sink_buffer_size or 3,
         )
+
+    # -- fusion pass ----------------------------------------------------
+    @staticmethod
+    def _fusable(a: StageSpec, b: StageSpec) -> str | None:
+        """Why ``b`` cannot be fused onto the group ending in ``a``
+        (None = fusable).  ``a`` may itself already be a fused spec."""
+        for spec in (a, b):
+            if spec.kind != "pipe":
+                return f"stage {spec.name!r} is not a pipe stage"
+            if spec.output_order != "input":
+                return f"stage {spec.name!r} does not preserve input order"
+            for phase in spec.phases:
+                if _is_async_callable(phase.fn):
+                    return f"stage {phase.name!r} is async (never leaves the loop)"
+        if (a.executor or None) is not (b.executor or None):
+            return f"stages {a.name!r} and {b.name!r} use different executors"
+        conc = max(a.concurrency, b.concurrency)
+        if conc > 1 and min(a.concurrency, b.concurrency) == 1:
+            return (
+                f"stage {(a if a.concurrency == 1 else b).name!r} is "
+                "concurrency=1 (possibly stateful) and cannot be widened "
+                f"to the fused concurrency {conc}"
+            )
+        return None
+
+    @staticmethod
+    def _fuse_pair(a: StageSpec, b: StageSpec) -> StageSpec:
+        """One fused spec from two adjacent ones (either may be fused
+        already — groups grow left to right)."""
+        phases = a.phases + b.phases
+        return StageSpec(
+            kind="pipe",
+            name="+".join(p.name for p in phases),
+            fn=None,
+            concurrency=max(a.concurrency, b.concurrency),
+            executor=a.executor,
+            output_order="input",
+            queue_size=b.queue_size,  # the fused output queue is b's
+            chunk=max(a.chunk, b.chunk),
+            fused=phases,
+        )
+
+    def _fused_specs(self, auto_fuse: bool) -> list[StageSpec]:
+        specs = list(self._specs)
+        by_name: dict[str, int] = {}
+        for i, s in enumerate(specs):
+            by_name.setdefault(s.name, i)
+        fused_away: set[int] = set()
+        for group in self._fuse_groups:
+            positions = []
+            for n in group:
+                if n not in by_name:
+                    raise ValueError(f"fuse: no stage named {n!r}")
+                positions.append(by_name[n])
+            if positions != list(range(positions[0], positions[0] + len(group))):
+                raise ValueError(
+                    f"fuse: stages {group!r} are not adjacent in pipeline order"
+                )
+            if any(p in fused_away for p in positions):
+                raise ValueError(f"fuse: stages {group!r} overlap another fuse group")
+            merged = specs[positions[0]]
+            for pos in positions[1:]:
+                why = self._fusable(merged, specs[pos])
+                if why is not None:
+                    raise ValueError(f"cannot fuse {group!r}: {why}")
+                merged = self._fuse_pair(merged, specs[pos])
+                fused_away.add(pos)
+            specs[positions[0]] = merged
+        out = [s for i, s in enumerate(specs) if i not in fused_away]
+        if auto_fuse:
+            merged_out = [out[0]]
+            for spec in out[1:]:
+                if self._fusable(merged_out[-1], spec) is None:
+                    merged_out[-1] = self._fuse_pair(merged_out[-1], spec)
+                else:
+                    merged_out.append(spec)
+            out = merged_out
+        return out
 
     def _require_source(self) -> None:
         if not self._specs:

@@ -9,11 +9,45 @@ executor (thread pool by default, user-supplied process pool optionally) via
 concurrently.  Coroutine functions are awaited on the loop itself and never
 touch the pool (paper §5.2: coroutines are not constrained by the GIL).
 
+Chunked + fused execution (amortizing the loop out of the hot path)
+-------------------------------------------------------------------
+The per-item path costs ~4-5 event-loop round trips per stage (queue
+get/put, ``ensure_future``, semaphore, executor dispatch); once the stage
+functions themselves are cheap (mmap reads, slot binding), that loop-side
+overhead IS the pipeline's ceiling — and it does not parallelize, because
+every stage's bookkeeping runs on the one scheduler thread.  Two
+amortizations make the per-item cost O(items/chunk):
+
+* **chunking** (``pipe(..., chunk=N)``): the stage pulls up to N items per
+  queue hop (``MonitoredQueue.get_many``), dispatches ONE executor call
+  that applies the stage function to each item *inside the worker thread*,
+  and pushes the surviving results back with one hop (``put_many``).
+  Ordered/unordered semantics, per-item error holes (``OnError.SKIP``
+  drops only the failing item of a chunk), and backpressure (``concurrency``
+  bounds in-flight *chunks*; queues stay bounded) are preserved.  Per-item
+  timeouts are enforced post hoc inside the worker — an item whose run
+  exceeded ``timeout`` is recorded as a per-item timeout failure — plus a
+  whole-chunk ``wait_for`` backstop (``timeout × len(chunk)``) against a
+  permanently hung function, which takes its whole chunk with it.
+  Chunking requires a sync stage function (an async fn never leaves the
+  loop, so there is nothing to amortize).
+
+* **fusion** (``PipelineBuilder.fuse("read", "decode")`` or
+  ``build(auto_fuse=True)``): adjacent sync, same-executor pipe stages
+  collapse into a single executor call per item/chunk — an entire queue +
+  task layer disappears.  The fused runtime keeps one ``StageStats`` per
+  original stage (phase timings are recorded inside the worker), so
+  ``Pipeline.stats()`` still reports the fused stages as separate rows;
+  each phase keeps its own ``on_error``/``timeout``, and a failure is
+  attributed to the phase that raised.
+
 EOF protocol: exactly one ``EOF`` sentinel traverses each queue.  On the
 normal path a stage *blocks* putting EOF (downstream is draining, so this
 terminates).  On the exceptional path (fail-fast error or cancellation) it
 *force-puts* EOF without blocking so teardown can never deadlock on a full
-queue whose consumer is already dead.
+queue whose consumer is already dead.  ``get_many`` only ever surfaces EOF
+as the last element of a chunk, so a partial tail chunk is processed
+normally before the stage winds down.
 """
 
 from __future__ import annotations
@@ -21,6 +55,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import inspect
+import itertools
 import logging
 import time
 from concurrent.futures import Executor
@@ -59,6 +94,34 @@ class StageSpec:
     queue_size: int = 2  # output queue bound (per stage)
     arena: Any = None  # SlabArena for kind == "aggregate_into" (duck-typed)
     cache: Any = None  # shard cache/prefetcher probed for stats (duck-typed)
+    chunk: int = 1  # items per executor dispatch (chunked execution)
+    #: the fn takes the whole chunk (a list) and returns a same-length,
+    #: same-order list — lets numpy-style stages batch their own lookups.
+    #: The fn owns per-item robustness: an exception it raises fails the
+    #: WHOLE chunk (one failure record per item under SKIP).
+    vectorized: bool = False
+    #: phases of a FUSED stage (builder.fuse / auto_fuse): the original
+    #: StageSpecs, applied back to back inside one executor call.  Empty for
+    #: a plain stage.  A fused spec's fn is None; concurrency/chunk are the
+    #: max over its phases; on_error/timeout/cache stay per phase.
+    fused: tuple = ()
+
+    @property
+    def phases(self) -> tuple:
+        """The per-phase sub-specs this runtime executes ((self,) if plain)."""
+        return self.fused or (self,)
+
+    @property
+    def input_chunk(self) -> int:
+        """How many items this stage wants per queue hop from upstream —
+        what the producer's output queue is auto-widened to.  Only a
+        chunked pipe stage widens: ``chunk=`` is an explicit opt-in by the
+        stage author, who thereby asserts the items are cheap to buffer
+        chunk-deep.  Aggregate stages also drain via ``get_many`` but their
+        items can be heavyweight (whole decoded samples on the list-collate
+        path), so they make do with whatever the producer's ``queue_size``
+        allows — raise it explicitly where the items are known-small."""
+        return self.chunk if self.kind == "pipe" else 1
 
 
 class StageRuntime:
@@ -75,14 +138,31 @@ class StageRuntime:
         self.in_q = in_q
         self.out_q = out_q
         self.default_executor = default_executor
-        self.stats = StageStats(name=spec.name, concurrency=spec.concurrency)
-        if spec.arena is not None:
-            self.stats.arena = spec.arena  # memory-pressure visibility
-        if spec.cache is not None:
-            self.stats.cache = spec.cache  # shard-cache visibility
+        # One StageStats per phase: a fused stage keeps reporting its
+        # original stages as separate dashboard rows (per-phase timing is
+        # recorded inside the worker).  A plain stage has exactly one phase.
+        self.phases: tuple[StageSpec, ...] = spec.phases
+        self.phase_stats = [
+            StageStats(
+                name=p.name,
+                concurrency=spec.concurrency,
+                chunk=spec.chunk,
+                # autotune may only propose chunk= where pipe() accepts it
+                chunkable=p.kind == "pipe" and not _is_async_callable(p.fn),
+            )
+            for p in self.phases
+        ]
+        for p, st in zip(self.phases, self.phase_stats):
+            if p.arena is not None:
+                st.arena = p.arena  # memory-pressure visibility
+            if p.cache is not None:
+                st.cache = p.cache  # shard-cache visibility
+        self.stats = self.phase_stats[0]
         if in_q is not None:
-            in_q.consumer_stats = self.stats
-        out_q.producer_stats = self.stats
+            # input waits (starvation) are charged to the first phase ...
+            in_q.consumer_stats = self.phase_stats[0]
+        # ... output waits (backpressure) to the last.
+        out_q.producer_stats = self.phase_stats[-1]
 
     # ------------------------------------------------------------------
     async def _call(self, item: Any) -> Any:
@@ -118,7 +198,170 @@ class StageRuntime:
 
     async def _emit(self, item: Any) -> None:
         await self.out_q.put(item)
-        self.stats.record_out()
+        self.phase_stats[-1].record_out()
+
+    async def _emit_many(self, items: list[Any]) -> None:
+        await self.out_q.put_many(items)
+        self.phase_stats[-1].record_out_many(len(items))
+
+    # -- chunked / fused execution ----------------------------------------
+    def _apply_chunk(self, items: list[Any]) -> tuple:
+        """Runs IN the worker thread: apply every phase to every item.
+
+        This is the whole point of chunked execution — one executor
+        dispatch covers ``len(items) × len(phases)`` function calls that
+        the per-item path would each pay a loop round trip for.  Phases
+        run phase-major (phase k over the whole chunk, then phase k+1 over
+        its survivors): order within the chunk is preserved, timing costs
+        two clock reads per phase per CHUNK instead of two per item, and
+        the fused stages still get separate per-phase dashboard rows.
+        Failures are caught per item — a bad sample must not take its
+        chunk-mates with it.  Per-item clocks run only for phases with a
+        ``timeout`` (post-hoc enforcement needs them).
+
+        Returns ``(survivors, per_phase, failures)``: surviving values in
+        input order, ``(n_entered, seconds)`` per phase reached, and
+        ``(phase_idx, exc)`` per failed item.
+        """
+        per_phase: list[tuple[int, float]] = []
+        failures: list[tuple[int, BaseException]] = []
+        values = items
+        for k, phase in enumerate(self.phases):
+            fn = phase.fn
+            timeout = phase.timeout
+            entered = len(values)
+            survivors: list[Any] = []
+            t0 = time.monotonic()
+            if phase.vectorized:
+                # one call over the whole chunk; the fn owns per-item
+                # robustness, so a raise here loses every item of the chunk
+                try:
+                    survivors = list(fn(values))
+                    if len(survivors) != entered:
+                        raise ValueError(
+                            f"vectorized stage {phase.name!r} returned "
+                            f"{len(survivors)} items for a chunk of {entered}"
+                        )
+                except Exception as e:  # noqa: BLE001
+                    survivors = []
+                    failures.extend((k, e) for _ in range(entered))
+                dt = time.monotonic() - t0
+                if survivors and timeout is not None and dt > timeout * entered:
+                    failures.extend(
+                        (
+                            k,
+                            asyncio.TimeoutError(
+                                f"chunk exceeded {timeout}s/item in stage "
+                                f"{phase.name!r} ({dt:.3f}s for {entered})"
+                            ),
+                        )
+                        for _ in range(entered)
+                    )
+                    survivors = []
+                per_phase.append((entered, dt))
+                values = survivors
+                if not values:
+                    break
+                continue
+            if timeout is None:
+                append = survivors.append
+                for v in values:
+                    try:
+                        append(fn(v))
+                    except Exception as e:  # noqa: BLE001 - per-item robustness
+                        failures.append((k, e))
+            else:
+                for v in values:
+                    t1 = time.monotonic()
+                    try:
+                        out = fn(v)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((k, e))
+                        continue
+                    dt = time.monotonic() - t1
+                    if dt > timeout:
+                        # post-hoc per-item timeout: the thread cannot be
+                        # preempted mid-call, but the item is still dropped
+                        # with the same skippable-failure semantics
+                        failures.append((
+                            k,
+                            asyncio.TimeoutError(
+                                f"item exceeded {timeout}s in stage "
+                                f"{phase.name!r} ({dt:.3f}s)"
+                            ),
+                        ))
+                    else:
+                        survivors.append(out)
+            per_phase.append((entered, time.monotonic() - t0))
+            values = survivors
+            if not values:
+                break  # nothing left for later phases (they record 0 items)
+        return values, per_phase, failures
+
+    def _chunk_budget(self, n_items: int) -> float | None:
+        """Whole-chunk hang backstop: only boundable when EVERY phase has a
+        timeout (an untimed phase may legitimately run forever)."""
+        if any(p.timeout is None for p in self.phases):
+            return None
+        return sum(p.timeout for p in self.phases) * n_items
+
+    def _record_chunk(self, outcome: tuple) -> list[Any]:
+        """Fold a chunk's worker-side outcome into per-phase stats (on the
+        loop thread — StageStats is single-writer) and return the surviving
+        values in input order.  Per-chunk cost is O(phases + failures), not
+        O(items).  Raises ``PipelineFailure`` if a failing phase is
+        fail-fast (after recording the whole chunk, so the dashboard shows
+        it even when one item tears the pipeline down)."""
+        results, per_phase, failures = outcome
+        for k, (entered, dt) in enumerate(per_phase):
+            st = self.phase_stats[k]
+            if k > 0:
+                st.num_in += entered  # survivors of phase k-1 enter phase k
+            st.record_task(dt)
+            if k < len(self.phase_stats) - 1:
+                # what this phase handed to the next phase, in-worker
+                survived = per_phase[k + 1][0] if k + 1 < len(per_phase) else 0
+                st.record_out_many(survived)
+        failure: PipelineFailure | None = None
+        for k, exc in failures:
+            self.phase_stats[k].record_failure(exc)
+            logger.warning("stage %s failed on item: %r", self.phases[k].name, exc)
+            if self.phases[k].on_error is OnError.FAIL and failure is None:
+                failure = PipelineFailure(self.phases[k].name, exc)
+                failure.__cause__ = exc
+        if failure is not None:
+            raise failure
+        return results
+
+    async def _guarded_chunk(self, items: list[Any]) -> list[Any]:
+        """Run one chunk task; returns surviving results (input order).
+        Raises only in fail-fast mode (or on cancellation)."""
+        loop = asyncio.get_running_loop()
+        ex = self.spec.executor or self.default_executor
+        coro = loop.run_in_executor(ex, self._apply_chunk, items)
+        budget = self._chunk_budget(len(items))
+        try:
+            if budget is not None:
+                outcomes = await asyncio.wait_for(coro, budget)
+            else:
+                outcomes = await coro
+        except asyncio.CancelledError:
+            raise
+        except asyncio.TimeoutError as e:
+            # the whole-chunk backstop tripped: the worker is hung, so every
+            # item of this chunk is lost (charged to the first timed phase)
+            k = next(i for i, p in enumerate(self.phases) if p.timeout is not None)
+            st = self.phase_stats[k]
+            for _ in items:
+                st.record_failure(e)
+            logger.warning(
+                "stage %s: chunk of %d items exceeded the %0.1fs chunk budget",
+                self.phases[k].name, len(items), budget,
+            )
+            if any(p.on_error is OnError.FAIL for p in self.phases):
+                raise PipelineFailure(self.phases[k].name, e) from e
+            return []
+        return self._record_chunk(outcomes)
 
     # -- top-level runner --------------------------------------------------
     async def run(self) -> None:
@@ -147,9 +390,61 @@ class StageRuntime:
             # A synchronous iterable is advanced on the loop thread.  The
             # per-item cost of sources (paths / indices) is tiny; blocking
             # sources should be wrapped in an async generator or offloaded
-            # with a pipe stage instead.
-            for item in src:  # type: ignore[union-attr]
-                await self._emit(item)
+            # with a pipe stage instead.  Emission is batched up to the
+            # output queue's capacity so a chunk-pulling consumer costs one
+            # source hop per chunk, not per item.
+            it = iter(src)  # type: ignore[arg-type]
+            n = max(1, self.out_q.maxsize)
+            while True:
+                chunk = list(itertools.islice(it, n))
+                if not chunk:
+                    break
+                await self._emit_many(chunk)
+
+    def _pipe_adapters(self) -> tuple[Callable, Callable, Callable]:
+        """The three points where the per-item and chunked pipe runners
+        differ:
+
+        * ``pull()`` → ``(units, eof)``: zero or one dispatchable work
+          units (a single item, or a non-empty chunk list) pulled with one
+          queue interaction;
+        * ``run(unit)`` → outcome: the unit's stage function(s), guarded;
+        * ``emit(outcome)``: push whatever survived downstream.
+
+        ``run`` and ``emit`` are separate because the ordered runner must
+        run units concurrently but emit strictly in FIFO dispatch order.
+        Everything else — the concurrency semaphore, the FIFO task queue,
+        the EOF/teardown protocol — is shared scaffolding in
+        ``_run_pipe_ordered``/``_run_pipe_unordered`` and exists exactly
+        once.
+        """
+        if self.spec.chunk > 1 or self.spec.fused:
+
+            async def pull() -> tuple[tuple, bool]:
+                chunk = await self.in_q.get_many(self.spec.chunk)
+                eof = chunk[-1] is EOF
+                if eof:
+                    chunk.pop()  # the partial tail chunk still runs
+                return ((chunk,) if chunk else ()), eof
+
+            async def emit(results: list[Any]) -> None:
+                if results:
+                    await self._emit_many(results)
+
+            return pull, self._guarded_chunk, emit
+
+        async def pull() -> tuple[tuple, bool]:
+            item = await self.in_q.get()
+            if item is EOF:
+                return (), True
+            return (item,), False
+
+        async def emit(outcome: tuple[bool, Any]) -> None:
+            ok, result = outcome
+            if ok:
+                await self._emit(result)
+
+        return pull, self._guarded, emit
 
     async def _run_pipe(self) -> None:
         if self.spec.output_order == "completion":
@@ -158,39 +453,43 @@ class StageRuntime:
             await self._run_pipe_ordered()
 
     async def _run_pipe_ordered(self) -> None:
-        """Input-order-preserving concurrent map.
+        """Input-order-preserving concurrent map (per-item or chunked).
 
         A reader creates up to ``concurrency`` in-flight tasks; an emitter
         awaits them in FIFO order, so results come out in input order while
-        up to N items are processed concurrently.  The bounded task queue is
-        the concurrency limiter, so backpressure from out_q stalls the reader.
+        up to N units (items, or whole chunks) are processed concurrently.
+        The bounded task queue is the concurrency limiter, so backpressure
+        from out_q stalls the reader.  With chunks, order is preserved
+        twice over: chunks dispatch and emit in FIFO order, and
+        ``_apply_chunk`` walks its items in order.
         """
         assert self.in_q is not None
+        pull, run, emit = self._pipe_adapters()
         # ``sem`` is the true in-flight bound; ``task_q`` only parks tasks
         # (running or completed) in FIFO order for the emitter, so completed
         # results buffered ahead of a backpressured emitter stay bounded too.
         sem = asyncio.Semaphore(self.spec.concurrency)
         task_q: asyncio.Queue[Any] = asyncio.Queue(self.spec.concurrency)
 
-        async def guarded_release(item: Any) -> tuple[bool, Any]:
+        async def guarded_release(unit: Any) -> Any:
             try:
-                return await self._guarded(item)
+                return await run(unit)
             finally:
                 sem.release()
 
         async def reader() -> None:
             try:
-                while True:
-                    item = await self.in_q.get()
-                    if item is EOF:
-                        break
-                    await sem.acquire()
-                    t = asyncio.ensure_future(guarded_release(item))
-                    try:
-                        await task_q.put(t)
-                    except BaseException:
-                        t.cancel()
-                        raise
+                eof = False
+                while not eof:
+                    units, eof = await pull()
+                    for unit in units:
+                        await sem.acquire()
+                        t = asyncio.ensure_future(guarded_release(unit))
+                        try:
+                            await task_q.put(t)
+                        except BaseException:
+                            t.cancel()
+                            raise
                 await task_q.put(EOF)
             except BaseException:
                 # Emitter is failed/cancelled (or we are); never block here.
@@ -205,9 +504,7 @@ class StageRuntime:
                 t = await task_q.get()
                 if t is EOF:
                     return
-                ok, result = await t
-                if ok:
-                    await self._emit(result)
+                await emit(await t)
 
         try:
             async with TaskGroup() as tg:
@@ -221,39 +518,42 @@ class StageRuntime:
             raise
 
     async def _run_pipe_unordered(self) -> None:
-        """Completion-order concurrent map (lower latency, no ordering)."""
+        """Completion-order concurrent map (lower latency, no ordering
+        across units; items within a chunk still emit in order)."""
         assert self.in_q is not None
+        pull, run, emit = self._pipe_adapters()
         sem = asyncio.Semaphore(self.spec.concurrency)
 
-        async def worker(item: Any) -> None:
+        async def worker(unit: Any) -> None:
             try:
-                ok, result = await self._guarded(item)
-                if ok:
-                    await self._emit(result)
+                await emit(await run(unit))
             finally:
                 sem.release()
 
         async with TaskGroup() as tg:
-            while True:
-                item = await self.in_q.get()
-                if item is EOF:
-                    break
-                await sem.acquire()
-                tg.create_task(worker(item))
+            eof = False
+            while not eof:
+                units, eof = await pull()
+                for unit in units:
+                    await sem.acquire()
+                    tg.create_task(worker(unit))
             # TaskGroup's __aexit__ awaits outstanding workers before we
             # return to run(), which then emits EOF downstream.
 
     async def _run_aggregate(self) -> None:
         assert self.in_q is not None
+        size = self.spec.agg_size
         buf: list[Any] = []
-        while True:
-            item = await self.in_q.get()
-            if item is EOF:
-                break
-            buf.append(item)
-            if len(buf) >= self.spec.agg_size:
-                await self._emit(buf)
-                buf = []
+        eof = False
+        while not eof:
+            items = await self.in_q.get_many(size)  # one hop per batch-ish
+            if items[-1] is EOF:
+                eof = True
+                items.pop()
+            buf.extend(items)
+            while len(buf) >= size:
+                await self._emit(buf[:size])
+                del buf[:size]
         if buf and not self.spec.drop_last:
             await self._emit(buf)
 
@@ -276,12 +576,14 @@ class StageRuntime:
         assert self.in_q is not None
         size = self.spec.agg_size
         ready: list[Any] = []  # SlotRefs, in arrival (= source) order
-        while True:
-            item = await self.in_q.get()
-            if item is EOF:
-                break
-            ready.append(item)
-            if len(ready) >= size:
+        eof = False
+        while not eof:
+            items = await self.in_q.get_many(size)  # one hop per batch-ish
+            if items[-1] is EOF:
+                eof = True
+                items.pop()
+            ready.extend(items)
+            while len(ready) >= size:
                 await self._emit(self._assemble(ready, size))
         if ready:
             if self.spec.drop_last:
@@ -355,5 +657,4 @@ class StageRuntime:
             item = await self.in_q.get()
             if item is EOF:
                 break
-            for sub in item:
-                await self._emit(sub)
+            await self._emit_many(list(item))

@@ -110,6 +110,12 @@ class Pipeline:
         in_q: MonitoredQueue | None = None
         for i, spec in enumerate(self._specs):
             size = self._sink_buffer_size if i == len(self._specs) - 1 else spec.queue_size
+            if i + 1 < len(self._specs):
+                # a chunk-pulling consumer (chunked pipe, aggregate) can only
+                # fill its chunks from what this queue holds — widen the
+                # bound to the consumer's chunk so amortization actually
+                # happens (items are small: indices, refs, views)
+                size = max(size, self._specs[i + 1].input_chunk)
             out_q = MonitoredQueue(max(1, size), name=f"q:{spec.name}")
             queues.append(out_q)
             runtimes.append(StageRuntime(spec, in_q, out_q, self._executor))
@@ -248,7 +254,10 @@ class Pipeline:
 
     # -- visibility ----------------------------------------------------------
     def stats(self) -> list[StageStatsSnapshot]:
-        return [rt.stats.snapshot() for rt in self._runtimes]
+        # one row per ORIGINAL stage: a fused runtime contributes a row per
+        # phase (timings recorded inside the worker), so fusion is invisible
+        # to dashboards except for the vanished queue waits
+        return [st.snapshot() for rt in self._runtimes for st in rt.phase_stats]
 
     def format_stats(self) -> str:
         return format_stats(self.stats())

@@ -67,6 +67,51 @@ class MonitoredQueue:
             self.consumer_stats.num_in += 1
         return item
 
+    async def get_many(self, max_items: int) -> list[Any]:
+        """Pull up to ``max_items`` items in ONE event-loop hop.
+
+        This is the chunked-execution primitive: blocking (and the get_wait
+        charge) happens only for the *first* item; everything already
+        buffered is drained without touching the loop again, so the
+        per-item hop cost is amortized over the chunk.  A chunk is never
+        awaited full: whatever is available now is returned (latency over
+        batching).  ``EOF`` is only ever the LAST element of the returned
+        list — nothing follows it on the wire, and nothing is consumed
+        past it.
+        """
+        if self._q.empty():
+            t0 = time.monotonic()
+            item = await self._q.get()
+            if self.consumer_stats is not None:
+                self.consumer_stats.get_wait += time.monotonic() - t0
+        else:
+            item = self._q.get_nowait()
+        out = [item]
+        while item is not EOF and len(out) < max_items and not self._q.empty():
+            item = self._q.get_nowait()
+            out.append(item)
+        if self.consumer_stats is not None:
+            n = len(out) - (1 if out[-1] is EOF else 0)
+            self.consumer_stats.num_in += n
+        return out
+
+    async def put_many(self, items: list[Any]) -> None:
+        """Put a chunk of items, awaiting only while the queue is full.
+
+        The fast path is pure ``put_nowait`` — zero awaits for a chunk that
+        fits, versus one loop hop per item on the scalar path.  Blocking on
+        a full queue is still per-item (that is the backpressure working,
+        and it is charged to the producer as ``put_wait``).
+        """
+        for item in items:
+            if self._q.full():
+                t0 = time.monotonic()
+                await self._q.put(item)
+                if self.producer_stats is not None:
+                    self.producer_stats.put_wait += time.monotonic() - t0
+            else:
+                self._q.put_nowait(item)
+
     # non-blocking helpers used by the pipeline runner -------------------
     def put_nowait_force(self, item: Any) -> None:
         """Best-effort put that never blocks (used to flush EOF on failure)."""

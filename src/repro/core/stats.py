@@ -20,6 +20,8 @@ class StageStats:
 
     name: str
     concurrency: int = 1
+    chunk: int = 1  # items per executor dispatch (1 = per-item path)
+    chunkable: bool = False  # sync pipe stage: chunk= would be accepted
     num_in: int = 0  # items pulled from the input queue
     num_out: int = 0  # items emitted to the output queue
     num_failed: int = 0
@@ -38,6 +40,14 @@ class StageStats:
 
     def record_out(self) -> None:
         self.num_out += 1
+        if self.first_out_t is None:
+            self.first_out_t = time.monotonic()
+
+    def record_out_many(self, n: int) -> None:
+        """Batched ``record_out`` — one call per chunk, not per item."""
+        if n <= 0:
+            return
+        self.num_out += n
         if self.first_out_t is None:
             self.first_out_t = time.monotonic()
 
@@ -71,6 +81,8 @@ class StageStats:
         return StageStatsSnapshot(
             name=self.name,
             concurrency=self.concurrency,
+            chunk=self.chunk,
+            chunkable=self.chunkable,
             num_in=self.num_in,
             num_out=self.num_out,
             num_failed=self.num_failed,
@@ -113,6 +125,10 @@ class StageStatsSnapshot:
     get_wait: float
     put_wait: float
     last_error: str | None
+    # chunked execution: items per executor dispatch (1 = per-item path),
+    # and whether chunk= is even applicable (sync pipe stage)
+    chunk: int = 1
+    chunkable: bool = False
     # memory pressure (nonzero only for arena-backed aggregate_into stages)
     bytes_allocated: int = 0
     slabs_in_flight: int = 0

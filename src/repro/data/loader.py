@@ -47,6 +47,49 @@ instead of reallocating.  Ownership rules:
 allocation + one extra copy per sample per batch) — the fallback for ragged
 shapes or third-party stages that retain references into batches.
 
+Chunked + fused execution (``chunk=``, default 16)
+--------------------------------------------------
+With the storage path this fast, the engine's per-item event-loop cost
+(queue hops, task creation, executor dispatch — ~4-5 round trips per stage
+per sample) is the remaining ceiling, so both loaders run their per-sample
+stages chunked and fused:
+
+* the slot binder and the read/decode stages take ``chunk=N``: one executor
+  call per N samples instead of per sample (``pipe(..., chunk=N)``);
+* read → decode are **fused** into a single worker call per chunk
+  (``builder.fuse("read", "decode")``), eliminating the queue + task layer
+  between them — ``Pipeline.stats()`` still shows them as separate rows.
+
+Ordering and memory rules under chunking:
+
+* Order is preserved end to end: chunks are dispatched and emitted in FIFO
+  order and items keep their order within a chunk, so the
+  ``aggregate_into`` input-order contract holds unchanged.
+* Slab slot assignment makes chunked decode-into safe: every item carries
+  its own ``(slab, slot)`` ticket, so the N decodes of a chunk write to
+  disjoint rows no matter how chunks interleave across worker threads.
+* A failing sample inside a chunk leaves exactly ONE hole (its slot);
+  chunk-mates are unaffected (per-item error holes, ``OnError.SKIP``).
+* In-flight memory grows from ``concurrency`` samples to
+  ``concurrency × chunk`` samples per chunked stage, plus inter-stage
+  queues widened to ``chunk`` — still item *references*, not pixel data;
+  pixels live in the fixed slab ring either way.
+* The chunked binder binds slots inside the worker (``arena.slot_writer``),
+  so arena backpressure blocks a pool thread rather than polling the loop;
+  ``Pipeline.stop()`` still wakes it via the ``arena.close`` callback.
+
+**Checkpoint skip bound under chunking**: samples accumulate inside
+in-flight chunks before they reach a delivered batch, so a sampler
+checkpoint taken mid-stream can additionally skip the samples resident in
+chunked stages — at most ``chunk`` per unit of stage concurrency plus the
+``chunk``-widened queues.  On the default wiring that is
+``(max(read_concurrency, decode_concurrency) + 3) × chunk`` samples (the
+fused read+decode stage runs at the max of the two concurrencies) — on
+top of the sink-buffered batches (sampler.py) and, on the prefetcher
+path, the ``_PREFETCH_LOOKAHEAD`` window below.
+Still bounded and epoch-local; set ``chunk=1`` to restore the narrow
+per-item bound when checkpoint tightness matters more than throughput.
+
 Sharded datasets (``repro.data.shards``)
 ----------------------------------------
 Both loaders accept a ``ShardDataset`` unchanged: its ``read_bytes`` hands
@@ -198,7 +241,17 @@ def build_image_loader(
     epochs: int | None = 1,  # None = stream forever (training);  N = bounded
     zero_copy: bool = True,
     arena_slabs: int | None = None,  # None = sized from the consumer window
+    chunk: int = 16,  # items per executor dispatch; 1 = per-item path
+    fuse_stages: bool = True,  # collapse read+decode into one worker call
 ) -> Pipeline:
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    # fusion widens both stages to max(read, decode) concurrency — a
+    # concurrency-1 stage may be deliberate (serialization), so don't
+    fuse_stages = fuse_stages and (
+        min(read_concurrency, decode_concurrency) > 1
+        or read_concurrency == decode_concurrency
+    )
     sampler = sampler or CheckpointableSampler(len(dataset), batch_size=1, shuffle=False)
 
     def indices():
@@ -251,11 +304,17 @@ def build_image_loader(
                 out[j] = im
             return {"images": out}
 
-        return (
+        builder = (
             PipelineBuilder()
             .add_source(index_stream, name="sampler")
-            .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
-            .pipe(decode, concurrency=decode_concurrency, name="decode")
+            .pipe(read, concurrency=read_concurrency, name="read",
+                  cache=cache_probe, chunk=chunk)
+            .pipe(decode, concurrency=decode_concurrency, name="decode", chunk=chunk)
+        )
+        if fuse_stages:
+            builder.fuse("read", "decode")
+        return (
+            builder
             .aggregate(batch_size, drop_last=True, name="batch")
             .pipe(make_batch, name="collate")
             .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
@@ -292,12 +351,33 @@ def build_image_loader(
             ref.mark_hole()  # the row will never arrive; unblock the batch
             raise
 
+    builder = PipelineBuilder().add_source(index_stream, name="sampler")
+    if chunk > 1:
+        # chunked binder: one executor call assigns N slots in order (the
+        # stage is concurrency=1 and order-preserving, so the stateful
+        # cursor is single-writer).  Arena exhaustion blocks the worker
+        # thread — the same backpressure, minus a loop poll per item.
+        next_slot = arena.slot_writer()
+
+        def bind(item):
+            return item, next_slot()
+
+        builder.pipe(bind, concurrency=1, name="slot", chunk=chunk)
+    else:
+        builder.pipe(arena.binder(), concurrency=1, name="slot")  # blocks = backpressure
+    builder.pipe(
+        read, concurrency=read_concurrency, name="read",
+        cache=cache_probe, chunk=chunk,
+    ).pipe(
+        decode, concurrency=decode_concurrency, name="decode", chunk=chunk,
+        # the batch stage drains via get_many: a chunk-wide queue of slot
+        # REFS (tickets, not pixels) lets it amortize its loop hops too
+        queue_size=max(2, chunk),
+    )
+    if fuse_stages:
+        builder.fuse("read", "decode")
     pipe = (
-        PipelineBuilder()
-        .add_source(index_stream, name="sampler")
-        .pipe(arena.binder(), concurrency=1, name="slot")  # blocks = backpressure
-        .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
-        .pipe(decode, concurrency=decode_concurrency, name="decode")
+        builder
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
         .add_sink(buffer_size=sink_buffer)
@@ -322,6 +402,7 @@ def build_lm_loader(
     seed: int = 0,
     zero_copy: bool = True,
     arena_slabs: int | None = None,  # None = sized from the consumer window
+    chunk: int = 16,  # items per executor dispatch; 1 = per-item path
 ) -> tuple[Pipeline, CheckpointableSampler]:
     """Returns (pipeline, sampler) — the sampler is checkpointed alongside
     model state (fault tolerance; see runtime/trainer.py).
@@ -329,7 +410,14 @@ def build_lm_loader(
     The zero-copy path packs rows straight into a packed-rows slab (one
     ``(batch, seq_len) int32`` buffer per field) and skips the collate stage
     entirely; see the module docstring for the slab ownership rules.
+
+    ``chunk`` applies to the read and decode+pack stages (the packer stage
+    stays ``concurrency=1`` — ordered chunk dispatch keeps its state
+    single-writer — and is NOT fused with the wider read stage).  The
+    module docstring's chunked checkpoint-bound caveat applies.
     """
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
     sampler = sampler or CheckpointableSampler(
         len(dataset), batch_size=8, seed=seed, shuffle=True
     )
@@ -353,8 +441,9 @@ def build_lm_loader(
         pipe = (
             PipelineBuilder()
             .add_source(doc_stream, name="sampler")
-            .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
-            .pipe(pack, concurrency=1, name="decode+pack")  # packer is stateful
+            .pipe(read, concurrency=read_concurrency, name="read",
+                  cache=cache_probe, chunk=chunk)
+            .pipe(pack, concurrency=1, name="decode+pack", chunk=chunk)  # stateful
             .disaggregate(name="rows")
             .aggregate(batch_size, drop_last=True, name="batch")
             .pipe(collate, concurrency=decode_concurrency, name="collate")
@@ -379,8 +468,9 @@ def build_lm_loader(
     pipe = (
         PipelineBuilder()
         .add_source(doc_stream, name="sampler")
-        .pipe(read, concurrency=read_concurrency, name="read", cache=cache_probe)
-        .pipe(pack_into, concurrency=1, name="decode+pack")  # packer is stateful
+        .pipe(read, concurrency=read_concurrency, name="read",
+              cache=cache_probe, chunk=chunk)
+        .pipe(pack_into, concurrency=1, name="decode+pack", chunk=chunk)  # stateful
         .disaggregate(name="rows")
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")

@@ -86,6 +86,7 @@ from __future__ import annotations
 
 import bisect
 import functools
+import logging
 import os
 import pathlib
 import threading
@@ -106,6 +107,8 @@ from .format import (
     parse_shard_header,
 )
 from .sources import RangeNotSupported
+
+logger = logging.getLogger("repro.data.shards")
 
 
 class LocalShardSource:
@@ -415,6 +418,7 @@ class ShardPrefetcher:
         sparse_threshold: float = 0.75,
         promote_threshold: float | None = 0.5,
         coalesce_gap: int = 1 << 16,
+        verify_on_install: bool = True,
     ):
         if max_bytes < 1:
             raise ValueError("max_bytes must be >= 1")
@@ -434,6 +438,11 @@ class ShardPrefetcher:
                     f"({type(source).__name__} has none)"
                 )
         self.sparse_threshold = sparse_threshold
+        #: crc-verify whole shards once at cache install (coalesced pass on
+        #: the fetch thread) so reads skip the per-sample crc.  False for
+        #: callers doing their own integrity checking (the URL-mode stack
+        #: wires ``ShardDataset(verify_crc=False)`` through to here).
+        self.verify_on_install = verify_on_install
         #: sparse→full promotion trigger: demand-fetched bytes as a fraction
         #: of the payload (None disables promotion)
         self.promote_threshold = promote_threshold
@@ -460,6 +469,7 @@ class ShardPrefetcher:
         self.misses = 0
         self.evictions = 0
         self.promotions = 0
+        self.corrupt_samples = 0  # found by install-time verification
         self.bytes_cached = 0
         self.bytes_fetched = 0  # wire bytes: payloads + indexes + ranges
         self.index_fetches = 0
@@ -563,7 +573,27 @@ class ShardPrefetcher:
             # replace() must not leave a torn-but-magic-valid cache file
             os.fsync(f.fileno())
         tmp.replace(path)
-        return ShardReader(path)
+        reader = ShardReader(path)
+        if self.verify_on_install:
+            # Coalesced crc: one whole-payload pass NOW, on this fetch
+            # thread (pool worker or demand caller — never the event loop),
+            # instead of one crc per sample on the hot read path; per-read
+            # verification costs ~2x on cold reads.  Corrupt samples stay
+            # unmemoized, so the per-sample-hole contract is untouched.
+            # Local (non-prefetcher) datasets keep lazy per-sample verify —
+            # their bytes were never on the wire, so the first-touch risk
+            # profile is different.
+            bad = reader.verify_all()
+            if bad:
+                # surface transit/origin corruption at the fetch, not one
+                # ShardCorruption hole at a time later on the read path
+                logger.warning(
+                    "shard %s: %d corrupt sample(s) found at cache install",
+                    name, bad,
+                )
+                with self._lock:
+                    self.corrupt_samples += bad
+        return reader
 
     def _fetch_entry(self, name: str, samples=None) -> ShardReader | SparseShardReader:
         """Fetch ``name`` honoring the index-first policy (any thread).
@@ -898,6 +928,7 @@ class ShardPrefetcher:
                 "index_fetches": self.index_fetches,
                 "range_fetches": self.range_fetches,
                 "promotions": self.promotions,
+                "corrupt_samples": self.corrupt_samples,
                 "sparse_shards": sum(
                     1
                     for r, _ in self._cached.values()

@@ -1,0 +1,540 @@
+"""Chunked + fused stage execution: semantics parity with the per-item
+path (order, per-item error holes, timeouts, backpressure, EOF tails),
+fusion's per-phase stats/error attribution, the vectorized chunk mode,
+queue get_many/put_many, and the chunked loader wiring (identical batches,
+bounded checkpoint skip)."""
+
+import asyncio
+import itertools
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PipelineBuilder, PipelineFailure
+from repro.core.queues import EOF, MonitoredQueue
+
+
+def build(src, *stages, sink=3, threads=4, **bkw):
+    b = PipelineBuilder().add_source(src)
+    for st in stages:
+        st(b)
+    return b.add_sink(buffer_size=sink).build(num_threads=threads, **bkw)
+
+
+# ---------------------------------------------------------------------------
+# parity with the per-item path
+# ---------------------------------------------------------------------------
+def test_chunked_preserves_order_and_values():
+    p = build(range(200), lambda b: b.pipe(lambda x: x * 2, concurrency=4, chunk=16))
+    with p.auto_stop():
+        assert list(p) == [x * 2 for x in range(200)]
+
+
+def test_chunk_larger_than_stream_partial_tail():
+    """EOF with a partial tail chunk: the tail still runs and emits."""
+    p = build(range(5), lambda b: b.pipe(lambda x: x + 1, concurrency=2, chunk=64))
+    with p.auto_stop():
+        assert list(p) == [1, 2, 3, 4, 5]
+
+
+def test_chunked_empty_source():
+    p = build([], lambda b: b.pipe(lambda x: x, chunk=8))
+    with p.auto_stop():
+        assert list(p) == []
+
+
+def test_chunked_unordered_returns_all_items():
+    import random
+
+    def jitter(x):
+        time.sleep(random.random() * 0.003)
+        return x
+
+    p = build(
+        range(60),
+        lambda b: b.pipe(jitter, concurrency=4, chunk=8, output_order="completion"),
+    )
+    with p.auto_stop():
+        assert sorted(list(p)) == list(range(60))
+
+
+def test_chunked_multi_stage_chain_matches_per_item():
+    def a(x):
+        return x + 1
+
+    def m(x):
+        return x * 10
+
+    per_item = build(range(97), lambda b: b.pipe(a), lambda b: b.pipe(m))
+    chunked = build(
+        range(97),
+        lambda b: b.pipe(a, concurrency=3, chunk=13),
+        lambda b: b.pipe(m, concurrency=2, chunk=7),
+    )
+    with per_item.auto_stop():
+        want = list(per_item)
+    with chunked.auto_stop():
+        assert list(chunked) == want
+
+
+# ---------------------------------------------------------------------------
+# failure semantics (satellite: chunked/fused failure coverage)
+# ---------------------------------------------------------------------------
+def test_mid_chunk_exception_leaves_exactly_one_hole():
+    def flaky(x):
+        if x == 10:  # exactly one bad item, mid-chunk
+            raise ValueError("bad sample 10")
+        return x
+
+    p = build(range(32), lambda b: b.pipe(flaky, concurrency=2, chunk=32, name="flaky"))
+    with p.auto_stop():
+        out = list(p)
+    assert out == [x for x in range(32) if x != 10]
+    stats = {s.name: s for s in p.stats()}["flaky"]
+    assert stats.num_failed == 1
+    assert "bad sample 10" in stats.last_error
+
+
+def test_chunked_fail_fast_raises_and_tears_down():
+    """Fail-fast inside a chunk surfaces PipelineFailure and cancels the
+    in-flight chunks even with an infinite source (no hang)."""
+
+    def boom(x):
+        if x == 37:
+            raise RuntimeError("boom")
+        return x
+
+    p = build(
+        itertools.count(),
+        lambda b: b.pipe(boom, concurrency=3, chunk=8, on_error="fail", name="boom"),
+    )
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            while True:  # bounded waits: a deadlock fails the test, not CI
+                p.get_item(timeout=15)
+    assert ei.value.stage == "boom"
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+def test_chunked_timeout_is_a_post_hoc_per_item_failure():
+    def hang(x):
+        if x == 2:
+            time.sleep(0.3)
+        return x
+
+    p = build(range(5), lambda b: b.pipe(hang, chunk=4, timeout=0.1, name="hang"))
+    with p.auto_stop():
+        assert list(p) == [0, 1, 3, 4]
+    assert {s.name: s for s in p.stats()}["hang"].num_failed == 1
+
+
+def test_chunked_backpressure_bounds_runahead():
+    """A stalled consumer bounds in-flight work to ~concurrency x chunk
+    items plus the (chunk-widened) queues — never the whole source."""
+    conc, chunk = 2, 8
+    completed = []
+    lock = threading.Lock()
+
+    def work(x):
+        with lock:
+            completed.append(x)
+        return x
+
+    p = build(
+        range(10_000),
+        lambda b: b.pipe(work, concurrency=conc, chunk=chunk, queue_size=1),
+        sink=1,
+    )
+    p.start()
+    time.sleep(0.4)
+    try:
+        # in-flight chunks + chunk-widened input/output queues + sink
+        bound = (conc + 3) * chunk + 1
+        assert len(completed) <= bound, f"unbounded run-ahead: {len(completed)}"
+        assert completed, "pipeline made no progress at all"
+    finally:
+        p.stop()
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+def test_fused_stages_report_separate_stats_rows():
+    def halve(x):
+        return x // 2
+
+    def stringify(x):
+        return str(x)
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(40))
+        .pipe(halve, concurrency=2, name="halve", chunk=8)
+        .pipe(stringify, concurrency=2, name="stringify", chunk=8)
+        .fuse("halve", "stringify")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4)
+    with p.auto_stop():
+        out = list(p)
+    assert out == [str(x // 2) for x in range(40)]
+    stats = {s.name: s for s in p.stats()}
+    assert set(stats) == {"source", "halve", "stringify"}
+    assert stats["halve"].num_in == 40 and stats["halve"].num_out == 40
+    assert stats["stringify"].num_in == 40 and stats["stringify"].num_out == 40
+    # one runtime: the queue between the stages is gone
+    assert len(p._runtimes) == 2
+    assert "stringify" in p.format_stats()
+
+
+def test_fused_failure_attributed_to_the_raising_phase():
+    def first(x):
+        if x % 5 == 0:
+            raise ValueError("first rejects")
+        return x
+
+    def second(x):
+        if x == 7:
+            raise ValueError("second rejects")
+        return x
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(20))
+        .pipe(first, concurrency=2, name="first", chunk=4)
+        .pipe(second, concurrency=2, name="second", chunk=4)
+        .fuse("first", "second")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4)
+    with p.auto_stop():
+        out = list(p)
+    assert out == [x for x in range(20) if x % 5 and x != 7]
+    stats = {s.name: s for s in p.stats()}
+    assert stats["first"].num_failed == 4
+    assert stats["second"].num_failed == 1
+    # survivors of phase 1 = items entering phase 2
+    assert stats["second"].num_in == 16
+
+
+def test_fused_fail_fast_names_the_phase():
+    def ok(x):
+        return x
+
+    def boom(x):
+        if x == 3:
+            raise RuntimeError("boom")
+        return x
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(10))
+        .pipe(ok, concurrency=2, name="ok", chunk=4)
+        .pipe(boom, concurrency=2, name="boom", chunk=4, on_error="fail")
+        .fuse("ok", "boom")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4)
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            list(p)
+    assert ei.value.stage == "boom"
+
+
+def test_fusion_works_per_item_too():
+    """chunk=1 fused stages still collapse into one executor call/item."""
+    b = (
+        PipelineBuilder()
+        .add_source(range(30))
+        .pipe(lambda x: x + 1, concurrency=2, name="a")
+        .pipe(lambda x: x * 3, concurrency=2, name="b")
+        .fuse("a", "b")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4)
+    with p.auto_stop():
+        assert list(p) == [(x + 1) * 3 for x in range(30)]
+    assert len(p._runtimes) == 2
+
+
+def test_auto_fuse_collapses_eligible_adjacent_stages():
+    b = (
+        PipelineBuilder()
+        .add_source(range(25))
+        .pipe(lambda x: x + 1, concurrency=2, name="a")
+        .pipe(lambda x: x * 2, concurrency=2, name="b")
+        .pipe(lambda x: x - 3, concurrency=2, name="c")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4, auto_fuse=True)
+    with p.auto_stop():
+        assert list(p) == [(x + 1) * 2 - 3 for x in range(25)]
+    assert len(p._runtimes) == 2  # source + one fused a+b+c runtime
+    assert {s.name for s in p.stats()} == {"source", "a", "b", "c"}
+
+
+def test_auto_fuse_skips_ineligible_pairs():
+    async def aplus(x):
+        return x + 1
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(10))
+        .pipe(aplus, concurrency=2, name="async")  # async: never fused
+        .pipe(lambda x: x * 2, concurrency=2, name="sync")
+        .add_sink(buffer_size=3)
+    )
+    p = b.build(num_threads=4, auto_fuse=True)
+    with p.auto_stop():
+        assert list(p) == [(x + 1) * 2 for x in range(10)]
+    assert len(p._runtimes) == 3  # nothing fused
+
+
+def test_fuse_validation_errors():
+    def mk():
+        return (
+            PipelineBuilder()
+            .add_source(range(4))
+            .pipe(lambda x: x, name="a", concurrency=2)
+            .pipe(lambda x: x, name="b", concurrency=2)
+            .pipe(lambda x: x, name="c", concurrency=2)
+            .add_sink()
+        )
+
+    with pytest.raises(ValueError):  # unknown stage
+        mk().fuse("a", "zzz").build()
+    with pytest.raises(ValueError):  # not adjacent
+        mk().fuse("a", "c").build()
+    with pytest.raises(ValueError):  # too few names
+        mk().fuse("a")
+    with pytest.raises(ValueError):  # duplicate names
+        mk().fuse("a", "a")
+    with pytest.raises(ValueError):  # overlapping groups
+        mk().fuse("a", "b").fuse("b", "c").build()
+
+    async def afn(x):
+        return x
+
+    with pytest.raises(ValueError):  # async phase
+        (
+            PipelineBuilder()
+            .add_source(range(4))
+            .pipe(afn, name="a")
+            .pipe(lambda x: x, name="b")
+            .fuse("a", "b")
+            .add_sink()
+            .build()
+        )
+    with pytest.raises(ValueError):  # concurrency-1 stage fused wider
+        (
+            PipelineBuilder()
+            .add_source(range(4))
+            .pipe(lambda x: x, name="a", concurrency=1)
+            .pipe(lambda x: x, name="b", concurrency=4)
+            .fuse("a", "b")
+            .add_sink()
+            .build()
+        )
+
+
+def test_chunk_requires_sync_fn():
+    async def afn(x):
+        return x
+
+    with pytest.raises(ValueError):
+        PipelineBuilder().add_source([1]).pipe(afn, chunk=4)
+    with pytest.raises(ValueError):
+        PipelineBuilder().add_source([1]).pipe(lambda x: x, chunk=0)
+
+
+# ---------------------------------------------------------------------------
+# vectorized chunk mode
+# ---------------------------------------------------------------------------
+def test_vectorized_stage_matches_per_item():
+    def bulk(xs):
+        return (np.asarray(xs) * 3).tolist()
+
+    p = build(
+        range(100),
+        lambda b: b.pipe(bulk, concurrency=2, chunk=16, vectorized=True),
+    )
+    with p.auto_stop():
+        assert list(p) == [x * 3 for x in range(100)]
+
+
+def test_vectorized_failure_loses_the_whole_chunk():
+    def bulk(xs):
+        if 10 in xs:
+            raise ValueError("chunk poisoned")
+        return xs
+
+    p = build(
+        range(32),
+        lambda b: b.pipe(bulk, concurrency=1, chunk=8, vectorized=True, name="bulk"),
+    )
+    with p.auto_stop():
+        out = list(p)
+    # the chunk containing 10 is gone wholesale; others untouched
+    assert out == [x for x in range(32) if not (8 <= x < 16)]
+    assert {s.name: s for s in p.stats()}["bulk"].num_failed == 8
+
+
+def test_vectorized_length_mismatch_is_an_error():
+    p = build(
+        range(16),
+        lambda b: b.pipe(lambda xs: xs[:-1], chunk=8, vectorized=True, name="bad"),
+    )
+    with p.auto_stop():
+        assert list(p) == []
+    stats = {s.name: s for s in p.stats()}["bad"]
+    assert stats.num_failed == 16
+    assert "returned" in stats.last_error
+
+
+def test_vectorized_requires_chunk():
+    with pytest.raises(ValueError):
+        PipelineBuilder().add_source([1]).pipe(lambda xs: xs, vectorized=True)
+
+
+# ---------------------------------------------------------------------------
+# queue primitives
+# ---------------------------------------------------------------------------
+def test_get_many_drains_without_passing_eof():
+    async def body():
+        q = MonitoredQueue(10)
+        for i in range(3):
+            await q.put(i)
+        await q.put(EOF)
+        first = await q.get_many(2)
+        assert first == [0, 1]
+        rest = await q.get_many(10)
+        assert rest == [2, EOF]
+
+    asyncio.run(body())
+
+
+def test_get_many_blocks_only_for_the_first_item():
+    async def body():
+        q = MonitoredQueue(10)
+
+        async def feeder():
+            await asyncio.sleep(0.05)
+            await q.put_many([1, 2, 3])
+
+        task = asyncio.ensure_future(feeder())
+        got = await q.get_many(10)
+        # woken by item 1; 2/3 may or may not have landed in the same tick
+        assert got[0] == 1
+        await task
+
+    asyncio.run(body())
+
+
+def test_put_many_respects_capacity():
+    async def body():
+        q = MonitoredQueue(2)
+        done = []
+
+        async def producer():
+            await q.put_many(list(range(6)))
+            done.append(True)
+
+        task = asyncio.ensure_future(producer())
+        await asyncio.sleep(0.01)
+        assert not done  # blocked: queue holds 2
+        got = []
+        while len(got) < 6:
+            got.append(await q.get())
+        await task
+        assert got == list(range(6))
+
+    asyncio.run(body())
+
+
+# ---------------------------------------------------------------------------
+# chunked loader wiring
+# ---------------------------------------------------------------------------
+class _FailingDataset:
+    """Dataset facade that raises on one index (per-sample-hole tests)."""
+
+    def __init__(self, ds, bad: int):
+        self._ds = ds
+        self.bad = bad
+
+    def __len__(self):
+        return len(self._ds)
+
+    def read_bytes(self, i: int):
+        if i == self.bad:
+            raise OSError(f"synthetic read failure on {i}")
+        return self._ds.read_bytes(i)
+
+
+def _collect_images(pipe):
+    out = []
+    with pipe.auto_stop():
+        for batch in pipe:
+            out.append(np.asarray(batch["images"]).copy())
+    return np.concatenate(out) if out else np.empty((0,))
+
+
+def test_chunked_loader_batches_identical_to_per_item(tmp_path):
+    pytest.importorskip("jax", reason="loader transfer stage needs jax")
+    from repro.data import SyntheticImageDataset, build_image_loader
+
+    ds = SyntheticImageDataset.materialize(tmp_path, 24, hw=(16, 16), seed=3)
+    kw = dict(batch_size=8, hw=(16, 16), num_threads=6, epochs=1)
+    want = _collect_images(build_image_loader(ds, chunk=1, fuse_stages=False, **kw))
+    got = _collect_images(build_image_loader(ds, chunk=8, **kw))
+    assert want.shape == (24, 16, 16, 3)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_chunked_loader_failure_is_one_hole(tmp_path):
+    """A failing sample inside a chunk holes exactly itself — the delivered
+    stream matches the per-item path's to the byte."""
+    pytest.importorskip("jax", reason="loader transfer stage needs jax")
+    from repro.data import SyntheticImageDataset, build_image_loader
+
+    base = SyntheticImageDataset.materialize(tmp_path, 24, hw=(16, 16), seed=4)
+    kw = dict(batch_size=8, hw=(16, 16), num_threads=6, epochs=1)
+    want = _collect_images(
+        build_image_loader(_FailingDataset(base, 5), chunk=1, fuse_stages=False, **kw)
+    )
+    got = _collect_images(build_image_loader(_FailingDataset(base, 5), chunk=8, **kw))
+    np.testing.assert_array_equal(got, want)
+    # exactly one sample is missing (per-item holes, not per-chunk)
+    assert got.shape[0] == 16  # 23 survivors -> 2 full batches, tail dropped
+
+
+@pytest.mark.parametrize("read_conc,decode_conc", [(4, 4), (2, 8)])
+def test_chunked_loader_checkpoint_skip_is_bounded(tmp_path, read_conc, decode_conc):
+    """The documented bound: chunking widens the mid-stream checkpoint skip
+    by at most (max(read_concurrency, decode_concurrency) + 3) x chunk
+    samples on top of the sink-buffered batches — never the whole epoch.
+    The max matters: fuse("read", "decode") runs the fused stage at the
+    wider of the two concurrencies (the asymmetric case covers it)."""
+    pytest.importorskip("jax", reason="loader transfer stage needs jax")
+    from repro.data import CheckpointableSampler, SyntheticImageDataset, build_image_loader
+
+    n, batch, chunk, sink = 512, 8, 16, 3
+    ds = SyntheticImageDataset.materialize(tmp_path, n, hw=(16, 16), seed=5)
+    sampler = CheckpointableSampler(n, batch_size=1, shuffle=False)
+    pipe = build_image_loader(
+        ds, batch_size=batch, hw=(16, 16), read_concurrency=read_conc,
+        decode_concurrency=decode_conc, sink_buffer=sink, sampler=sampler,
+        epochs=None, chunk=chunk,
+    )
+    consumed = 0
+    with pipe.auto_stop():
+        it = iter(pipe)
+        for _ in range(4):
+            next(it)
+            consumed += batch
+        time.sleep(0.3)  # let the pipeline run as far ahead as it can
+        handed_out = sampler.state_dict()["cursor"]  # batch_size=1: samples
+    skipped = handed_out - consumed
+    bound = (max(read_conc, decode_conc) + 3) * chunk + (sink + 2) * batch
+    assert 0 <= skipped <= bound, f"skip {skipped} exceeds documented bound {bound}"

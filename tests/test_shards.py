@@ -563,3 +563,91 @@ def test_synthetic_token_dataset_honors_seed_in_index_mapping():
     # ... and indices one pool-length apart no longer alias in lockstep
     aliases = sum(a._pool_index(i) == a._pool_index(i + 64) for i in range(n - 64))
     assert aliases < (n - 64) // 4
+
+
+# ---------------------------------------------------------------------------
+# coalesced crc verification (install-time / eager-open)
+# ---------------------------------------------------------------------------
+def _corrupt_sample(shard_path, reader_cls, sample):
+    """Flip a payload byte of ``sample`` in the shard file on disk."""
+    r = reader_cls(shard_path)
+    off = int(r.offsets[sample]) + 5
+    r.close()
+    raw = bytearray(shard_path.read_bytes())
+    raw[off] ^= 0xFF
+    shard_path.write_bytes(raw)
+
+
+def test_verify_all_memoizes_good_samples_only(tmp_path):
+    from repro.data import encode_sample
+
+    path = tmp_path / "s.rpshard"
+    with ShardWriter(path) as w:
+        for i in range(4):
+            w.add(encode_sample(np.full(32, i, dtype=np.int32)))
+    _corrupt_sample(path, ShardReader, 2)
+    r = ShardReader(path)
+    assert r.verify_all() == 1  # one corrupt sample found
+    assert list(r._verified) == [True, True, False, True]
+    r.read(0)  # memoized: no crc work, no raise
+    with pytest.raises(ShardCorruption):
+        r.read(2)  # corrupt sample keeps raising per sample
+    r.close()
+
+
+def test_cache_install_verifies_whole_shard_once(tmp_path):
+    """A fetched shard is crc-verified at install time (coalesced pass on
+    the fetch thread); reads then skip per-sample crc entirely, while a
+    corrupt sample stays a per-sample hole."""
+    ds, rds, src, pf = _remote_fixture(tmp_path, n=16, per_shard=8)
+    name = rds.shard_names[0]
+    _corrupt_sample(tmp_path / "remote" / name, ShardReader, 3)
+    reader = pf.reader(name)
+    # install-time verification memoized every intact sample ...
+    assert list(reader._verified) == [True] * 3 + [False] + [True] * 4
+    reader.read(0)  # pure pointer math now
+    # ... and the corrupt one still raises, per sample, on every read
+    with pytest.raises(ShardCorruption):
+        reader.read(3)
+    with pytest.raises(ShardCorruption):
+        reader.read(3)
+    rds.close()
+
+
+def test_eager_local_verification_at_open(tmp_path):
+    src = SyntheticImageDataset.materialize(tmp_path / "src", 16, hw=(8, 8), seed=1)
+    sds = pack(src, tmp_path / "packed", samples_per_shard=8)
+    name = sds.shard_names[1]
+    sds.close()
+    _corrupt_sample(tmp_path / "packed" / name, ShardReader, 2)
+
+    eager = ShardDataset(tmp_path / "packed", verify_crc="eager")
+    assert bytes(eager.read_bytes(0)) == bytes(src.read_bytes(0))
+    # first touch of shard 1 ran the coalesced pass; sample 8+2 is corrupt
+    with pytest.raises(ShardCorruption):
+        eager.read_bytes(10)
+    assert bytes(eager.read_bytes(9)) == bytes(src.read_bytes(9))
+    # every intact sample of the touched shards is memoized
+    assert list(eager._readers[1]._verified) == [True, True, False] + [True] * 5
+    eager.close()
+
+
+def test_read_bytes_many_matches_read_bytes(tmp_path):
+    src = SyntheticImageDataset.materialize(tmp_path / "src", 20, hw=(8, 8), seed=2)
+    sds = pack(src, tmp_path / "packed", samples_per_shard=6)
+    order = np.random.default_rng(0).permutation(20).tolist()
+    many = sds.read_bytes_many(order)
+    assert [bytes(v) for v in many] == [bytes(sds.read_bytes(i)) for i in order]
+    with pytest.raises(IndexError):
+        sds.read_bytes_many([0, 20])
+    assert sds.read_bytes_many([]) == []
+    sds.close()
+
+
+def test_verify_on_install_opt_out(tmp_path):
+    """verify_crc=False must not pay (or memoize) any install-time crc."""
+    ds, rds, src, pf = _remote_fixture(tmp_path, n=8, per_shard=8)
+    pf.verify_on_install = False
+    reader = pf.reader(rds.shard_names[0])
+    assert not reader._verified.any()  # no coalesced pass ran
+    rds.close()
