@@ -1,0 +1,420 @@
+"""Fault recovery under chaos: stragglers, dying peers, truncated bodies.
+
+PR 6's robustness layer is only real if it is *gated*: this bench injects
+the faults the paper's production setting actually sees and measures that
+the pipeline recovers instead of collapsing or corrupting.
+
+Scenarios (rows):
+
+* ``faults_bimodal_*`` — a chunked pipeline whose stage has a bimodal
+  latency distribution (``FaultInjectingStage``: most items fast, a seeded
+  few paying a long tail).  Three runs: clean (no tail), the straggler
+  slow lane ON, and the slow lane OFF.  The gated claim: the slow lane
+  sustains ≥ ``GATE_SLOWLANE_RATIO`` of clean throughput while the
+  lane-off baseline demonstrably collapses (≤ ``GATE_BASELINE_MAX``) —
+  one slow item holding its whole chunk hostage is exactly the failure
+  chunked execution introduced.
+* ``faults_peer_death`` — a shard fleet where the warm peer is killed
+  mid-run: the circuit breaker benches it (with half-open probes after
+  cooldown), every fetch falls through to the origin, and the run
+  completes with zero hangs and zero corrupt payloads.
+* ``faults_peer_hedge`` — the peer is alive but bandwidth-starved: the
+  hedged ``TieredSource`` stops waiting out the slow tier and races the
+  origin (first success wins), so throughput tracks the fast tier.
+* ``faults_truncated`` — the origin drops connections mid-body: the
+  Content-Length validation surfaces each as a retryable transport error,
+  the retry layer covers it, and the payload that lands is byte-identical
+  (never a short install).
+
+Gates recorded in ``BENCH_faults.json``; ``--gate`` re-checks them at
+smoke size and exits nonzero on regression (CI wires this in).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = _ROOT / "BENCH_faults.json"
+
+# -- bimodal workload shape -------------------------------------------------
+BASE_S = 0.004  # fast-mode per-item latency
+CHUNK = 16
+CONCURRENCY = 4
+SLOW_RATE = 0.02  # tail probability
+SLOW_S = 0.4  # tail latency (100x the fast mode)
+STRAGGLER_AFTER = 0.02  # 5x the fast mode, 1/20th the tail
+STRAGGLER_RUNAHEAD = 96  # chunks of hole-fill cover (> SLOW_S * rate / CHUNK)
+STRAGGLER_WORKERS = 32
+AGG = 64
+
+GATE_SLOWLANE_RATIO = 0.8  # slow lane keeps >= 80% of clean throughput
+GATE_BASELINE_MAX = 0.6  # lane-off baseline demonstrably collapses
+
+SEED = 1234
+
+
+def _sleep_stage(x):
+    time.sleep(BASE_S)
+    return x
+
+
+def _run_bimodal(n: int, *, slow_rate: float, slow_s: float, slowlane: bool) -> dict:
+    from repro.core import FaultInjectingStage, PipelineBuilder
+
+    stage = FaultInjectingStage(
+        _sleep_stage, seed=SEED, slow_rate=slow_rate, slow_s=slow_s
+    )
+    b = (
+        PipelineBuilder()
+        .add_source(range(n))
+        .pipe(
+            stage,
+            name="work",
+            concurrency=CONCURRENCY,
+            chunk=CHUNK,
+            queue_size=AGG,
+            straggler_after=STRAGGLER_AFTER if slowlane else None,
+            straggler_runahead=STRAGGLER_RUNAHEAD,
+        )
+        .aggregate(AGG, name="agg")
+        .add_sink(buffer_size=8)
+    )
+    p = b.build(num_threads=CONCURRENCY + 2, straggler_workers=STRAGGLER_WORKERS)
+    t0 = time.monotonic()
+    with p.auto_stop():
+        out = [x for batch in p for x in batch]
+    dt = time.monotonic() - t0
+    assert out == list(range(n)), "fault run reordered or dropped items"
+    row = next(s for s in p.stats() if s.name == "work")
+    return {
+        "items_per_sec": n / dt,
+        "wall_s": dt,
+        "items": n,
+        "stragglers": row.stragglers,
+        "straggler_shed": row.straggler_shed,
+        "injected_slow": stage.injected_slow,
+    }
+
+
+def _bimodal(n: int, slow_s: float) -> dict:
+    clean = _run_bimodal(n, slow_rate=0.0, slow_s=0.0, slowlane=False)
+    lane = _run_bimodal(n, slow_rate=SLOW_RATE, slow_s=slow_s, slowlane=True)
+    base = _run_bimodal(n, slow_rate=SLOW_RATE, slow_s=slow_s, slowlane=False)
+    return {
+        "clean": clean,
+        "slowlane": lane,
+        "baseline": base,
+        "slowlane_ratio": lane["items_per_sec"] / clean["items_per_sec"],
+        "baseline_ratio": base["items_per_sec"] / clean["items_per_sec"],
+    }
+
+
+# -- shard-fleet scenarios --------------------------------------------------
+def _make_shards(root: pathlib.Path, *, n_items: int):
+    from repro.data import SyntheticImageDataset, pack
+
+    files = SyntheticImageDataset.materialize(root / "files", n_items, hw=(32, 32), seed=0)
+    pack(files, root / "shards", samples_per_shard=32)
+    shards = sorted((root / "shards").glob("*.rpshard"))
+    return root / "shards", [s.name for s in shards]
+
+
+def _peer_death(shards_dir: pathlib.Path, names: list[str]) -> dict:
+    """Kill the warm peer mid-run: breaker opens (+ half-open probes), the
+    origin covers, the run completes — zero hangs, zero corrupt bytes."""
+    import threading
+
+    from repro.data.shards.peer import PeerShardSource, TieredSource
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+    from repro.data.shards.testing import ShardHTTPServer
+
+    origin = ShardHTTPServer(shards_dir)
+    peer = ShardHTTPServer(shards_dir)  # models another rank's warm cache
+    threads = []
+    for srv in (origin, peer):
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        threads.append(t)
+    kill_at = max(1, len(names) // 3)
+    try:
+        tiered = TieredSource(
+            RetryingSource(HttpShardSource(origin.url), base_delay_s=0.01),
+            PeerShardSource([peer.url], timeout=1.0, cooldown_s=0.1),
+        )
+        mismatches = 0
+        completed = 0
+        t0 = time.monotonic()
+        for i, name in enumerate(names):
+            if i == kill_at:
+                peer.kill()
+            data = tiered.fetch(name)
+            if data != (shards_dir / name).read_bytes():
+                mismatches += 1
+            completed += 1
+            time.sleep(0.12)  # let cooldowns expire: exercise half-open probes
+        wall = time.monotonic() - t0
+        st = tiered.stats()
+        tiered.close()
+        return {
+            "completed": completed,
+            "total": len(names),
+            "mismatches": mismatches,
+            "wall_s": wall,
+            "peer_hits": st["peer_hits"],
+            "peer_errors": st["peer_errors"],
+            "peer_probes": st["peer_probes"],
+            "peers_down": st["peers_down"],
+            "origin_fetches": st["origin_fetches"],
+        }
+    finally:
+        origin.shutdown()
+        origin.server_close()
+        for t in threads:
+            t.join(timeout=5)
+
+
+def _peer_hedge(shards_dir: pathlib.Path, names: list[str]) -> dict:
+    """Peer alive but bandwidth-starved: the hedge launches an origin fetch
+    after ``hedge_after_s`` and takes whichever lands first."""
+    import threading
+
+    from repro.data.shards.peer import PeerShardSource, TieredSource
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+    from repro.data.shards.testing import ShardHTTPServer
+
+    origin = ShardHTTPServer(shards_dir)
+    peer = ShardHTTPServer(shards_dir)
+    peer.slow_bps = 100_000  # ~1s+ per ~100KB shard through the peer
+    threads = []
+    for srv in (origin, peer):
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        threads.append(t)
+    try:
+        tiered = TieredSource(
+            RetryingSource(HttpShardSource(origin.url), base_delay_s=0.01),
+            PeerShardSource([peer.url], timeout=10.0, cooldown_s=1.0),
+            hedge_after_s=0.05,
+        )
+        mismatches = 0
+        t0 = time.monotonic()
+        for name in names:
+            data = tiered.fetch(name)
+            if data != (shards_dir / name).read_bytes():
+                mismatches += 1
+        wall = time.monotonic() - t0
+        st = tiered.stats()
+        tiered.close()
+        nbytes = sum((shards_dir / n).stat().st_size for n in names)
+        return {
+            "completed": len(names),
+            "mismatches": mismatches,
+            "wall_s": wall,
+            "hedges": st["hedges"],
+            "hedge_wins": st["hedge_wins"],
+            # what waiting out the slow peer would have cost
+            "peer_only_floor_s": nbytes / peer.slow_bps,
+        }
+    finally:
+        origin.shutdown()
+        origin.server_close()
+        peer.shutdown()
+        peer.server_close()
+        for t in threads:
+            t.join(timeout=5)
+
+
+def _truncated(shards_dir: pathlib.Path, names: list[str]) -> dict:
+    """Origin drops connections mid-body: every fetch must land intact
+    (retried), never install short."""
+    import threading
+
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+    from repro.data.shards.testing import ShardHTTPServer
+
+    origin = ShardHTTPServer(shards_dir)
+    t = threading.Thread(target=origin.serve_forever, daemon=True)
+    t.start()
+    try:
+        src = RetryingSource(
+            HttpShardSource(origin.url), max_retries=6, base_delay_s=0.01
+        )
+        mismatches = 0
+        t0 = time.monotonic()
+        for i, name in enumerate(names):
+            if i % 2 == 0:
+                with origin.lock:
+                    origin.truncate_next = 1  # this fetch dies mid-body once
+            data = src.fetch(name)
+            if data != (shards_dir / name).read_bytes():
+                mismatches += 1
+        wall = time.monotonic() - t0
+        stats = src.stats()
+        src.close()
+        return {
+            "completed": len(names),
+            "mismatches": mismatches,
+            "wall_s": wall,
+            "truncations": origin.truncations,
+            "retries": stats["retries"],
+        }
+    finally:
+        origin.shutdown()
+        origin.server_close()
+        t.join(timeout=5)
+
+
+# -- harness ---------------------------------------------------------------
+def _scenarios(*, smoke: bool) -> dict:
+    n = 600 if smoke else 2400
+    slow_s = 0.25 if smoke else SLOW_S
+    bimodal = _bimodal(n, slow_s)
+    with tempfile.TemporaryDirectory() as d:
+        shards_dir, names = _make_shards(
+            pathlib.Path(d), n_items=128 if smoke else 384
+        )
+        peer_death = _peer_death(shards_dir, names)
+        hedge = _peer_hedge(shards_dir, names)
+        truncated = _truncated(shards_dir, names)
+    return {
+        "workload": {
+            "n": n,
+            "base_s": BASE_S,
+            "chunk": CHUNK,
+            "concurrency": CONCURRENCY,
+            "slow_rate": SLOW_RATE,
+            "slow_s": slow_s,
+            "straggler_after": STRAGGLER_AFTER,
+            "straggler_runahead": STRAGGLER_RUNAHEAD,
+            "straggler_workers": STRAGGLER_WORKERS,
+        },
+        "bimodal": bimodal,
+        "peer_death": peer_death,
+        "peer_hedge": hedge,
+        "truncated": truncated,
+        "gate_slowlane_ratio": GATE_SLOWLANE_RATIO,
+        "gate_baseline_ratio_max": GATE_BASELINE_MAX,
+    }
+
+
+def _check(result: dict) -> list[str]:
+    """The recovery gates; returns a list of violations (empty = pass)."""
+    bad = []
+    bi = result["bimodal"]
+    if bi["slowlane_ratio"] < result["gate_slowlane_ratio"]:
+        bad.append(
+            f"slow lane sustained x{bi['slowlane_ratio']:.2f} of clean "
+            f"throughput < gate x{result['gate_slowlane_ratio']:.2f}"
+        )
+    if bi["baseline_ratio"] > result["gate_baseline_ratio_max"]:
+        bad.append(
+            f"lane-off baseline kept x{bi['baseline_ratio']:.2f} of clean "
+            f"throughput — the bimodal tail is not actually collapsing it "
+            f"(expected <= x{result['gate_baseline_ratio_max']:.2f})"
+        )
+    if bi["slowlane"]["stragglers"] == 0:
+        bad.append("slow lane detached zero stragglers — fault injection inert")
+    pd = result["peer_death"]
+    if pd["completed"] != pd["total"] or pd["mismatches"]:
+        bad.append(f"peer death: {pd}")
+    if pd["peer_errors"] < 1 or pd["peers_down"] != 1:
+        bad.append(f"peer death: breaker never tripped: {pd}")
+    if pd["peer_probes"] < 1:
+        bad.append(f"peer death: no half-open probe issued: {pd}")
+    he = result["peer_hedge"]
+    if he["mismatches"] or he["hedge_wins"] < 1:
+        bad.append(f"peer hedge: {he}")
+    if he["wall_s"] >= he["peer_only_floor_s"]:
+        bad.append(
+            f"peer hedge: wall {he['wall_s']:.2f}s did not beat the "
+            f"peer-only floor {he['peer_only_floor_s']:.2f}s"
+        )
+    tr = result["truncated"]
+    if tr["mismatches"] or tr["truncations"] < 1 or tr["retries"] < 1:
+        bad.append(f"truncated transfer: {tr}")
+    return bad
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    result = _scenarios(smoke=smoke)
+    violations = _check(result)
+    result["violations"] = violations
+    if not smoke:  # persist only full runs; smoke numbers are noise
+        OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+
+    bi = result["bimodal"]
+    rows = [
+        (
+            "faults_bimodal_clean",
+            1e6 / max(bi["clean"]["items_per_sec"], 1e-9),
+            f"{bi['clean']['items_per_sec']:.0f}items/s",
+        ),
+        (
+            "faults_bimodal_slowlane",
+            1e6 / max(bi["slowlane"]["items_per_sec"], 1e-9),
+            f"x{bi['slowlane_ratio']:.2f}_of_clean_"
+            f"{bi['slowlane']['stragglers']}detached_"
+            f"{'OK' if bi['slowlane_ratio'] >= GATE_SLOWLANE_RATIO else 'BELOW_GATE'}",
+        ),
+        (
+            "faults_bimodal_baseline",
+            1e6 / max(bi["baseline"]["items_per_sec"], 1e-9),
+            f"x{bi['baseline_ratio']:.2f}_of_clean_lane_off_collapse",
+        ),
+        (
+            "faults_peer_death",
+            result["peer_death"]["wall_s"] * 1e6 / result["peer_death"]["total"],
+            f"{result['peer_death']['completed']}/{result['peer_death']['total']}ok_"
+            f"{result['peer_death']['mismatches']}corrupt_"
+            f"{result['peer_death']['peer_probes']}probes",
+        ),
+        (
+            "faults_peer_hedge",
+            result["peer_hedge"]["wall_s"] * 1e6 / result["peer_hedge"]["completed"],
+            f"{result['peer_hedge']['hedge_wins']}hedge_wins_"
+            f"vs_{result['peer_hedge']['peer_only_floor_s']:.1f}s_peer_floor",
+        ),
+        (
+            "faults_truncated",
+            result["truncated"]["wall_s"] * 1e6 / result["truncated"]["completed"],
+            f"{result['truncated']['truncations']}truncations_"
+            f"{result['truncated']['mismatches']}corrupt_"
+            f"{result['truncated']['retries']}retries",
+        ),
+    ]
+    if violations:
+        raise RuntimeError("fault gates violated: " + "; ".join(violations))
+    return rows
+
+
+def check_gate() -> int:
+    """CI regression tripwire: re-run every chaos scenario at smoke size
+    and fail on any recovery-gate violation."""
+    result = _scenarios(smoke=True)
+    bi = result["bimodal"]
+    print(
+        f"bimodal: slowlane x{bi['slowlane_ratio']:.2f} "
+        f"(gate >= x{GATE_SLOWLANE_RATIO:.2f}), "
+        f"baseline x{bi['baseline_ratio']:.2f} "
+        f"(gate <= x{GATE_BASELINE_MAX:.2f}), "
+        f"{bi['slowlane']['stragglers']} stragglers detached"
+    )
+    print(f"peer_death: {result['peer_death']}")
+    print(f"peer_hedge: {result['peer_hedge']}")
+    print(f"truncated: {result['truncated']}")
+    violations = _check(result)
+    for v in violations:
+        print(f"REGRESSION: {v}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    if "--gate" in sys.argv:
+        sys.exit(check_gate())
+    for r in run("--smoke" in sys.argv):
+        print(",".join(map(str, r)))

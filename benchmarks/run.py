@@ -41,6 +41,7 @@ REGISTRY = [
     ("zero-copy slab arena (beyond-paper)", "bench_zero_copy"),
     ("sharded record store (beyond-paper)", "bench_shards"),
     ("engine chunked+fused (beyond-paper)", "bench_engine"),
+    ("fault recovery chaos (beyond-paper)", "bench_faults"),
     ("roofline (dry-run derived)", "roofline"),
 ]
 

@@ -7,7 +7,16 @@ by an asyncio event loop on a dedicated scheduler thread.
 
 from .autotune import Suggestion, autotune, suggest
 from .builder import PipelineBuilder
-from .errors import OnError, PipelineFailure, PipelineStopped
+from .chaos import ChaosError, FaultInjectingStage
+from .errors import OnError, PipelineFailure, PipelineStalled, PipelineStopped
+from .health import (
+    DegradeAction,
+    HealthMonitor,
+    StageHealth,
+    disable_verify,
+    origin_only,
+    widen_sparse_threshold,
+)
 from .pipeline import Pipeline
 from .stats import ResourceSampler, StageStatsSnapshot, format_stats
 
@@ -19,7 +28,16 @@ __all__ = [
     "Pipeline",
     "OnError",
     "PipelineFailure",
+    "PipelineStalled",
     "PipelineStopped",
+    "HealthMonitor",
+    "StageHealth",
+    "ChaosError",
+    "FaultInjectingStage",
+    "DegradeAction",
+    "disable_verify",
+    "widen_sparse_threshold",
+    "origin_only",
     "ResourceSampler",
     "StageStatsSnapshot",
     "format_stats",

@@ -53,6 +53,8 @@ class PipelineBuilder:
         cache: Any = None,
         chunk: int = 1,
         vectorized: bool = False,
+        straggler_after: float | None = None,
+        straggler_runahead: int = 0,
     ) -> "PipelineBuilder":
         """Chain a processing stage.
 
@@ -90,6 +92,20 @@ class PipelineBuilder:
             own lookups (numpy gathers, bulk reads).  The fn owns per-item
             robustness: an exception it raises fails the WHOLE chunk.
             Requires ``chunk > 1``.
+          straggler_after: soft per-item deadline in seconds — the straggler
+            slow lane.  A chunked item exceeding it is detached to the
+            pipeline's bounded straggler pool so its chunk-mates emit
+            without waiting; the straggler's result re-enters the stream at
+            its original position (``output_order="input"``) or whenever it
+            lands (``"completion"``).  Requires ``chunk > 1``, a sync
+            ``fn``, and a *stateless* fn (items run item-major on
+            concurrent pool threads).  Incompatible with ``vectorized``.
+            See the engine docstring ("Straggler slow lane").
+          straggler_runahead: extra parked chunks the ordered emitter may
+            run ahead while a detached straggler resolves (0 = default of
+            3 × ``concurrency``).  This bounds how much straggler latency
+            the stage can hide: roughly
+            ``(concurrency + straggler_runahead) × chunk`` items of cover.
         """
         self._require_source()
         if concurrency < 1:
@@ -105,6 +121,22 @@ class PipelineBuilder:
             )
         if vectorized and chunk <= 1:
             raise ValueError("vectorized=True requires chunk > 1")
+        if straggler_after is not None:
+            if straggler_after <= 0:
+                raise ValueError("straggler_after must be > 0 seconds")
+            if chunk <= 1:
+                raise ValueError(
+                    "straggler_after requires chunk > 1 (the slow lane "
+                    "exists to stop one item holding its chunk hostage)"
+                )
+            if vectorized:
+                raise ValueError(
+                    "straggler_after is incompatible with vectorized=True "
+                    "(the slow lane runs items item-major; a vectorized fn "
+                    "only takes whole chunks)"
+                )
+        if straggler_runahead < 0:
+            raise ValueError("straggler_runahead must be >= 0")
         self._specs.append(
             StageSpec(
                 kind="pipe",
@@ -119,6 +151,8 @@ class PipelineBuilder:
                 cache=cache,
                 chunk=chunk,
                 vectorized=vectorized,
+                straggler_after=straggler_after,
+                straggler_runahead=straggler_runahead,
             )
         )
         return self
@@ -218,12 +252,20 @@ class PipelineBuilder:
         return self
 
     # ------------------------------------------------------------------
-    def build(self, *, num_threads: int = 8, auto_fuse: bool = False) -> Pipeline:
+    def build(
+        self,
+        *,
+        num_threads: int = 8,
+        auto_fuse: bool = False,
+        straggler_workers: int = 8,
+    ) -> Pipeline:
         """Finalize the pipeline.  The fusion pass runs here: explicit
         ``fuse()`` groups are collapsed (invalid groups raise), and with
         ``auto_fuse=True`` any remaining adjacent sync, same-executor,
         order-preserving pipe stages are collapsed too (ineligible pairs
-        are silently left alone)."""
+        are silently left alone).  ``straggler_workers`` sizes the
+        pipeline's shared straggler pool (only created when some stage set
+        ``straggler_after``)."""
         self._require_source()
         if len(self._specs) < 2:
             raise ValueError("pipeline needs at least a source and one stage")
@@ -232,6 +274,7 @@ class PipelineBuilder:
             specs,
             num_threads=num_threads,
             sink_buffer_size=self._sink_buffer_size or 3,
+            straggler_workers=straggler_workers,
         )
 
     # -- fusion pass ----------------------------------------------------
@@ -256,6 +299,17 @@ class PipelineBuilder:
                 "concurrency=1 (possibly stateful) and cannot be widened "
                 f"to the fused concurrency {conc}"
             )
+        if a.straggler_after is not None or b.straggler_after is not None:
+            # the slow lane runs items item-major through every phase — a
+            # vectorized phase (whole-chunk fn) cannot be driven that way
+            for spec in (a, b):
+                for phase in spec.phases:
+                    if phase.vectorized:
+                        return (
+                            f"stage {phase.name!r} is vectorized and cannot "
+                            "fuse into a straggler slow lane (items run "
+                            "item-major)"
+                        )
         return None
 
     @staticmethod
@@ -263,6 +317,9 @@ class PipelineBuilder:
         """One fused spec from two adjacent ones (either may be fused
         already — groups grow left to right)."""
         phases = a.phases + b.phases
+        deadlines = [
+            s.straggler_after for s in (a, b) if s.straggler_after is not None
+        ]
         return StageSpec(
             kind="pipe",
             name="+".join(p.name for p in phases),
@@ -273,6 +330,10 @@ class PipelineBuilder:
             queue_size=b.queue_size,  # the fused output queue is b's
             chunk=max(a.chunk, b.chunk),
             fused=phases,
+            # the fused item runs every phase back to back, so the
+            # tightest deadline of the group governs the whole run
+            straggler_after=min(deadlines) if deadlines else None,
+            straggler_runahead=max(a.straggler_runahead, b.straggler_runahead),
         )
 
     def _fused_specs(self, auto_fuse: bool) -> list[StageSpec]:

@@ -41,6 +41,28 @@ amortizations make the per-item cost O(items/chunk):
   each phase keeps its own ``on_error``/``timeout``, and a failure is
   attributed to the phase that raised.
 
+Straggler slow lane (``pipe(..., straggler_after=...)``)
+--------------------------------------------------------
+Chunked execution has a failure mode of its own: one slow item holds its
+whole chunk hostage (MinatoLoader's observation — once raw throughput is
+high, the tail of the item-latency distribution IS the bottleneck).  A
+chunked stage with a ``straggler_after`` soft deadline runs its items
+item-major through a bounded side executor (the pipeline's
+``StragglerPool``): each item is submitted to the pool and awaited for at
+most ``straggler_after`` seconds.  An item that finishes in time behaves
+exactly like the phase-major path; one that does not is *detached* — the
+chunk completes and emits without it, and a ``_Detached`` marker holds its
+position.  An order-preserving stage re-inserts the straggler's result at
+its original position (the emitter awaits the marker; processing of later
+chunks continues meanwhile, bounded by ``straggler_runahead`` extra parked
+chunks); an ``output_order="completion"`` stage emits the result whenever
+it lands.  A straggler that ultimately *fails* becomes a normal per-item
+failure hole under ``OnError.SKIP`` (or tears the pipeline down under
+``FAIL``).  When the pool is saturated the item runs inline instead (no
+deadline protection — counted as ``straggler_shed``), so the slow lane can
+degrade but never deadlock.  ``StageStats`` grows ``stragglers`` /
+``straggler_time`` / ``straggler_shed``.
+
 EOF protocol: exactly one ``EOF`` sentinel traverses each queue.  On the
 normal path a stage *blocks* putting EOF (downstream is draining, so this
 terminates).  On the exceptional path (fail-fast error or cancellation) it
@@ -48,6 +70,45 @@ terminates).  On the exceptional path (fail-fast error or cancellation) it
 queue whose consumer is already dead.  ``get_many`` only ever surfaces EOF
 as the last element of a chunk, so a partial tail chunk is processed
 normally before the stage winds down.
+
+Failure semantics
+-----------------
+What happens when a stage function misbehaves, from mildest to hardest:
+
+* **Per-item failure, ``on_error="skip"`` (default):** the exception is
+  logged, counted in that phase's ``num_failed`` row, and ONLY that item
+  is dropped — its chunk-mates and the rest of the stream are untouched.
+  On the zero-copy loader path the dropped item's slab slot is marked as a
+  hole and compacted away downstream.
+* **Per-item failure, ``on_error="fail"``:** the stage raises
+  ``PipelineFailure`` naming the raising phase (``.stage``/``.phase``; for
+  a fused runtime that is the original sub-stage, with the composite name
+  in ``.fused_stage``) and the item's stage-stream index
+  (``.item_index``), the whole pipeline cancels, and the consumer sees the
+  failure on its next ``get_item``.  Stats are recorded *before* the
+  raise, so the dashboard shows the failure even when it is fatal.
+* **Slow item (chunked stage with ``straggler_after``):** detached to the
+  straggler pool — deferred, not failed.  See "Straggler slow lane".
+* **Slow item (``timeout=``):** per-item timeouts are enforced post hoc
+  (a thread cannot be preempted mid-call): the item is recorded as a
+  timeout failure with the same skip/fail semantics as any other failure.
+* **Hung item (never returns):** the whole-chunk ``wait_for`` backstop
+  (``sum(phase timeouts) × len(chunk)``, armed only when every phase has a
+  timeout) abandons the chunk: every item in it is recorded as failed, the
+  hung worker thread is left to die with its call (it cannot be killed),
+  and the stage moves on — or tears down under ``on_error="fail"``.
+* **Stalled pipeline (no backstop armed, or stuck outside a stage fn):**
+  nothing in-engine can fire; this is what ``core.health.HealthMonitor``
+  exists for — it watches ``Pipeline.stats()`` for progress, sheds
+  optional work while DEGRADED, and raises a structured
+  ``PipelineStalled`` (naming the suspect stage) instead of letting the
+  consumer block forever.
+
+Stats rows: each phase of each stage is one row.  ``num_in``/``num_out``
+count items entering/leaving the phase, ``num_failed`` its dropped items,
+``task_time`` seconds inside its function, ``get_wait``/``put_wait``
+starvation/backpressure, ``stragglers``/``straggler_time``/
+``straggler_shed`` the slow-lane counters (first phase of the stage).
 """
 
 from __future__ import annotations
@@ -57,8 +118,10 @@ import dataclasses
 import inspect
 import itertools
 import logging
+import threading
 import time
-from concurrent.futures import Executor
+from concurrent.futures import Executor, Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, AsyncIterable, Callable, Iterable
 
 from ._compat import TaskGroup
@@ -74,6 +137,72 @@ def _is_async_callable(fn: Callable) -> bool:
         return True
     call = getattr(fn, "__call__", None)  # noqa: B004 - callables/partials
     return call is not None and inspect.iscoroutinefunction(call)
+
+
+class StragglerPool:
+    """Bounded side executor for deadline-detached items (one per pipeline).
+
+    ``try_submit`` reserves a worker *at submit time* and returns ``None``
+    when all workers are claimed — the caller then runs the item inline
+    instead.  Without the reservation, submissions would queue unboundedly
+    inside the ``ThreadPoolExecutor`` while stragglers hog every worker,
+    and never-started items would later be "detached" having never run —
+    spurious deferrals that re-serialize the stream for nothing.
+    """
+
+    def __init__(self, max_workers: int = 8):
+        if max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        self.max_workers = max_workers
+        self._ex = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="repro-straggler"
+        )
+        self._lock = threading.Lock()
+        self._in_flight = 0
+
+    def try_submit(self, fn: Callable, *args) -> Future | None:
+        with self._lock:
+            if self._in_flight >= self.max_workers:
+                return None
+            self._in_flight += 1
+        try:
+            fut = self._ex.submit(fn, *args)
+        except RuntimeError:  # shutdown race: pipeline is tearing down
+            with self._lock:
+                self._in_flight -= 1
+            return None
+        fut.add_done_callback(self._release)
+        return fut
+
+    def _release(self, _fut: Future) -> None:
+        with self._lock:
+            self._in_flight -= 1
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    def shutdown(self) -> None:
+        # wait=False: a hung straggler's thread cannot be interrupted, and
+        # teardown must not block on it (same contract as the chunk backstop)
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+class _Detached:
+    """Positional marker for an item detached to the straggler pool: holds
+    the pool future and the item's stage-stream index for provenance."""
+
+    __slots__ = ("future", "index")
+
+    def __init__(self, future: Future, index: int):
+        self.future = future
+        self.index = index
+
+
+#: return marker from ``_resolve_straggler``: the straggler produced no
+#: emittable value (it failed under OnError.SKIP, or timed out)
+_DROPPED = object()
 
 
 @dataclasses.dataclass
@@ -105,6 +234,15 @@ class StageSpec:
     #: a plain stage.  A fused spec's fn is None; concurrency/chunk are the
     #: max over its phases; on_error/timeout/cache stay per phase.
     fused: tuple = ()
+    #: soft per-item deadline (seconds): a chunked item exceeding it is
+    #: detached to the pipeline's straggler pool so its chunk can emit
+    #: without it (None = no slow lane).  Requires chunk > 1 + sync fn.
+    straggler_after: float | None = None
+    #: extra parked chunks the ordered emitter may run ahead while awaiting
+    #: a detached straggler (0 = default of 3 × concurrency).  This bounds
+    #: how much straggler latency the stage can hide: roughly
+    #: (concurrency + straggler_runahead) × chunk items of cover.
+    straggler_runahead: int = 0
 
     @property
     def phases(self) -> tuple:
@@ -133,11 +271,15 @@ class StageRuntime:
         in_q: MonitoredQueue | None,
         out_q: MonitoredQueue,
         default_executor: Executor,
+        straggler_pool: StragglerPool | None = None,
     ):
         self.spec = spec
         self.in_q = in_q
         self.out_q = out_q
         self.default_executor = default_executor
+        self._straggler_pool = (
+            straggler_pool if spec.straggler_after is not None else None
+        )
         # One StageStats per phase: a fused stage keeps reporting its
         # original stages as separate dashboard rows (per-phase timing is
         # recorded inside the worker).  A plain stage has exactly one phase.
@@ -179,8 +321,11 @@ class StageRuntime:
             return await asyncio.wait_for(coro, self.spec.timeout)
         return await coro
 
-    async def _guarded(self, item: Any) -> tuple[bool, Any]:
-        """Run one task; returns (ok, result). Raises only in fail-fast mode."""
+    async def _guarded(self, unit: tuple[int, Any]) -> tuple[bool, Any]:
+        """Run one task; returns (ok, result). Raises only in fail-fast mode.
+        ``unit`` is ``(stage-stream index, item)`` — the index feeds failure
+        provenance (``PipelineFailure.item_index``)."""
+        idx, item = unit
         t0 = time.monotonic()
         try:
             result = await self._call(item)
@@ -191,9 +336,11 @@ class StageRuntime:
         except Exception as e:
             self.stats.record_task(time.monotonic() - t0)
             self.stats.record_failure(e)
-            logger.warning("stage %s failed on item: %r", self.spec.name, e)
+            logger.warning(
+                "stage %s failed on item #%d: %r", self.spec.name, idx, e
+            )
             if self.spec.on_error is OnError.FAIL:
-                raise PipelineFailure(self.spec.name, e) from e
+                raise PipelineFailure(self.spec.name, e, item_index=idx) from e
             return False, None
 
     async def _emit(self, item: Any) -> None:
@@ -221,16 +368,22 @@ class StageRuntime:
 
         Returns ``(survivors, per_phase, failures)``: surviving values in
         input order, ``(n_entered, seconds)`` per phase reached, and
-        ``(phase_idx, exc)`` per failed item.
+        ``(phase_idx, chunk_pos, exc)`` per failed item — ``chunk_pos`` is
+        the failing item's position in the ORIGINAL chunk (None when a
+        vectorized phase failed: attribution to one item is impossible).
         """
         per_phase: list[tuple[int, float]] = []
-        failures: list[tuple[int, BaseException]] = []
+        failures: list[tuple[int, int | None, BaseException]] = []
         values = items
+        # original-chunk position of values[j]; None = identity (no failures
+        # yet), so the failure-free hot path never touches it
+        positions: list[int] | None = None
         for k, phase in enumerate(self.phases):
             fn = phase.fn
             timeout = phase.timeout
             entered = len(values)
             survivors: list[Any] = []
+            failed_js: list[int] = []  # this phase's failed input indices
             t0 = time.monotonic()
             if phase.vectorized:
                 # one call over the whole chunk; the fn owns per-item
@@ -244,12 +397,13 @@ class StageRuntime:
                         )
                 except Exception as e:  # noqa: BLE001
                     survivors = []
-                    failures.extend((k, e) for _ in range(entered))
+                    failures.extend((k, None, e) for _ in range(entered))
                 dt = time.monotonic() - t0
                 if survivors and timeout is not None and dt > timeout * entered:
                     failures.extend(
                         (
                             k,
+                            None,
                             asyncio.TimeoutError(
                                 f"chunk exceeded {timeout}s/item in stage "
                                 f"{phase.name!r} ({dt:.3f}s for {entered})"
@@ -269,22 +423,36 @@ class StageRuntime:
                     try:
                         append(fn(v))
                     except Exception as e:  # noqa: BLE001 - per-item robustness
-                        failures.append((k, e))
+                        # input index of the failing item: every earlier
+                        # item either survived or failed, so no enumerate
+                        # is needed on the hot path
+                        j = len(survivors) + len(failed_js)
+                        failed_js.append(j)
+                        failures.append(
+                            (k, positions[j] if positions is not None else j, e)
+                        )
             else:
                 for v in values:
                     t1 = time.monotonic()
                     try:
                         out = fn(v)
                     except Exception as e:  # noqa: BLE001
-                        failures.append((k, e))
+                        j = len(survivors) + len(failed_js)
+                        failed_js.append(j)
+                        failures.append(
+                            (k, positions[j] if positions is not None else j, e)
+                        )
                         continue
                     dt = time.monotonic() - t1
                     if dt > timeout:
                         # post-hoc per-item timeout: the thread cannot be
                         # preempted mid-call, but the item is still dropped
                         # with the same skippable-failure semantics
+                        j = len(survivors) + len(failed_js)
+                        failed_js.append(j)
                         failures.append((
                             k,
+                            positions[j] if positions is not None else j,
                             asyncio.TimeoutError(
                                 f"item exceeded {timeout}s in stage "
                                 f"{phase.name!r} ({dt:.3f}s)"
@@ -293,10 +461,91 @@ class StageRuntime:
                     else:
                         survivors.append(out)
             per_phase.append((entered, time.monotonic() - t0))
+            if failed_js:
+                # survivors' original positions, for attributing failures in
+                # LATER phases back to the original chunk
+                gone = set(failed_js)
+                src = positions if positions is not None else range(entered)
+                positions = [p for x, p in enumerate(src) if x not in gone]
             values = survivors
             if not values:
                 break  # nothing left for later phases (they record 0 items)
         return values, per_phase, failures
+
+    def _run_item(self, v: Any) -> tuple:
+        """Run ALL phases over ONE item, item-major (the slow-lane unit of
+        work — runs on a straggler-pool thread, or inline on the chunk
+        worker when the pool is saturated).
+
+        Returns ``(ok, value, failed_phase, exc, times, elapsed)`` where
+        ``times`` is ``[(phase_idx, seconds), ...]`` for each phase reached
+        — the record a chunk worker (fast item) or the loop-side straggler
+        resolution (detached item) folds into stats.  Per-phase ``timeout``
+        keeps its post-hoc semantics.
+        """
+        times: list[tuple[int, float]] = []
+        t_start = time.monotonic()
+        for k, phase in enumerate(self.phases):
+            t0 = time.monotonic()
+            try:
+                out = phase.fn(v)
+            except Exception as e:  # noqa: BLE001 - per-item robustness
+                times.append((k, time.monotonic() - t0))
+                return False, None, k, e, times, time.monotonic() - t_start
+            dt = time.monotonic() - t0
+            times.append((k, dt))
+            if phase.timeout is not None and dt > phase.timeout:
+                exc = asyncio.TimeoutError(
+                    f"item exceeded {phase.timeout}s in stage "
+                    f"{phase.name!r} ({dt:.3f}s)"
+                )
+                return False, None, k, exc, times, time.monotonic() - t_start
+            v = out
+        return True, v, -1, None, times, time.monotonic() - t_start
+
+    def _apply_chunk_slowlane(self, items: list[Any]) -> tuple:
+        """Chunk application with the straggler slow lane (worker thread).
+
+        Items run item-major through the pipeline's ``StragglerPool``; each
+        is awaited for at most ``straggler_after`` seconds.  A fast item is
+        folded exactly like the phase-major path; a slow one is detached —
+        its ``_Detached`` marker keeps its position in ``entries`` and the
+        chunk moves on.  Pool saturated → the item runs inline (no deadline
+        protection; counted as shed).
+
+        Returns ``(entries, per_phase, failures, (n_detached, n_shed))``
+        where ``entries`` is input-ordered values interleaved with
+        ``_Detached`` markers and ``failures`` matches ``_apply_chunk``.
+        """
+        pool = self._straggler_pool
+        deadline = self.spec.straggler_after
+        entries: list[Any] = []
+        per_phase = [[0, 0.0] for _ in self.phases]
+        failures: list[tuple[int, int | None, BaseException]] = []
+        n_detached = 0
+        n_shed = 0
+        for pos, v in enumerate(items):
+            fut = pool.try_submit(self._run_item, v) if pool is not None else None
+            if fut is None:
+                n_shed += 1
+                rec = self._run_item(v)
+            else:
+                try:
+                    rec = fut.result(timeout=deadline)
+                except FuturesTimeout:
+                    entries.append(_Detached(fut, pos))
+                    n_detached += 1
+                    continue
+            ok, value, failed_k, exc, times, _elapsed = rec
+            for k, dt in times:
+                acc = per_phase[k]
+                acc[0] += 1
+                acc[1] += dt
+            if ok:
+                entries.append(value)
+            else:
+                failures.append((failed_k, pos, exc))
+        return entries, per_phase, failures, (n_detached, n_shed)
 
     def _chunk_budget(self, n_items: int) -> float | None:
         """Whole-chunk hang backstop: only boundable when EVERY phase has a
@@ -305,14 +554,38 @@ class StageRuntime:
             return None
         return sum(p.timeout for p in self.phases) * n_items
 
-    def _record_chunk(self, outcome: tuple) -> list[Any]:
+    def _failure(
+        self, k: int, exc: BaseException, item_index: int | None
+    ) -> PipelineFailure:
+        """A fail-fast ``PipelineFailure`` attributed to phase ``k`` (and,
+        when known, the stage-stream index of the failing item)."""
+        return PipelineFailure(
+            self.phases[k].name,
+            exc,
+            item_index=item_index,
+            fused_stage=self.spec.name if self.spec.fused else None,
+        )
+
+    def _record_chunk(self, outcome: tuple, base: int) -> list[Any]:
         """Fold a chunk's worker-side outcome into per-phase stats (on the
         loop thread — StageStats is single-writer) and return the surviving
-        values in input order.  Per-chunk cost is O(phases + failures), not
-        O(items).  Raises ``PipelineFailure`` if a failing phase is
+        entries in input order (values, plus ``_Detached`` markers on the
+        slow-lane path).  ``base`` is the chunk's first stage-stream index,
+        for failure provenance.  Per-chunk cost is O(phases + failures),
+        not O(items).  Raises ``PipelineFailure`` if a failing phase is
         fail-fast (after recording the whole chunk, so the dashboard shows
         it even when one item tears the pipeline down)."""
-        results, per_phase, failures = outcome
+        if len(outcome) == 4:
+            entries, per_phase, failures, (n_detached, n_shed) = outcome
+            self.phase_stats[0].straggler_shed += n_shed
+            if n_detached:
+                # rebase the markers' chunk-local positions to stage-stream
+                # indices (the worker does not know the chunk's base)
+                for e in entries:
+                    if type(e) is _Detached:
+                        e.index += base
+        else:
+            entries, per_phase, failures = outcome
         for k, (entered, dt) in enumerate(per_phase):
             st = self.phase_stats[k]
             if k > 0:
@@ -323,22 +596,30 @@ class StageRuntime:
                 survived = per_phase[k + 1][0] if k + 1 < len(per_phase) else 0
                 st.record_out_many(survived)
         failure: PipelineFailure | None = None
-        for k, exc in failures:
+        for k, pos, exc in failures:
             self.phase_stats[k].record_failure(exc)
             logger.warning("stage %s failed on item: %r", self.phases[k].name, exc)
             if self.phases[k].on_error is OnError.FAIL and failure is None:
-                failure = PipelineFailure(self.phases[k].name, exc)
-                failure.__cause__ = exc
+                failure = self._failure(
+                    k, exc, base + pos if pos is not None else None
+                )
         if failure is not None:
             raise failure
-        return results
+        return entries
 
-    async def _guarded_chunk(self, items: list[Any]) -> list[Any]:
-        """Run one chunk task; returns surviving results (input order).
-        Raises only in fail-fast mode (or on cancellation)."""
+    async def _guarded_chunk(self, unit: tuple[int, list[Any]]) -> list[Any]:
+        """Run one chunk task; returns surviving entries (input order).
+        Raises only in fail-fast mode (or on cancellation).  ``unit`` is
+        ``(first stage-stream index, items)``."""
+        base, items = unit
         loop = asyncio.get_running_loop()
         ex = self.spec.executor or self.default_executor
-        coro = loop.run_in_executor(ex, self._apply_chunk, items)
+        apply = (
+            self._apply_chunk_slowlane
+            if self._straggler_pool is not None
+            else self._apply_chunk
+        )
+        coro = loop.run_in_executor(ex, apply, items)
         budget = self._chunk_budget(len(items))
         try:
             if budget is not None:
@@ -359,9 +640,63 @@ class StageRuntime:
                 self.phases[k].name, len(items), budget,
             )
             if any(p.on_error is OnError.FAIL for p in self.phases):
-                raise PipelineFailure(self.phases[k].name, e) from e
+                raise self._failure(k, e, None) from e
             return []
-        return self._record_chunk(outcomes)
+        return self._record_chunk(outcomes, base)
+
+    async def _resolve_straggler(self, d: _Detached) -> Any:
+        """Await a detached item's completion (loop thread) and fold its
+        record into stats.  Returns the item's value, or ``_DROPPED`` when
+        it produced none (failure hole / timeout).  Raises
+        ``PipelineFailure`` when the failing phase is fail-fast.
+
+        The wait is bounded by the same budget rule as chunks (sum of phase
+        timeouts — armed only when every phase has one); a straggler that
+        outlives it is recorded as a timeout failure and its thread is left
+        to finish on its own (it cannot be preempted).
+        """
+        st0 = self.phase_stats[0]
+        budget = self._chunk_budget(1)
+        fut = asyncio.wrap_future(d.future)
+        try:
+            if budget is not None:
+                rec = await asyncio.wait_for(fut, budget)
+            else:
+                rec = await fut
+        except asyncio.CancelledError:
+            raise
+        except asyncio.TimeoutError as e:
+            k = next(i for i, p in enumerate(self.phases) if p.timeout is not None)
+            st0.stragglers += 1
+            self.phase_stats[k].record_failure(e)
+            logger.warning(
+                "stage %s: straggler item #%d exceeded its %0.1fs budget",
+                self.phases[k].name, d.index, budget,
+            )
+            if any(p.on_error is OnError.FAIL for p in self.phases):
+                raise self._failure(k, e, d.index) from e
+            return _DROPPED
+        ok, value, failed_k, exc, times, elapsed = rec
+        st0.stragglers += 1
+        st0.straggler_time += elapsed
+        last_reached = times[-1][0] if times else 0
+        for k, dt in times:
+            st = self.phase_stats[k]
+            if k > 0:
+                st.num_in += 1
+            st.record_task(dt)
+            if k < last_reached:
+                st.record_out_many(1)  # it went on to the next phase
+        if ok:
+            return value
+        self.phase_stats[failed_k].record_failure(exc)
+        logger.warning(
+            "stage %s failed on straggler item #%d: %r",
+            self.phases[failed_k].name, d.index, exc,
+        )
+        if self.phases[failed_k].on_error is OnError.FAIL:
+            raise self._failure(failed_k, exc, d.index) from exc
+        return _DROPPED
 
     # -- top-level runner --------------------------------------------------
     async def run(self) -> None:
@@ -419,25 +754,59 @@ class StageRuntime:
         once.
         """
         if self.spec.chunk > 1 or self.spec.fused:
+            # running stage-stream index of the next chunk's first item —
+            # pulled single-threadedly by the reader, so a plain closure
+            # counter is race-free and failure provenance costs nothing
+            next_base = 0
 
             async def pull() -> tuple[tuple, bool]:
+                nonlocal next_base
                 chunk = await self.in_q.get_many(self.spec.chunk)
                 eof = chunk[-1] is EOF
                 if eof:
                     chunk.pop()  # the partial tail chunk still runs
-                return ((chunk,) if chunk else ()), eof
+                if not chunk:
+                    return (), eof
+                base = next_base
+                next_base += len(chunk)
+                return ((base, chunk),), eof
 
-            async def emit(results: list[Any]) -> None:
-                if results:
-                    await self._emit_many(results)
+            if self._straggler_pool is not None:
+
+                async def emit(entries: list[Any]) -> None:
+                    # hole-fill: a _Detached marker is awaited AT its
+                    # position, so the stream stays in input order; later
+                    # chunks keep processing meanwhile (the widened task
+                    # queue provides the runahead)
+                    batch: list[Any] = []
+                    for e in entries:
+                        if type(e) is _Detached:
+                            if batch:
+                                await self._emit_many(batch)
+                                batch = []
+                            v = await self._resolve_straggler(e)
+                            if v is not _DROPPED:
+                                batch.append(v)
+                        else:
+                            batch.append(e)
+                    if batch:
+                        await self._emit_many(batch)
+
+            else:
+
+                async def emit(results: list[Any]) -> None:
+                    if results:
+                        await self._emit_many(results)
 
             return pull, self._guarded_chunk, emit
+
+        next_idx = itertools.count()
 
         async def pull() -> tuple[tuple, bool]:
             item = await self.in_q.get()
             if item is EOF:
                 return (), True
-            return (item,), False
+            return ((next(next_idx), item),), False
 
         async def emit(outcome: tuple[bool, Any]) -> None:
             ok, result = outcome
@@ -469,7 +838,16 @@ class StageRuntime:
         # (running or completed) in FIFO order for the emitter, so completed
         # results buffered ahead of a backpressured emitter stay bounded too.
         sem = asyncio.Semaphore(self.spec.concurrency)
-        task_q: asyncio.Queue[Any] = asyncio.Queue(self.spec.concurrency)
+        # Slow-lane runahead: while the emitter is parked on a detached
+        # straggler (hole-fill), the reader may keep dispatching chunks —
+        # they complete (releasing sem) and park here until the hole fills.
+        # The extra depth is what lets the stage hide straggler latency;
+        # without it, one straggler re-serializes the stream after
+        # ``concurrency`` chunks of cover.
+        depth = self.spec.concurrency
+        if self._straggler_pool is not None:
+            depth += self.spec.straggler_runahead or 3 * self.spec.concurrency
+        task_q: asyncio.Queue[Any] = asyncio.Queue(depth)
 
         async def guarded_release(unit: Any) -> Any:
             try:
@@ -523,10 +901,33 @@ class StageRuntime:
         assert self.in_q is not None
         pull, run, emit = self._pipe_adapters()
         sem = asyncio.Semaphore(self.spec.concurrency)
+        slowlane = self._straggler_pool is not None and (
+            self.spec.chunk > 1 or self.spec.fused
+        )
 
-        async def worker(unit: Any) -> None:
+        async def resolve_and_emit(d: _Detached) -> None:
+            v = await self._resolve_straggler(d)
+            if v is not _DROPPED:
+                await self._emit(v)
+
+        async def worker(unit: Any, tg: TaskGroup) -> None:
             try:
-                await emit(await run(unit))
+                outcome = await run(unit)
+                if slowlane:
+                    # emit ready values now; a detached straggler resolves
+                    # on a sibling task so it does not hold this worker's
+                    # concurrency slot (in-flight resolvers are bounded by
+                    # the straggler pool's size — one marker per worker)
+                    ready: list[Any] = []
+                    for e in outcome:
+                        if type(e) is _Detached:
+                            tg.create_task(resolve_and_emit(e))
+                        else:
+                            ready.append(e)
+                    if ready:
+                        await self._emit_many(ready)
+                else:
+                    await emit(outcome)
             finally:
                 sem.release()
 
@@ -536,9 +937,10 @@ class StageRuntime:
                 units, eof = await pull()
                 for unit in units:
                     await sem.acquire()
-                    tg.create_task(worker(unit))
-            # TaskGroup's __aexit__ awaits outstanding workers before we
-            # return to run(), which then emits EOF downstream.
+                    tg.create_task(worker(unit, tg))
+            # TaskGroup's __aexit__ awaits outstanding workers (and any
+            # straggler resolvers they spawned) before we return to run(),
+            # which then emits EOF downstream.
 
     async def _run_aggregate(self) -> None:
         assert self.in_q is not None

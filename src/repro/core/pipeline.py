@@ -18,7 +18,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Iterator
 
 from ._compat import BaseExceptionGroup, TaskGroup
-from .engine import StageRuntime, StageSpec
+from .engine import StageRuntime, StageSpec, StragglerPool
 from .errors import PipelineFailure, PipelineStopped
 from .queues import EOF, MonitoredQueue
 from .stats import StageStatsSnapshot, format_stats
@@ -40,10 +40,18 @@ class Pipeline:
     and shuts down the default thread pool.
     """
 
-    def __init__(self, specs: list[StageSpec], num_threads: int, sink_buffer_size: int):
+    def __init__(
+        self,
+        specs: list[StageSpec],
+        num_threads: int,
+        sink_buffer_size: int,
+        straggler_workers: int = 8,
+    ):
         self._specs = specs
         self._num_threads = num_threads
         self._sink_buffer_size = sink_buffer_size
+        self._straggler_workers = straggler_workers
+        self._straggler_pool: StragglerPool | None = None
 
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
@@ -71,6 +79,10 @@ class Pipeline:
         self._executor = ThreadPoolExecutor(
             max_workers=self._num_threads, thread_name_prefix="repro-worker"
         )
+        if any(s.straggler_after is not None for s in self._specs):
+            # one shared slow lane per pipeline: detached items from every
+            # straggler stage compete for the same bounded worker set
+            self._straggler_pool = StragglerPool(self._straggler_workers)
         self._thread = threading.Thread(
             target=self._thread_main, daemon=True, name="repro-scheduler"
         )
@@ -118,7 +130,12 @@ class Pipeline:
                 size = max(size, self._specs[i + 1].input_chunk)
             out_q = MonitoredQueue(max(1, size), name=f"q:{spec.name}")
             queues.append(out_q)
-            runtimes.append(StageRuntime(spec, in_q, out_q, self._executor))
+            runtimes.append(
+                StageRuntime(
+                    spec, in_q, out_q, self._executor,
+                    straggler_pool=self._straggler_pool,
+                )
+            )
             in_q = out_q
         self._runtimes = runtimes
         self._sink_q = queues[-1]
@@ -158,6 +175,8 @@ class Pipeline:
             self._thread.join(timeout=30)
         if self._executor is not None:
             self._executor.shutdown(wait=False, cancel_futures=True)
+        if self._straggler_pool is not None:
+            self._straggler_pool.shutdown()
 
     @contextlib.contextmanager
     def auto_stop(self) -> Iterator["Pipeline"]:
@@ -268,6 +287,13 @@ class Pipeline:
         for rt in self._runtimes:
             out[rt.out_q.name] = (rt.out_q.qsize(), rt.out_q.maxsize)
         return out
+
+    @property
+    def finished(self) -> bool:
+        """True once the root task has completed — every stage emitted its
+        EOF (or the pipeline failed).  The health monitor uses this to tell
+        "quiescent because done" from "quiescent because stalled"."""
+        return self._root_fut is not None and self._root_fut.done()
 
     @property
     def sink_occupancy(self) -> float:

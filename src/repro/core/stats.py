@@ -25,6 +25,13 @@ class StageStats:
     num_in: int = 0  # items pulled from the input queue
     num_out: int = 0  # items emitted to the output queue
     num_failed: int = 0
+    # straggler slow lane (chunked stages with straggler_after): items
+    # detached past the soft deadline, seconds those items ran in total,
+    # and detach candidates that had to run inline because the straggler
+    # pool was saturated (no deadline protection for those)
+    stragglers: int = 0
+    straggler_time: float = 0.0
+    straggler_shed: int = 0
     task_time: float = 0.0  # seconds spent inside the stage function
     get_wait: float = 0.0  # seconds blocked waiting for input (starved)
     put_wait: float = 0.0  # seconds blocked waiting for output space (backpressured)
@@ -86,6 +93,9 @@ class StageStats:
             num_in=self.num_in,
             num_out=self.num_out,
             num_failed=self.num_failed,
+            stragglers=self.stragglers,
+            straggler_time=self.straggler_time,
+            straggler_shed=self.straggler_shed,
             qps=self.qps,
             avg_task_time=self.avg_task_time,
             occupancy=self.occupancy,
@@ -129,6 +139,11 @@ class StageStatsSnapshot:
     # and whether chunk= is even applicable (sync pipe stage)
     chunk: int = 1
     chunkable: bool = False
+    # straggler slow lane: deadline-detached items, their total run time,
+    # and detach candidates shed to inline execution (pool saturated)
+    stragglers: int = 0
+    straggler_time: float = 0.0
+    straggler_shed: int = 0
     # memory pressure (nonzero only for arena-backed aggregate_into stages)
     bytes_allocated: int = 0
     slabs_in_flight: int = 0
@@ -173,6 +188,12 @@ def format_stats(snaps: list[StageStatsSnapshot]) -> str:
             f"{s.occupancy * 100:>6.1f}{s.get_wait:>8.2f}{s.put_wait:>8.2f}"
         )
     for s in snaps:
+        if s.stragglers or s.straggler_shed:
+            avg = s.straggler_time / s.stragglers * 1e3 if s.stragglers else 0.0
+            lines.append(
+                f"[{s.name}] stragglers: detached={s.stragglers}"
+                f" avg_ms={avg:.1f} shed={s.straggler_shed}"
+            )
         if s.num_slabs:
             lines.append(
                 f"[{s.name}] arena: slabs_in_flight={s.slabs_in_flight}/{s.num_slabs}"

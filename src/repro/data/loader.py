@@ -113,6 +113,36 @@ sampler checkpoint taken mid-stream on the prefetcher path skips at most
 ``_PREFETCH_LOOKAHEAD`` samples *in addition to* the sink-buffered batches
 documented in ``sampler.py`` — still bounded and epoch-local, but wider
 than the local-dataset path.
+
+Failure semantics (what a bad sample / slow sample / dead backend does)
+-----------------------------------------------------------------------
+The loaders inherit the engine's failure contract (see the "Failure
+semantics" section of ``core/engine.py``) and add the storage layer's:
+
+* **Corrupt sample** (unreadable bytes, malformed codec blob): the read or
+  decode stage raises, the item becomes a hole under ``OnError.SKIP`` —
+  one missing sample, never a torn batch (on the zero-copy path the slot
+  is ``mark_hole``-ed so its batch still completes).  Fail-fast stages
+  raise ``PipelineFailure`` carrying the *phase* name (``read``/
+  ``decode``), the fused stage name, and the item's stage-stream index.
+* **Slow sample** (storage tail, contended decode): with
+  ``straggler_after=`` the slow lane detaches it so chunk-mates emit on
+  time; its result re-enters at its original position.  Batches stay
+  in-order and complete — straggling costs latency on ONE batch instead
+  of throughput on all of them.  ``Pipeline.stats()`` shows ``stragglers``
+  / ``straggler_shed`` per stage.
+* **Truncated transfer** (backend dies mid-body): ``HttpShardSource``
+  validates ``Content-Length`` and surfaces a retryable
+  ``SourceUnavailable`` — a short body is *never* installed into the
+  shard cache (``RetryingSource`` covers the retry).
+* **Dead peer** (multi-rank): the peer tier's circuit breaker benches it
+  (half-open probe after ``cooldown_s``), fetches fall through to the
+  origin; with ``hedge_after_s`` a merely *slow* peer is raced against
+  the origin instead of waited out.
+* **Stall** (no batch progressing at all): wrap consumption in
+  ``core.HealthMonitor.guard()`` — degradation actions (disable eager
+  verify, widen the sparse threshold, go origin-only) fire first, then a
+  structured ``PipelineStalled`` names the suspect stage.
 """
 
 from __future__ import annotations
@@ -243,9 +273,12 @@ def build_image_loader(
     arena_slabs: int | None = None,  # None = sized from the consumer window
     chunk: int = 16,  # items per executor dispatch; 1 = per-item path
     fuse_stages: bool = True,  # collapse read+decode into one worker call
+    straggler_after: float | None = None,  # soft deadline on read/decode
 ) -> Pipeline:
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    if straggler_after is not None and chunk <= 1:
+        raise ValueError("straggler_after requires chunk > 1 (see pipe())")
     # fusion widens both stages to max(read, decode) concurrency — a
     # concurrency-1 stage may be deliberate (serialization), so don't
     fuse_stages = fuse_stages and (
@@ -308,8 +341,10 @@ def build_image_loader(
             PipelineBuilder()
             .add_source(index_stream, name="sampler")
             .pipe(read, concurrency=read_concurrency, name="read",
-                  cache=cache_probe, chunk=chunk)
-            .pipe(decode, concurrency=decode_concurrency, name="decode", chunk=chunk)
+                  cache=cache_probe, chunk=chunk,
+                  straggler_after=straggler_after)
+            .pipe(decode, concurrency=decode_concurrency, name="decode",
+                  chunk=chunk, straggler_after=straggler_after)
         )
         if fuse_stages:
             builder.fuse("read", "decode")
@@ -367,9 +402,10 @@ def build_image_loader(
         builder.pipe(arena.binder(), concurrency=1, name="slot")  # blocks = backpressure
     builder.pipe(
         read, concurrency=read_concurrency, name="read",
-        cache=cache_probe, chunk=chunk,
+        cache=cache_probe, chunk=chunk, straggler_after=straggler_after,
     ).pipe(
         decode, concurrency=decode_concurrency, name="decode", chunk=chunk,
+        straggler_after=straggler_after,
         # the batch stage drains via get_many: a chunk-wide queue of slot
         # REFS (tickets, not pixels) lets it amortize its loop hops too
         queue_size=max(2, chunk),
@@ -403,6 +439,7 @@ def build_lm_loader(
     zero_copy: bool = True,
     arena_slabs: int | None = None,  # None = sized from the consumer window
     chunk: int = 16,  # items per executor dispatch; 1 = per-item path
+    straggler_after: float | None = None,  # soft deadline on the read stage
 ) -> tuple[Pipeline, CheckpointableSampler]:
     """Returns (pipeline, sampler) — the sampler is checkpointed alongside
     model state (fault tolerance; see runtime/trainer.py).
@@ -415,9 +452,15 @@ def build_lm_loader(
     stays ``concurrency=1`` — ordered chunk dispatch keeps its state
     single-writer — and is NOT fused with the wider read stage).  The
     module docstring's chunked checkpoint-bound caveat applies.
+
+    ``straggler_after`` arms the slow lane on the *read* stage only (a
+    slow shard fetch is the dominant tail here); the packer stage is
+    stateful, which the slow lane's item-major execution cannot support.
     """
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    if straggler_after is not None and chunk <= 1:
+        raise ValueError("straggler_after requires chunk > 1 (see pipe())")
     sampler = sampler or CheckpointableSampler(
         len(dataset), batch_size=8, seed=seed, shuffle=True
     )
@@ -442,7 +485,8 @@ def build_lm_loader(
             PipelineBuilder()
             .add_source(doc_stream, name="sampler")
             .pipe(read, concurrency=read_concurrency, name="read",
-                  cache=cache_probe, chunk=chunk)
+                  cache=cache_probe, chunk=chunk,
+                  straggler_after=straggler_after)
             .pipe(pack, concurrency=1, name="decode+pack", chunk=chunk)  # stateful
             .disaggregate(name="rows")
             .aggregate(batch_size, drop_last=True, name="batch")
@@ -469,7 +513,8 @@ def build_lm_loader(
         PipelineBuilder()
         .add_source(doc_stream, name="sampler")
         .pipe(read, concurrency=read_concurrency, name="read",
-              cache=cache_probe, chunk=chunk)
+              cache=cache_probe, chunk=chunk,
+              straggler_after=straggler_after)
         .pipe(pack_into, concurrency=1, name="decode+pack", chunk=chunk)  # stateful
         .disaggregate(name="rows")
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")

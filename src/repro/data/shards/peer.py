@@ -65,6 +65,9 @@ import re
 import threading
 import time
 import urllib.parse
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
+from concurrent.futures import wait as futures_wait
 
 from .dataset import validate_shard_name
 from .format import ShardReader
@@ -253,6 +256,10 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
 # ---------------------------------------------------------------------------
 # client side
 # ---------------------------------------------------------------------------
+#: per-peer circuit-breaker states
+_CLOSED, _OPEN, _HALF_OPEN = 0, 1, 2
+
+
 class PeerShardSource:
     """Reads from peer ranks' warm caches: round-robin, health-tracked,
     fast-fail.
@@ -261,10 +268,18 @@ class PeerShardSource:
     a peer on the same fabric answers in milliseconds or not at all).  Each
     request starts at a rotating peer and tries each *healthy* peer at most
     once: a structured 404 miss moves on to the next peer; a transport
-    error benches the peer for ``cooldown_s`` (a dead rank must not add its
-    timeout to every fetch).  Exhausting all peers raises ``PeerMiss`` —
-    never ``FileNotFoundError``, because peers are not authoritative for
-    existence.
+    error trips that peer's circuit breaker.  Exhausting all peers raises
+    ``PeerMiss`` — never ``FileNotFoundError``, because peers are not
+    authoritative for existence.
+
+    Circuit breaker (per peer): a transport error OPENs the circuit —
+    every request skips the peer outright (its timeout must not tax the
+    read path).  After ``cooldown_s`` the circuit goes HALF_OPEN: exactly
+    ONE request is let through as a probe while everything else keeps
+    skipping, so a still-dead peer costs one timeout per cooldown window,
+    not one per concurrent fetch.  A probe that completes at the transport
+    level (data back, or a structured miss) CLOSEs the circuit; a probe
+    that fails re-OPENs it for another ``cooldown_s``.
     """
 
     def __init__(
@@ -286,28 +301,59 @@ class PeerShardSource:
         self.cooldown_s = cooldown_s
         self._clock = clock
         self._lock = threading.Lock()
+        self._state = [_CLOSED] * len(self._sources)
         self._down_until = [0.0] * len(self._sources)
         self._rr = itertools.count()
         self.hits = 0
         self.misses = 0  # requests no peer could serve
-        self.errors = 0  # transport failures observed (benching events)
+        self.errors = 0  # transport failures observed (circuit trips)
+        self.probes = 0  # half-open probe requests issued
+        self.recoveries = 0  # probes that closed the circuit again
         self.bytes_fetched = 0
+
+    def _settle(self, i: int) -> None:
+        """Peer ``i`` answered at the transport level: close its circuit
+        (a successful probe is a recovery; a closed peer is a no-op)."""
+        with self._lock:
+            if self._state[i] == _HALF_OPEN:
+                self.recoveries += 1
+            self._state[i] = _CLOSED
+
+    def _trip(self, i: int) -> None:
+        """Peer ``i`` failed at the transport level: open its circuit."""
+        with self._lock:
+            self.errors += 1
+            self._state[i] = _OPEN
+            self._down_until[i] = self._clock() + self.cooldown_s
 
     def _try_each(self, op, what: str) -> bytes:
         n = len(self._sources)
         with self._lock:
             start = next(self._rr) % n
             now = self._clock()
-            eligible = [
-                (start + k) % n
-                for k in range(n)
-                if self._down_until[(start + k) % n] <= now
-            ]
+            eligible = []
+            for k in range(n):
+                i = (start + k) % n
+                state = self._state[i]
+                if state == _CLOSED:
+                    eligible.append(i)
+                elif state == _OPEN and self._down_until[i] <= now:
+                    # cooldown expired: let exactly THIS request through as
+                    # the half-open probe; concurrent requests keep skipping
+                    # until the probe settles the circuit one way or the other
+                    self._state[i] = _HALF_OPEN
+                    self.probes += 1
+                    eligible.append(i)
+                # _HALF_OPEN (someone else's probe in flight) or a still-
+                # cooling _OPEN peer: skip outright, no timeout paid
         for i in eligible:
             try:
                 data = op(self._sources[i])
             except FileNotFoundError:
-                continue  # structured miss: this peer doesn't hold it
+                # structured miss: the transport is fine, the peer just
+                # doesn't hold it — a healthy answer for the breaker
+                self._settle(i)
+                continue
             except (
                 SourceUnavailable,
                 OSError,
@@ -315,15 +361,14 @@ class PeerShardSource:
                 # ValueError: the peer answered with malformed data — a
                 # short 206 or a 416 from a stale/torn copy under the same
                 # name.  Peers are never authoritative, so that copy must
-                # read as a benching event, not crash the read path.
+                # read as a breaker trip, not crash the read path.
                 ValueError,
             ):
-                # dead/flaky/stale peer: bench it so its timeout stops
-                # taxing every subsequent fetch; the origin tier covers it
-                with self._lock:
-                    self.errors += 1
-                    self._down_until[i] = self._clock() + self.cooldown_s
+                # dead/flaky/stale peer: open its circuit so its timeout
+                # stops taxing every fetch; the origin tier covers it
+                self._trip(i)
                 continue
+            self._settle(i)
             with self._lock:
                 self.hits += 1
                 self.bytes_fetched += len(data)
@@ -354,14 +399,17 @@ class PeerShardSource:
     # -- visibility / lifecycle --------------------------------------------
     def stats(self) -> dict[str, float]:
         with self._lock:
-            now = self._clock()
             return {
                 "hits": self.hits,
                 "misses": self.misses,
                 "errors": self.errors,
+                "probes": self.probes,
+                "recoveries": self.recoveries,
                 "bytes_fetched": self.bytes_fetched,
                 "peers": len(self._sources),
-                "peers_down": sum(1 for t in self._down_until if t > now),
+                # a peer is down until a half-open probe actually closes its
+                # circuit — an expired cooldown alone proves nothing
+                "peers_down": sum(1 for s in self._state if s != _CLOSED),
             }
 
     def close(self) -> None:
@@ -379,60 +427,76 @@ class TieredSource:
     ``RangeNotSupported`` from the origin propagates untouched so the
     prefetcher can install the whole body it carries.
 
+    Hedging (``hedge_after_s``): the circuit breaker handles a peer that
+    is *dead*; hedging handles one that is merely *slow* (network brownout,
+    GC pause) without waiting out its full fast-fail timeout.  When the
+    peer tier has not answered within ``hedge_after_s``, an origin fetch is
+    launched *in parallel* and the first success wins — the loser is
+    cancelled if it has not started, or its result discarded.  ``None``
+    (default) disables hedging and keeps the strictly sequential tiers.
+
+    ``disable_peers()`` is the graceful-degradation hook (see
+    ``core.health``): it drops the stack to origin-only — no peer requests,
+    no hedging — for when the peer fleet itself is the suspected problem.
+
     ``fetch_range`` is exposed iff the origin has it (the prefetcher's
     protocol sniffing must see the stack exactly as it would see the bare
     origin); ``range_supported`` mirrors the origin's view.
 
     Counters — ``peer_hits`` / ``peer_misses`` / ``peer_bytes`` /
-    ``origin_fetches`` / ``origin_bytes`` — flow through
-    ``ShardPrefetcher.stats()`` as ``source_peer_hits`` etc. into
-    ``StageStatsSnapshot`` and the ``format_stats`` dashboard.
+    ``origin_fetches`` / ``origin_bytes`` / ``hedges`` / ``hedge_wins`` —
+    flow through ``ShardPrefetcher.stats()`` as ``source_peer_hits`` etc.
+    into ``StageStatsSnapshot`` and the ``format_stats`` dashboard.
     """
 
-    def __init__(self, origin, peers):
+    def __init__(self, origin, peers, *, hedge_after_s: float | None = None):
         self.origin = origin
         self.peers = (
             peers if isinstance(peers, PeerShardSource) else PeerShardSource(peers)
         )
+        if hedge_after_s is not None and hedge_after_s <= 0:
+            raise ValueError("hedge_after_s must be > 0 seconds")
+        self.hedge_after_s = hedge_after_s
+        self._hedge_ex = (
+            ThreadPoolExecutor(max_workers=8, thread_name_prefix="repro-hedge")
+            if hedge_after_s is not None
+            else None
+        )
         self._lock = threading.Lock()
+        self._peers_disabled = False
         self.peer_hits = 0
         self.peer_misses = 0
         self.peer_bytes = 0
         self.origin_fetches = 0
         self.origin_bytes = 0
+        self.hedges = 0  # origin fetches launched because the peer was slow
+        self.hedge_wins = 0  # hedged origin fetches that beat the peer
         # mirror the origin's protocol surface exactly (see class docstring)
         if callable(getattr(origin, "fetch_range", None)):
             self.fetch_range = self._fetch_range
 
-    def _peer_try(self, op) -> bytes | None:
-        try:
-            data = op(self.peers)
-        except PeerMiss:
-            with self._lock:
-                self.peer_misses += 1
-            return None
+    # -- degradation hook ---------------------------------------------------
+    def disable_peers(self) -> None:
+        """Drop to origin-only (idempotent, one-way for this source's
+        lifetime): the health monitor calls this when the pipeline is
+        degraded and the peer tier is optional work worth shedding."""
+        with self._lock:
+            self._peers_disabled = True
+
+    @property
+    def peers_disabled(self) -> bool:
+        with self._lock:
+            return self._peers_disabled
+
+    # -- internals ----------------------------------------------------------
+    def _record_peer_win(self, data: bytes) -> None:
         with self._lock:
             self.peer_hits += 1
             self.peer_bytes += len(data)
-        return data
 
-    # -- RemoteShardSource protocol ----------------------------------------
-    def fetch(self, name: str) -> bytes:
-        data = self._peer_try(lambda p: p.fetch(name))
-        if data is not None:
-            return data
-        data = self.origin.fetch(name)
-        with self._lock:
-            self.origin_fetches += 1
-            self.origin_bytes += len(data)
-        return data
-
-    def _fetch_range(self, name: str, start: int, length: int) -> bytes:
-        data = self._peer_try(lambda p: p.fetch_range(name, start, length))
-        if data is not None:
-            return data
+    def _origin_call(self, call) -> bytes:
         try:
-            data = self.origin.fetch_range(name, start, length)
+            data = call()
         except RangeNotSupported as e:
             with self._lock:
                 self.origin_fetches += 1
@@ -442,6 +506,102 @@ class TieredSource:
             self.origin_fetches += 1
             self.origin_bytes += len(data)
         return data
+
+    def _peer_try(self, op) -> bytes | None:
+        if self.peers_disabled:
+            return None
+        try:
+            data = op(self.peers)
+        except PeerMiss:
+            with self._lock:
+                self.peer_misses += 1
+            return None
+        self._record_peer_win(data)
+        return data
+
+    def _hedged(self, peer_op, origin_call, what: str) -> bytes:
+        """Peer tier with a latency budget: give the peers ``hedge_after_s``
+        to answer, then race an origin fetch against them.  First success
+        wins; the loser is cancelled (not yet started) or discarded."""
+        peer_fut = self._hedge_ex.submit(peer_op, self.peers)
+        try:
+            data = peer_fut.result(timeout=self.hedge_after_s)
+        except PeerMiss:
+            with self._lock:
+                self.peer_misses += 1
+            return self._origin_call(origin_call)
+        except FuturesTimeout:
+            pass  # slow peer: hedge (below)
+        except Exception:
+            # the peer tier never raises anything else by contract; treat a
+            # surprise as a miss — the origin is authoritative anyway
+            with self._lock:
+                self.peer_misses += 1
+            return self._origin_call(origin_call)
+        else:
+            self._record_peer_win(data)
+            return data
+        with self._lock:
+            self.hedges += 1
+        origin_fut = self._hedge_ex.submit(self._origin_call, origin_call)
+        pending = {peer_fut, origin_fut}
+        origin_exc: BaseException | None = None
+        while pending:
+            done, pending = futures_wait(pending, return_when=FIRST_COMPLETED)
+            for f in done:
+                try:
+                    data = f.result()
+                except RangeNotSupported:
+                    # only the origin raises this, and it carries the whole
+                    # body — a win; the slow peer's eventual result is moot
+                    peer_fut.cancel()
+                    with self._lock:
+                        self.hedge_wins += 1
+                    raise
+                except BaseException as e:  # noqa: BLE001 - collected below
+                    if f is origin_fut:
+                        origin_exc = e
+                    else:
+                        with self._lock:
+                            self.peer_misses += 1
+                    continue
+                for p in pending:
+                    p.cancel()
+                if f is peer_fut:
+                    self._record_peer_win(data)
+                else:
+                    with self._lock:
+                        self.hedge_wins += 1
+                return data
+        # both lanes failed: surface the origin's error (authoritative —
+        # a FileNotFoundError here really means the object does not exist)
+        assert origin_exc is not None
+        raise origin_exc
+
+    # -- RemoteShardSource protocol ----------------------------------------
+    def fetch(self, name: str) -> bytes:
+        if self._hedge_ex is not None and not self.peers_disabled:
+            return self._hedged(
+                lambda p: p.fetch(name), lambda: self.origin.fetch(name), name
+            )
+        data = self._peer_try(lambda p: p.fetch(name))
+        if data is not None:
+            return data
+        return self._origin_call(lambda: self.origin.fetch(name))
+
+    def _fetch_range(self, name: str, start: int, length: int) -> bytes:
+        if self._hedge_ex is not None and not self.peers_disabled:
+            return self._hedged(
+                lambda p: p.fetch_range(name, start, length),
+                lambda: self.origin.fetch_range(name, start, length),
+                f"{name}[{start}:+{length}]",
+            )
+        data = self._peer_try(lambda p: p.fetch_range(name, start, length))
+        if data is not None:
+            return data
+        return self._origin_call(
+            lambda: self.origin.fetch_range(name, start, length)
+        )
 
     @property
     def range_supported(self) -> bool:
@@ -458,13 +618,20 @@ class TieredSource:
                 peer_bytes=self.peer_bytes,
                 origin_fetches=self.origin_fetches,
                 origin_bytes=self.origin_bytes,
+                hedges=self.hedges,
+                hedge_wins=self.hedge_wins,
+                peers_disabled=int(self._peers_disabled),
             )
         peer_stats = self.peers.stats()
         out["peer_errors"] = peer_stats.get("errors", 0)
         out["peers_down"] = peer_stats.get("peers_down", 0)
+        out["peer_probes"] = peer_stats.get("probes", 0)
+        out["peer_recoveries"] = peer_stats.get("recoveries", 0)
         return out
 
     def close(self) -> None:
+        if self._hedge_ex is not None:
+            self._hedge_ex.shutdown(wait=False, cancel_futures=True)
         self.peers.close()
         origin_close = getattr(self.origin, "close", None)
         if callable(origin_close):

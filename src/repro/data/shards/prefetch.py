@@ -89,6 +89,7 @@ import functools
 import logging
 import os
 import pathlib
+import random
 import threading
 import time
 import zlib
@@ -139,6 +140,13 @@ class SimulatedLatencySource:
     index-first path can be exercised without a real server; the default
     stays range-less so whole-shard fetch counts in existing tests and
     benchmarks are unchanged.
+
+    ``jitter_s`` adds a uniform ``[0, jitter_s)`` random extra delay per
+    request, drawn from this source's OWN seeded ``random.Random(seed)`` —
+    never the process-global RNG, so latency benchmarks and fault drills
+    are reproducible run-to-run regardless of what else consumed random
+    numbers (and two sources with the same seed pay identical jitter
+    sequences).
     """
 
     def __init__(
@@ -148,10 +156,16 @@ class SimulatedLatencySource:
         latency_s: float = 0.01,
         bandwidth_bps: float | None = None,
         ranges: bool = False,
+        jitter_s: float = 0.0,
+        seed: int = 0,
     ):
+        if jitter_s < 0:
+            raise ValueError("jitter_s must be >= 0")
         self.inner = inner
         self.latency_s = latency_s
         self.bandwidth_bps = bandwidth_bps
+        self.jitter_s = jitter_s
+        self._rng = random.Random(seed)
         self.fetches = 0
         self.range_fetches = 0
         self.bytes_fetched = 0
@@ -163,6 +177,9 @@ class SimulatedLatencySource:
         delay = self.latency_s
         if self.bandwidth_bps:
             delay += nbytes / self.bandwidth_bps
+        if self.jitter_s:
+            with self._lock:  # Random isn't thread-safe; draws stay seeded
+                delay += self._rng.random() * self.jitter_s
         if delay > 0:
             time.sleep(delay)
 

@@ -156,6 +156,21 @@ class HttpShardSource:
                 conn.request("GET", path, headers={**self.headers, **extra_headers})
                 resp = conn.getresponse()
                 body = resp.read()
+                # mid-body disconnect defense: http.client raises
+                # IncompleteRead itself when Content-Length is known and the
+                # socket dies early, but a read-to-EOF response (no length,
+                # Connection: close) or a stale header can still hand back a
+                # short body.  Validate explicitly — a truncated payload
+                # must surface HERE as a retryable transport error, not
+                # install short and resurface later as per-sample crc holes
+                # far from the cause.
+                expect = resp.headers.get("Content-Length")
+                if (
+                    expect is not None
+                    and expect.isdigit()
+                    and len(body) != int(expect)
+                ):
+                    raise http.client.IncompleteRead(body, int(expect) - len(body))
             except (http.client.HTTPException, OSError) as e:
                 self._drop(conn)
                 # a dead keep-alive socket is routine: one transparent retry

@@ -17,6 +17,27 @@ with the two behaviors a real object-store front end has that
 Observability for assertions: ``requests``, ``bytes_served``,
 ``connections`` counters, and ``fail_next = N`` to answer the next N
 requests with 503 (drives the retry/backoff path deterministically).
+
+Chaos faults (the fault-injection layer behind ``benchmarks/bench_faults``
+and ``tests/test_faults.py``) — all default off, all settable live:
+
+* ``fail_next = N`` — answer the next N requests with 503 (pre-existing);
+* ``flaky_rate = p`` — answer each request with 503 with probability ``p``
+  from the server's seeded ``chaos_rng`` (reproducible flakiness);
+* ``stall_next = N`` / ``stall_s`` — sleep ``stall_s`` before answering
+  the next N requests (a slow/unresponsive server, triggers client
+  timeouts and hedging);
+* ``truncate_next = N`` — advertise the full ``Content-Length`` but close
+  the connection mid-body for the next N requests (the mid-body
+  disconnect that must surface as ``SourceUnavailable``, never as a
+  short installed payload);
+* ``slow_bps = B`` — throttle every body write to ``B`` bytes/second (a
+  bandwidth-starved origin or slow peer);
+* ``kill()`` — process death: stop accepting AND sever in-flight
+  keep-alive connections (``shutdown()`` alone leaves persistent
+  connections serviceable, which is a restart, not a crash).
+
+Counters for assertions: ``stalls``, ``truncations``, ``flaky_failures``.
 """
 
 from __future__ import annotations
@@ -24,8 +45,11 @@ from __future__ import annotations
 import contextlib
 import http.server
 import pathlib
+import random
 import re
+import socket
 import threading
+import time
 import urllib.parse
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
@@ -47,17 +71,67 @@ class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
         for k, v in (extra or {}).items():
             self.send_header(k, v)
         self.end_headers()
-        self.wfile.write(body)
+        self._write_body(body)
         with self.server.lock:
             self.server.bytes_served += len(body)
 
+    def _write_body(self, body: bytes) -> None:
+        bps = self.server.slow_bps
+        if not bps or not body:
+            self.wfile.write(body)
+            return
+        # bandwidth throttle: write in slices, sleeping each one's cost
+        step = max(1, int(bps * 0.05))  # ~20 writes/second granularity
+        for off in range(0, len(body), step):
+            piece = body[off : off + step]
+            self.wfile.write(piece)
+            self.wfile.flush()
+            time.sleep(len(piece) / bps)
+
+    def _send_truncated(self, status: int, body: bytes, extra: dict | None) -> None:
+        """Mid-body disconnect: advertise the full Content-Length, write
+        half the body, then drop the connection — the client's read sees
+        an IncompleteRead, never a clean short body."""
+        self.send_response(status)
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body[: len(body) // 2])
+        self.wfile.flush()
+        self.close_connection = True
+        with contextlib.suppress(OSError):
+            self.connection.shutdown(socket.SHUT_RDWR)
+
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
         srv = self.server
+        if srv.dead:
+            # killed server: drop the socket without an HTTP response so
+            # reused keep-alive connections see a reset, not a clean 5xx
+            self.close_connection = True
+            with contextlib.suppress(OSError):
+                self.connection.shutdown(socket.SHUT_RDWR)
+            return
         with srv.lock:
             srv.requests += 1
             fail = srv.fail_next > 0
             if fail:
                 srv.fail_next -= 1
+            elif srv.flaky_rate > 0 and srv.chaos_rng.random() < srv.flaky_rate:
+                fail = True
+                srv.flaky_failures += 1
+            stall = srv.stall_next > 0
+            if stall:
+                srv.stall_next -= 1
+                srv.stalls += 1
+            truncate = srv.truncate_next > 0
+            if truncate:
+                srv.truncate_next -= 1
+                # counted at decision time: the client can see the severed
+                # socket before the handler thread runs another line
+                srv.truncations += 1
+        if stall:
+            time.sleep(srv.stall_s)
         if fail:
             self._send(503, b"injected failure")
             return
@@ -85,13 +159,16 @@ class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
                     return
                 end = min(end, len(data) - 1)
                 body = data[start : end + 1]
-                self._send(
-                    206,
-                    body,
-                    {"Content-Range": f"bytes {start}-{end}/{len(data)}"},
-                )
+                extra = {"Content-Range": f"bytes {start}-{end}/{len(data)}"}
+                if truncate:
+                    self._send_truncated(206, body, extra)
+                else:
+                    self._send(206, body, extra)
                 return
-        self._send(200, data)
+        if truncate:
+            self._send_truncated(200, data, None)
+        else:
+            self._send(200, data)
 
     def log_message(self, *args) -> None:  # quiet: tests read counters
         pass
@@ -102,7 +179,13 @@ class ShardHTTPServer(http.server.ThreadingHTTPServer):
 
     daemon_threads = True
 
-    def __init__(self, root: str | pathlib.Path, *, support_ranges: bool = True):
+    def __init__(
+        self,
+        root: str | pathlib.Path,
+        *,
+        support_ranges: bool = True,
+        chaos_seed: int = 0,
+    ):
         self.root = pathlib.Path(root).resolve()
         self.support_ranges = support_ranges
         self.lock = threading.Lock()
@@ -110,7 +193,26 @@ class ShardHTTPServer(http.server.ThreadingHTTPServer):
         self.bytes_served = 0
         self.connections = 0
         self.fail_next = 0
+        # chaos faults (all off by default; see module docstring)
+        self.chaos_rng = random.Random(chaos_seed)
+        self.flaky_rate = 0.0
+        self.stall_next = 0
+        self.stall_s = 0.5
+        self.truncate_next = 0
+        self.slow_bps: int | None = None
+        self.stalls = 0
+        self.truncations = 0
+        self.flaky_failures = 0
+        self.dead = False
         super().__init__(("127.0.0.1", 0), _ShardRequestHandler)
+
+    def kill(self) -> None:
+        """Model peer/origin *death* (not graceful restart): stop accepting
+        new connections and make every in-flight keep-alive connection fail
+        at the transport level on its next request."""
+        self.dead = True
+        self.shutdown()
+        self.server_close()
 
     @property
     def url(self) -> str:
@@ -119,10 +221,17 @@ class ShardHTTPServer(http.server.ThreadingHTTPServer):
 
 
 @contextlib.contextmanager
-def serve_shards(root: str | pathlib.Path, *, support_ranges: bool = True):
+def serve_shards(
+    root: str | pathlib.Path,
+    *,
+    support_ranges: bool = True,
+    chaos_seed: int = 0,
+):
     """Context manager: serve ``root`` on a loopback port; yields the server
     (use ``server.url`` as an ``HttpShardSource`` root)."""
-    server = ShardHTTPServer(root, support_ranges=support_ranges)
+    server = ShardHTTPServer(
+        root, support_ranges=support_ranges, chaos_seed=chaos_seed
+    )
     thread = threading.Thread(
         target=server.serve_forever, name="shard-http", daemon=True
     )

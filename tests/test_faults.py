@@ -1,0 +1,708 @@
+"""The robustness layer under injected faults: straggler slow lane
+(detach, hole-fill, shed, fail-fast provenance), the peer circuit
+breaker's half-open probe cycle, hedged fetches, health monitoring +
+graceful degradation, the chaos HTTP server's fault repertoire
+(truncation, kill, flakiness), Content-Length validation, and
+deterministic fault injection."""
+
+import itertools
+import socket
+import threading
+import time
+import types
+
+import pytest
+
+from repro.core import (
+    ChaosError,
+    DegradeAction,
+    FaultInjectingStage,
+    HealthMonitor,
+    PipelineBuilder,
+    PipelineFailure,
+    PipelineStalled,
+    StageHealth,
+)
+
+
+def build(src, *stages, sink=3, threads=4, **bkw):
+    b = PipelineBuilder().add_source(src)
+    for st in stages:
+        st(b)
+    return b.add_sink(buffer_size=sink).build(num_threads=threads, **bkw)
+
+
+def slow_on(slow_set, slow_s=0.3):
+    def fn(x):
+        if x in slow_set:
+            time.sleep(slow_s)
+        return x * 10
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# straggler slow lane
+# ---------------------------------------------------------------------------
+def test_slowlane_ordered_holefill_preserves_order():
+    """Detached stragglers re-enter at their original position; the wall
+    clock shows their chunk-mates did NOT wait for them."""
+    p = build(
+        range(64),
+        lambda b: b.pipe(
+            slow_on({5, 21}, 0.4), concurrency=4, chunk=8, straggler_after=0.05
+        ),
+    )
+    t0 = time.monotonic()
+    with p.auto_stop():
+        out = list(p)
+    wall = time.monotonic() - t0
+    assert out == [x * 10 for x in range(64)]
+    row = p.stats()[1]
+    assert row.stragglers == 2
+    assert row.straggler_time > 0
+    # two 0.4s stragglers overlapped with the stream, not serialized after it
+    assert wall < 1.2
+
+
+def test_slowlane_unordered_emits_stragglers_late():
+    p = build(
+        range(40),
+        lambda b: b.pipe(
+            slow_on({3}, 0.3),
+            concurrency=2,
+            chunk=8,
+            straggler_after=0.05,
+            output_order="completion",
+        ),
+    )
+    with p.auto_stop():
+        out = list(p)
+    assert sorted(out) == [x * 10 for x in range(40)]
+    # the straggler landed later than its input position
+    assert out.index(30) > 3
+
+
+def test_slowlane_straggler_failure_is_a_hole_under_skip():
+    def fn(x):
+        if x == 7:
+            time.sleep(0.2)
+            raise ValueError("slow AND broken")
+        return x
+
+    p = build(
+        range(32),
+        lambda b: b.pipe(fn, concurrency=2, chunk=8, straggler_after=0.05),
+    )
+    with p.auto_stop():
+        out = list(p)
+    assert out == [x for x in range(32) if x != 7]
+
+
+def test_slowlane_straggler_failure_failfast_provenance():
+    def fn(x):
+        if x == 9:
+            time.sleep(0.2)
+            raise ValueError("boom")
+        return x
+
+    p = build(
+        range(32),
+        lambda b: b.pipe(
+            fn,
+            name="work",
+            concurrency=2,
+            chunk=8,
+            straggler_after=0.05,
+            on_error="fail",
+        ),
+    )
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            list(p)
+    assert ei.value.stage == "work"
+    assert ei.value.item_index == 9
+
+
+def test_slowlane_sheds_inline_when_pool_saturated():
+    """A saturated straggler pool degrades to inline execution (counted),
+    never drops or reorders items."""
+    p = build(
+        range(48),
+        lambda b: b.pipe(
+            slow_on(set(range(0, 48, 4)), 0.1),
+            concurrency=4,
+            chunk=8,
+            straggler_after=0.02,
+        ),
+        threads=6,
+        straggler_workers=1,
+    )
+    with p.auto_stop():
+        out = list(p)
+    assert out == [x * 10 for x in range(48)]
+    row = p.stats()[1]
+    assert row.straggler_shed > 0
+
+
+def test_builder_rejects_bad_straggler_config():
+    b = PipelineBuilder().add_source(range(4))
+    with pytest.raises(ValueError, match="chunk > 1"):
+        b.pipe(lambda x: x, straggler_after=0.1)
+    with pytest.raises(ValueError, match="> 0 seconds"):
+        b.pipe(lambda x: x, chunk=4, straggler_after=0.0)
+    with pytest.raises(ValueError, match="vectorized"):
+        b.pipe(lambda xs: xs, chunk=4, vectorized=True, straggler_after=0.1)
+    with pytest.raises(ValueError, match=">= 0"):
+        b.pipe(lambda x: x, chunk=4, straggler_runahead=-1)
+
+
+def test_fused_straggler_failure_names_phase_and_fused_stage():
+    def broken(x):
+        if x == 5:
+            raise ValueError("bad item")
+        return x
+
+    b = (
+        PipelineBuilder()
+        .add_source(range(16))
+        .pipe(lambda x: x, name="a", concurrency=2, chunk=4, straggler_after=0.5)
+        .pipe(broken, name="b", concurrency=2, chunk=4, on_error="fail")
+    )
+    b.fuse("a", "b")
+    p = b.add_sink(buffer_size=3).build(num_threads=4)
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            list(p)
+    assert ei.value.stage == "b"  # the raising PHASE, not the fused unit
+    assert ei.value.phase == "b"
+    assert ei.value.fused_stage  # ...but the fused stage is named too
+    assert ei.value.item_index == 5
+
+
+# ---------------------------------------------------------------------------
+# chunked fail-fast teardown when a sync fn hangs (whole-chunk backstop)
+# ---------------------------------------------------------------------------
+def test_chunked_failfast_hang_tears_down_promptly():
+    release = threading.Event()
+
+    def hang(x):
+        if x == 3:
+            release.wait(timeout=30)  # "never returns" at test timescales
+        return x
+
+    p = build(
+        range(16),
+        lambda b: b.pipe(
+            hang,
+            name="work",
+            concurrency=2,
+            chunk=4,
+            timeout=0.05,  # every phase timed -> whole-chunk budget armed
+            on_error="fail",
+        ),
+    )
+    t0 = time.monotonic()
+    with p.auto_stop():
+        with pytest.raises(PipelineFailure) as ei:
+            list(p)
+        assert ei.value.stage == "work"
+        release.set()  # let the stuck worker thread exit so stop() can join
+    assert time.monotonic() - t0 < 5.0  # consumer unblocked, teardown bounded
+
+
+# ---------------------------------------------------------------------------
+# peer circuit breaker (unit: fake sources + fake clock)
+# ---------------------------------------------------------------------------
+class _FakePeer:
+    def __init__(self):
+        self.mode = "ok"  # ok | dead | missing
+        self.calls = 0
+
+    def fetch(self, name):
+        self.calls += 1
+        if self.mode == "dead":
+            raise OSError("connection refused")
+        if self.mode == "missing":
+            raise FileNotFoundError(name)
+        return b"payload-" + name.encode()
+
+    def close(self):
+        pass
+
+
+def _breaker(cooldown=10.0):
+    from repro.data.shards.peer import PeerShardSource
+
+    clock = [0.0]
+    src = PeerShardSource(
+        ["http://unused:1"], cooldown_s=cooldown, clock=lambda: clock[0]
+    )
+    fake = _FakePeer()
+    src._sources = [fake]
+    src._state = src._state[:1]
+    src._down_until = src._down_until[:1]
+    return src, fake, clock
+
+
+def test_breaker_opens_skips_then_probes_half_open():
+    from repro.data.shards.peer import PeerMiss
+
+    src, fake, clock = _breaker(cooldown=10.0)
+    fake.mode = "dead"
+    with pytest.raises(PeerMiss):
+        src.fetch("a")  # transport failure -> circuit opens
+    assert src.stats()["peers_down"] == 1
+    with pytest.raises(PeerMiss):
+        src.fetch("b")  # still cooling: peer NOT contacted
+    assert fake.calls == 1
+    clock[0] = 11.0
+    fake.mode = "ok"
+    assert src.fetch("c") == b"payload-c"  # the half-open probe
+    st = src.stats()
+    assert st["probes"] == 1
+    assert st["recoveries"] == 1
+    assert st["peers_down"] == 0
+
+
+def test_breaker_failed_probe_reopens():
+    from repro.data.shards.peer import PeerMiss
+
+    src, fake, clock = _breaker(cooldown=5.0)
+    fake.mode = "dead"
+    with pytest.raises(PeerMiss):
+        src.fetch("a")
+    clock[0] = 6.0
+    with pytest.raises(PeerMiss):
+        src.fetch("b")  # probe fires and fails -> open again
+    st = src.stats()
+    assert st["probes"] == 1
+    assert st["recoveries"] == 0
+    assert st["peers_down"] == 1
+    assert fake.calls == 2
+    with pytest.raises(PeerMiss):
+        src.fetch("c")  # cooling again: not contacted
+    assert fake.calls == 2
+
+
+def test_breaker_miss_is_a_healthy_answer():
+    from repro.data.shards.peer import PeerMiss
+
+    src, fake, clock = _breaker()
+    fake.mode = "missing"
+    with pytest.raises(PeerMiss):
+        src.fetch("a")
+    st = src.stats()
+    assert st["peers_down"] == 0  # transport fine: circuit stays closed
+    assert st["errors"] == 0
+    assert st["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hedged fetches (unit: fake origin + fake peer tier)
+# ---------------------------------------------------------------------------
+class _FakeTier:
+    """Duck-typed origin (and inner peer source) for TieredSource."""
+
+    def __init__(self, data=b"D", delay_s=0.0, fail=False):
+        self.data, self.delay_s, self.fail = data, delay_s, fail
+        self.calls = 0
+
+    def fetch(self, name):
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if self.fail:
+            raise OSError("down")
+        return self.data
+
+    def stats(self):
+        return {}
+
+    def close(self):
+        pass
+
+
+def _peer_tier(fake):
+    """A real PeerShardSource (TieredSource requires one) over a fake
+    inner source — breaker machinery live, no sockets."""
+    from repro.data.shards.peer import PeerShardSource
+
+    src = PeerShardSource(["http://unused:1"], cooldown_s=60.0)
+    src._sources = [fake]
+    return src
+
+
+def test_hedge_origin_wins_against_slow_peer():
+    from repro.data.shards.peer import TieredSource
+
+    t = TieredSource(
+        _FakeTier(b"from-origin"),
+        _peer_tier(_FakeTier(b"from-peer", delay_s=0.5)),
+        hedge_after_s=0.05,
+    )
+    t0 = time.monotonic()
+    assert t.fetch("x") == b"from-origin"
+    assert time.monotonic() - t0 < 0.4  # did not wait out the peer
+    st = t.stats()
+    assert st["hedges"] == 1
+    assert st["hedge_wins"] == 1
+    t.close()
+
+
+def test_hedge_not_launched_when_peer_is_fast():
+    from repro.data.shards.peer import TieredSource
+
+    origin = _FakeTier(b"from-origin")
+    t = TieredSource(origin, _peer_tier(_FakeTier(b"from-peer")), hedge_after_s=0.5)
+    assert t.fetch("x") == b"from-peer"
+    st = t.stats()
+    assert st["hedges"] == 0
+    assert origin.calls == 0
+    t.close()
+
+
+def test_hedge_both_failed_raises_origin_error():
+    from repro.data.shards.peer import TieredSource
+
+    t = TieredSource(
+        _FakeTier(fail=True),
+        _peer_tier(_FakeTier(delay_s=0.2, fail=True)),
+        hedge_after_s=0.02,
+    )
+    with pytest.raises(OSError):
+        t.fetch("x")
+    t.close()
+
+
+def test_disable_peers_goes_origin_only():
+    from repro.data.shards.peer import TieredSource
+
+    peer = _FakeTier(b"from-peer")
+    t = TieredSource(_FakeTier(b"from-origin"), _peer_tier(peer), hedge_after_s=0.5)
+    t.disable_peers()
+    assert t.fetch("x") == b"from-origin"
+    assert peer.calls == 0
+    assert t.stats()["peers_disabled"] == 1
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# health monitor (unit: stub pipeline + fake clock) and guard (integration)
+# ---------------------------------------------------------------------------
+class _StubPipeline:
+    def __init__(self, names=("source", "work")):
+        self.rows = [
+            types.SimpleNamespace(name=n, num_in=0, num_out=0, num_failed=0)
+            for n in names
+        ]
+        self.finished = False
+
+    def stats(self):
+        return list(self.rows)
+
+
+def test_health_degrades_escalates_and_stalls():
+    clock = [0.0]
+    stub = _StubPipeline()
+    fired = []
+    actions = [
+        DegradeAction("rung1", lambda: fired.append(1)),
+        DegradeAction("rung2", lambda: fired.append(2)),
+    ]
+    mon = HealthMonitor(
+        stub,
+        degraded_after_s=5.0,
+        stalled_after_s=30.0,
+        actions=actions,
+        escalate_every_s=5.0,
+        clock=lambda: clock[0],
+    )
+    stub.rows[1].num_in = 10  # "work" holds items it never disposes of
+    assert mon.observe() is StageHealth.HEALTHY  # baseline snapshot
+    clock[0] = 6.0
+    assert mon.observe() is StageHealth.DEGRADED
+    assert fired == [1]  # first rung fires on entering DEGRADED
+    clock[0] = 8.0
+    mon.observe()
+    assert fired == [1]  # second rung paced by escalate_every_s
+    clock[0] = 12.0
+    mon.observe()
+    assert fired == [1, 2]
+    clock[0] = 31.0
+    with pytest.raises(PipelineStalled) as ei:
+        mon.check()
+    assert ei.value.stage == "work"
+    assert ei.value.snapshot is not None
+
+
+def test_health_progress_resets_to_healthy():
+    clock = [0.0]
+    stub = _StubPipeline()
+    mon = HealthMonitor(
+        stub, degraded_after_s=5.0, stalled_after_s=30.0, clock=lambda: clock[0]
+    )
+    stub.rows[1].num_in = 10
+    mon.observe()
+    clock[0] = 6.0
+    assert mon.observe() is StageHealth.DEGRADED
+    stub.rows[1].num_out = 4  # progress!
+    assert mon.observe() is StageHealth.HEALTHY
+    assert mon.stage_states()["work"] is StageHealth.HEALTHY
+
+
+def test_health_quiet_pipeline_blames_source():
+    """No stage shows pending work but nothing moves either: the SOURCE is
+    the suspect (a stuck source never enqueues anything downstream)."""
+    clock = [0.0]
+    stub = _StubPipeline()
+    mon = HealthMonitor(
+        stub, degraded_after_s=5.0, stalled_after_s=10.0, clock=lambda: clock[0]
+    )
+    mon.observe()
+    clock[0] = 11.0
+    with pytest.raises(PipelineStalled) as ei:
+        mon.check()
+    assert ei.value.stage == "source"
+
+
+def test_health_finished_pipeline_is_healthy():
+    clock = [0.0]
+    stub = _StubPipeline()
+    stub.rows[1].num_in = 10
+    stub.finished = True
+    mon = HealthMonitor(
+        stub, degraded_after_s=1.0, stalled_after_s=2.0, clock=lambda: clock[0]
+    )
+    mon.observe()
+    clock[0] = 100.0
+    assert mon.observe() is StageHealth.HEALTHY
+
+
+def test_guard_raises_instead_of_hanging():
+    """End to end: a stage that stops mid-stream turns into a structured
+    PipelineStalled at the consumer, never an indefinite block."""
+    release = threading.Event()
+
+    def fn(x):
+        if x >= 4:
+            release.wait(timeout=30)
+        return x
+
+    p = build(range(32), lambda b: b.pipe(fn, name="work", concurrency=2, chunk=2))
+    mon = HealthMonitor(p, degraded_after_s=0.2, stalled_after_s=0.5)
+    got = []
+    with p.auto_stop():
+        with pytest.raises(PipelineStalled) as ei:
+            for item in mon.guard(tick=0.05):
+                got.append(item)
+        assert ei.value.stage == "work"
+        release.set()
+    assert got == list(range(4))
+
+
+def test_degrade_action_is_idempotent_and_swallows_errors():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("broken hook")
+
+    a = DegradeAction("boom", boom)
+    a.apply()
+    a.apply()
+    assert calls == [1]
+    assert a.applied
+
+
+# ---------------------------------------------------------------------------
+# chaos HTTP server + Content-Length validation + retry coverage
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def shard_dir(tmp_path):
+    d = tmp_path / "shards"
+    d.mkdir()
+    (d / "a.bin").write_bytes(bytes(range(256)) * 64)
+    return d
+
+
+def test_truncated_body_surfaces_as_source_unavailable(shard_dir):
+    from repro.data.shards.sources import HttpShardSource, SourceUnavailable
+    from repro.data.shards.testing import serve_shards
+
+    with serve_shards(shard_dir) as srv:
+        srv.truncate_next = 1
+        src = HttpShardSource(srv.url)
+        with pytest.raises(SourceUnavailable):
+            src.fetch("a.bin")  # fresh conn: no transparent retry
+        assert srv.truncations == 1
+        src.close()
+
+
+def test_retrying_source_repairs_truncated_transfer(shard_dir):
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+    from repro.data.shards.testing import serve_shards
+
+    with serve_shards(shard_dir) as srv:
+        srv.truncate_next = 2
+        src = RetryingSource(HttpShardSource(srv.url), base_delay_s=0.01)
+        data = src.fetch("a.bin")
+        assert data == (shard_dir / "a.bin").read_bytes()  # intact, never short
+        assert srv.truncations == 2
+        assert src.stats()["retries"] >= 2
+        src.close()
+
+
+def test_content_length_validation_rejects_clean_short_body(shard_dir):
+    """A server that under-delivers but closes cleanly (no socket error):
+    only the explicit Content-Length check catches this."""
+    from repro.data.shards.sources import HttpShardSource, SourceUnavailable
+
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+
+    def answer():
+        conn, _ = srv.accept()
+        conn.recv(4096)
+        conn.sendall(
+            b"HTTP/1.1 200 OK\r\nContent-Length: 100\r\n\r\nshort body"
+        )
+        conn.close()
+
+    t = threading.Thread(target=answer, daemon=True)
+    t.start()
+    src = HttpShardSource(f"http://127.0.0.1:{port}")
+    with pytest.raises(SourceUnavailable):
+        src.fetch("a.bin")
+    t.join(timeout=5)
+    srv.close()
+    src.close()
+
+
+def test_server_kill_severs_keepalive_connections(shard_dir):
+    from repro.data.shards.sources import HttpShardSource, SourceUnavailable
+    from repro.data.shards.testing import ShardHTTPServer
+
+    srv = ShardHTTPServer(shard_dir)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    src = HttpShardSource(srv.url)
+    assert src.fetch("a.bin")  # establishes a keep-alive connection
+    srv.kill()
+    with pytest.raises((SourceUnavailable, OSError)):
+        src.fetch("a.bin")  # the reused connection must FAIL, not serve
+    src.close()
+    t.join(timeout=5)
+
+
+def test_server_flaky_rate_is_seeded(shard_dir):
+    from repro.data.shards.sources import HttpShardSource, SourceUnavailable
+    from repro.data.shards.testing import serve_shards
+
+    def failures(seed):
+        with serve_shards(shard_dir, chaos_seed=seed) as srv:
+            srv.flaky_rate = 0.5
+            src = HttpShardSource(srv.url)
+            pattern = []
+            for _ in range(12):
+                try:
+                    src.fetch("a.bin")
+                    pattern.append(0)
+                except SourceUnavailable:
+                    pattern.append(1)
+            src.close()
+            return pattern
+
+    assert failures(7) == failures(7)  # same seed, same fault sequence
+
+
+def test_server_stall_delays_response(shard_dir):
+    from repro.data.shards.sources import HttpShardSource
+    from repro.data.shards.testing import serve_shards
+
+    with serve_shards(shard_dir) as srv:
+        srv.stall_next = 1
+        srv.stall_s = 0.3
+        src = HttpShardSource(srv.url)
+        t0 = time.monotonic()
+        src.fetch("a.bin")
+        assert time.monotonic() - t0 >= 0.3
+        assert srv.stalls == 1
+        src.close()
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection + seeded latency simulation
+# ---------------------------------------------------------------------------
+def test_fault_stage_counts_reproducible_across_runs():
+    def counts():
+        st = FaultInjectingStage(
+            lambda x: x, seed=42, slow_rate=0.2, error_rate=0.1, slow_s=0.0
+        )
+        for i in range(200):
+            try:
+                st(i)
+            except ChaosError:
+                pass
+        return st.stats()
+
+    assert counts() == counts()
+    assert counts()["injected_slow"] > 0
+    assert counts()["injected_errors"] > 0
+
+
+def test_fault_stage_in_pipeline_skip_holes():
+    st = FaultInjectingStage(lambda x: x, seed=1, error_rate=0.2)
+    p = build(range(64), lambda b: b.pipe(st, concurrency=2, chunk=8))
+    with p.auto_stop():
+        out = list(p)
+    assert len(out) == 64 - st.injected_errors
+    assert out == sorted(out)  # holes only, order intact
+
+
+def test_fault_stage_rejects_bad_rates():
+    with pytest.raises(ValueError):
+        FaultInjectingStage(lambda x: x, slow_rate=1.5)
+
+
+def test_simulated_latency_jitter_is_seeded(monkeypatch):
+    from repro.data.shards import prefetch as pf
+
+    slept: list[float] = []
+    monkeypatch.setattr(pf.time, "sleep", lambda s: slept.append(s))
+
+    class Inner:
+        def fetch(self, name):
+            return b"x" * 64
+
+    def run(seed):
+        slept.clear()
+        src = pf.SimulatedLatencySource(
+            Inner(), latency_s=0.01, jitter_s=0.05, seed=seed
+        )
+        for i in range(8):
+            src.fetch(f"s{i}")
+        return list(slept)
+
+    a, b = run(3), run(3)
+    assert a == b  # same seed, identical jitter sequence
+    assert run(4) != a
+    with pytest.raises(ValueError):
+        pf.SimulatedLatencySource(Inner(), jitter_s=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# loader wiring
+# ---------------------------------------------------------------------------
+def test_loader_straggler_requires_chunk():
+    from repro.data import build_image_loader
+
+    class _DS:
+        def __len__(self):
+            return 0
+
+        def read_bytes(self, i):
+            raise IndexError(i)
+
+    with pytest.raises(ValueError, match="chunk > 1"):
+        build_image_loader(_DS(), chunk=1, straggler_after=0.5)
