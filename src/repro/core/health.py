@@ -162,6 +162,10 @@ class HealthMonitor:
         self._progress: dict[int, tuple[int, float]] = {}
         self._t_last_action: float | None = None
         self._states: dict[str, StageHealth] = {}
+        # True when the last STALLED verdict came from the whole-pipeline
+        # sentinel (no individual row stalled): duration reporting must then
+        # use the sentinel's quiet time, not any single row's.
+        self._sentinel_stall = False
 
     # -- state derivation ---------------------------------------------------
     def _quiet_for(self, i: int, count: int, now: float) -> float:
@@ -204,12 +208,14 @@ class HealthMonitor:
         # sentinel row keyed past the real ones
         total = sum(s.num_out + s.num_failed for s in snaps)
         quiet_all = self._quiet_for(-1, total, now)
+        self._sentinel_stall = False
         if not finished and not any_progress and worst is StageHealth.HEALTHY:
             # no stage shows pending work, so the source is the suspect
             src_name = snaps[0].name if snaps else "pipeline"
             if quiet_all >= self.stalled_after_s:
                 states[src_name] = StageHealth.STALLED
                 worst = StageHealth.STALLED
+                self._sentinel_stall = True
             elif quiet_all >= self.degraded_after_s:
                 states[src_name] = StageHealth.DEGRADED
                 worst = StageHealth.DEGRADED
@@ -253,15 +259,25 @@ class HealthMonitor:
         if state is StageHealth.STALLED:
             snaps = self.pipeline.stats()
             stage = self._suspect(snaps)
+            now = self._clock()
+            if self._sentinel_stall:
+                # whole-pipeline stall: no individual row is stalled, so the
+                # sentinel's own quiet time IS the stall duration (a source
+                # row that legitimately finished ages ago must not inflate it)
+                q = self._progress.get(-1)
+                quiets = [now - q[1]] if q else []
+            else:
+                # quiet time of the STALLED rows only — finished stages and
+                # the sentinel must not overstate how long we've been stuck
+                quiets = [
+                    now - self._progress[i][1]
+                    for i, s in enumerate(snaps)
+                    if i in self._progress
+                    and self._states.get(s.name) is StageHealth.STALLED
+                ]
             raise PipelineStalled(
                 stage,
-                max(
-                    (
-                        self._clock() - t
-                        for _, t in self._progress.values()
-                    ),
-                    default=self.stalled_after_s,
-                ),
+                max(quiets, default=self.stalled_after_s),
                 snapshot=snaps,
             )
         return state
@@ -271,7 +287,12 @@ class HealthMonitor:
         """Iterate the pipeline with stall detection: yields every item,
         polls health every ``tick`` seconds of sink silence, and raises
         ``PipelineStalled`` instead of blocking forever.  Degrade rungs
-        fire from the same cadence."""
+        fire from the same cadence.
+
+        Ticking is lossless: a timed-out ``get_item`` keeps its sink getter
+        pending inside the ``Pipeline`` and the next call resumes it, so a
+        tick shorter than the inter-batch latency never drops a batch or
+        the EOF."""
         while True:
             try:
                 item = self.pipeline.get_item(timeout=tick)

@@ -60,6 +60,9 @@ class Pipeline:
         self._root_task: asyncio.Task | None = None
         self._runtimes: list[StageRuntime] = []
         self._sink_q: MonitoredQueue | None = None
+        # A get_item(timeout=...) that times out leaves its _anext getter
+        # running on the loop; it is kept here so the next call resumes it.
+        self._pending_anext: concurrent.futures.Future | None = None
         self._started = False
         self._stopped = False
         self._loop_ready = threading.Event()
@@ -241,7 +244,11 @@ class Pipeline:
         """Fetch one item from the sink (blocking the consumer thread).
 
         Raises ``StopIteration`` on EOF, ``PipelineFailure`` on fail-fast
-        errors, ``concurrent.futures.TimeoutError`` on timeout.
+        errors, ``concurrent.futures.TimeoutError`` on timeout.  A timed-out
+        call does NOT abandon its sink getter: the getter keeps running on
+        the loop and the next ``get_item`` resumes waiting on it, so polling
+        with a timeout (e.g. ``HealthMonitor.guard``) never drops an item or
+        the EOF.
         """
         if not self._started:
             self.start()
@@ -256,8 +263,20 @@ class Pipeline:
             assert self._root_fut is not None
             self._root_fut.result()  # surfaces setup errors
             raise PipelineStopped("pipeline root exited before sink install")
-        fut = asyncio.run_coroutine_threadsafe(self._anext(), self._loop)
-        item = fut.result(timeout)
+        fut = self._pending_anext
+        if fut is None:
+            fut = asyncio.run_coroutine_threadsafe(self._anext(), self._loop)
+        try:
+            item = fut.result(timeout)
+        except BaseException:
+            # On a wait timeout the getter coroutine is still running and
+            # WILL consume the next sink item — keep the future so the next
+            # call collects that item instead of scheduling a second getter
+            # (which would leak one sink item per timed-out call).  A future
+            # that is already done raised from inside the pipeline: drop it.
+            self._pending_anext = fut if not fut.done() else None
+            raise
+        self._pending_anext = None
         if item is EOF:
             raise StopIteration
         return item

@@ -332,6 +332,7 @@ class PeerShardSource:
             start = next(self._rr) % n
             now = self._clock()
             eligible = []
+            admitted: set[int] = set()  # promoted to half-open, not yet probed
             for k in range(n):
                 i = (start + k) % n
                 state = self._state[i]
@@ -342,37 +343,54 @@ class PeerShardSource:
                     # the half-open probe; concurrent requests keep skipping
                     # until the probe settles the circuit one way or the other
                     self._state[i] = _HALF_OPEN
-                    self.probes += 1
+                    admitted.add(i)
                     eligible.append(i)
                 # _HALF_OPEN (someone else's probe in flight) or a still-
                 # cooling _OPEN peer: skip outright, no timeout paid
-        for i in eligible:
-            try:
-                data = op(self._sources[i])
-            except FileNotFoundError:
-                # structured miss: the transport is fine, the peer just
-                # doesn't hold it — a healthy answer for the breaker
+        try:
+            for i in eligible:
+                if i in admitted:
+                    # the probe is actually going out: from here its outcome
+                    # (settle or trip) owns the circuit transition
+                    admitted.discard(i)
+                    with self._lock:
+                        self.probes += 1
+                try:
+                    data = op(self._sources[i])
+                except FileNotFoundError:
+                    # structured miss: the transport is fine, the peer just
+                    # doesn't hold it — a healthy answer for the breaker
+                    self._settle(i)
+                    continue
+                except (
+                    SourceUnavailable,
+                    OSError,
+                    http.client.HTTPException,
+                    # ValueError: the peer answered with malformed data — a
+                    # short 206 or a 416 from a stale/torn copy under the same
+                    # name.  Peers are never authoritative, so that copy must
+                    # read as a breaker trip, not crash the read path.
+                    ValueError,
+                ):
+                    # dead/flaky/stale peer: open its circuit so its timeout
+                    # stops taxing every fetch; the origin tier covers it
+                    self._trip(i)
+                    continue
                 self._settle(i)
-                continue
-            except (
-                SourceUnavailable,
-                OSError,
-                http.client.HTTPException,
-                # ValueError: the peer answered with malformed data — a
-                # short 206 or a 416 from a stale/torn copy under the same
-                # name.  Peers are never authoritative, so that copy must
-                # read as a breaker trip, not crash the read path.
-                ValueError,
-            ):
-                # dead/flaky/stale peer: open its circuit so its timeout
-                # stops taxing every fetch; the origin tier covers it
-                self._trip(i)
-                continue
-            self._settle(i)
-            with self._lock:
-                self.hits += 1
-                self.bytes_fetched += len(data)
-            return data
+                with self._lock:
+                    self.hits += 1
+                    self.bytes_fetched += len(data)
+                return data
+        finally:
+            # An earlier peer served the request before an admitted probe was
+            # attempted: hand the half-open slot back to OPEN (down_until is
+            # already expired, so the NEXT request re-admits it) — otherwise
+            # the peer would sit in HALF_OPEN forever and never recover.
+            if admitted:
+                with self._lock:
+                    for i in admitted:
+                        if self._state[i] == _HALF_OPEN:
+                            self._state[i] = _OPEN
         with self._lock:
             self.misses += 1
         raise PeerMiss(f"no peer could serve {what}")
@@ -457,11 +475,21 @@ class TieredSource:
         if hedge_after_s is not None and hedge_after_s <= 0:
             raise ValueError("hedge_after_s must be > 0 seconds")
         self.hedge_after_s = hedge_after_s
-        self._hedge_ex = (
-            ThreadPoolExecutor(max_workers=8, thread_name_prefix="repro-hedge")
-            if hedge_after_s is not None
-            else None
-        )
+        if hedge_after_s is not None:
+            # Two pools, not one: on a shared pool the hedged origin fetch
+            # queues BEHIND the pending peer lookups whose slowness it is
+            # meant to bound, and peer-lookup queueing alone can exceed
+            # hedge_after_s (spurious hedges).  Threads are created lazily,
+            # so generous caps cost nothing at rest.
+            self._peer_ex = ThreadPoolExecutor(
+                max_workers=32, thread_name_prefix="repro-hedge-peer"
+            )
+            self._origin_ex = ThreadPoolExecutor(
+                max_workers=32, thread_name_prefix="repro-hedge-origin"
+            )
+        else:
+            self._peer_ex = None
+            self._origin_ex = None
         self._lock = threading.Lock()
         self._peers_disabled = False
         self.peer_hits = 0
@@ -522,28 +550,45 @@ class TieredSource:
     def _hedged(self, peer_op, origin_call, what: str) -> bytes:
         """Peer tier with a latency budget: give the peers ``hedge_after_s``
         to answer, then race an origin fetch against them.  First success
-        wins; the loser is cancelled (not yet started) or discarded."""
-        peer_fut = self._hedge_ex.submit(peer_op, self.peers)
+        wins; the loser is cancelled (not yet started) or discarded.  The
+        budget runs from when the peer lookup actually STARTS executing —
+        executor queueing is not peer slowness — but a lookup that cannot
+        even start within the budget hedges immediately (a backed-up peer
+        pool is as slow as a slow peer from the consumer's seat)."""
+        started = threading.Event()
+        t_start = [0.0]
+
+        def timed_peer(p):
+            t_start[0] = time.monotonic()
+            started.set()
+            return peer_op(p)
+
+        peer_fut = self._peer_ex.submit(timed_peer, self.peers)
+        slow = False
         try:
-            data = peer_fut.result(timeout=self.hedge_after_s)
+            if started.wait(self.hedge_after_s):
+                budget = t_start[0] + self.hedge_after_s - time.monotonic()
+                data = peer_fut.result(timeout=max(0.0, budget))
+            else:
+                slow = True  # never even started: hedge now
         except PeerMiss:
             with self._lock:
                 self.peer_misses += 1
             return self._origin_call(origin_call)
         except FuturesTimeout:
-            pass  # slow peer: hedge (below)
+            slow = True  # slow peer: hedge (below)
         except Exception:
             # the peer tier never raises anything else by contract; treat a
             # surprise as a miss — the origin is authoritative anyway
             with self._lock:
                 self.peer_misses += 1
             return self._origin_call(origin_call)
-        else:
+        if not slow:
             self._record_peer_win(data)
             return data
         with self._lock:
             self.hedges += 1
-        origin_fut = self._hedge_ex.submit(self._origin_call, origin_call)
+        origin_fut = self._origin_ex.submit(self._origin_call, origin_call)
         pending = {peer_fut, origin_fut}
         origin_exc: BaseException | None = None
         while pending:
@@ -580,7 +625,7 @@ class TieredSource:
 
     # -- RemoteShardSource protocol ----------------------------------------
     def fetch(self, name: str) -> bytes:
-        if self._hedge_ex is not None and not self.peers_disabled:
+        if self._peer_ex is not None and not self.peers_disabled:
             return self._hedged(
                 lambda p: p.fetch(name), lambda: self.origin.fetch(name), name
             )
@@ -590,7 +635,7 @@ class TieredSource:
         return self._origin_call(lambda: self.origin.fetch(name))
 
     def _fetch_range(self, name: str, start: int, length: int) -> bytes:
-        if self._hedge_ex is not None and not self.peers_disabled:
+        if self._peer_ex is not None and not self.peers_disabled:
             return self._hedged(
                 lambda p: p.fetch_range(name, start, length),
                 lambda: self.origin.fetch_range(name, start, length),
@@ -630,8 +675,9 @@ class TieredSource:
         return out
 
     def close(self) -> None:
-        if self._hedge_ex is not None:
-            self._hedge_ex.shutdown(wait=False, cancel_futures=True)
+        for ex in (self._peer_ex, self._origin_ex):
+            if ex is not None:
+                ex.shutdown(wait=False, cancel_futures=True)
         self.peers.close()
         origin_close = getattr(self.origin, "close", None)
         if callable(origin_close):

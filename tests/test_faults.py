@@ -285,6 +285,39 @@ def test_breaker_failed_probe_reopens():
     assert fake.calls == 2
 
 
+def test_breaker_half_open_reverts_when_probe_not_attempted():
+    """An expired-cooldown peer admitted as the half-open probe but never
+    actually contacted (an earlier peer in the rotation served the request
+    first) must go back to OPEN — not sit in HALF_OPEN forever with every
+    future request skipping it."""
+    from repro.data.shards.peer import _CLOSED, _OPEN, PeerShardSource
+
+    clock = [0.0]
+    src = PeerShardSource(
+        ["http://unused:1", "http://unused:2"],
+        cooldown_s=10.0,
+        clock=lambda: clock[0],
+    )
+    good, flaky = _FakePeer(), _FakePeer()
+    src._sources = [good, flaky]
+    src._state[1] = _OPEN
+    src._down_until[1] = 5.0
+    clock[0] = 11.0  # cooldown expired: peer 1 is due for a probe
+    # rotation starts at peer 0: good serves before the probe is attempted
+    assert src.fetch("a") == b"payload-a"
+    assert flaky.calls == 0
+    assert src._state[1] == _OPEN  # handed back, NOT stuck in HALF_OPEN
+    assert src.stats()["probes"] == 0  # an unattempted probe is not a probe
+    # the next request (rotation starts at peer 1) actually probes it
+    assert src.fetch("b") == b"payload-b"
+    assert flaky.calls == 1
+    assert src._state[1] == _CLOSED
+    st = src.stats()
+    assert st["probes"] == 1
+    assert st["recoveries"] == 1
+    assert st["peers_down"] == 0
+
+
 def test_breaker_miss_is_a_healthy_answer():
     from repro.data.shards.peer import PeerMiss
 
@@ -375,6 +408,34 @@ def test_hedge_both_failed_raises_origin_error():
     t.close()
 
 
+def test_hedge_concurrency_does_not_fake_peer_slowness():
+    """Many concurrent hedged fetches: executor queueing must not read as
+    peer slowness.  (The old shared 8-thread pool queued later peer lookups
+    past hedge_after_s — spurious hedges — and queued the hedged origin
+    fetch behind the very peer ops it was meant to race.)"""
+    from repro.data.shards.peer import TieredSource
+
+    origin = _FakeTier(b"from-origin")
+    t = TieredSource(
+        origin,
+        _peer_tier(_FakeTier(b"from-peer", delay_s=0.15)),
+        hedge_after_s=0.45,
+    )
+    results = [None] * 40
+    threads = [
+        threading.Thread(target=lambda i=i: results.__setitem__(i, t.fetch(f"x{i}")))
+        for i in range(40)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=10)
+    assert results == [b"from-peer"] * 40
+    assert t.stats()["hedges"] == 0
+    assert origin.calls == 0
+    t.close()
+
+
 def test_disable_peers_goes_origin_only():
     from repro.data.shards.peer import TieredSource
 
@@ -451,6 +512,29 @@ def test_health_progress_resets_to_healthy():
     assert mon.stage_states()["work"] is StageHealth.HEALTHY
 
 
+def test_stalled_for_reports_suspect_quiet_time_not_oldest_row():
+    """stalled_for_s must be the STALLED stage's quiet time — a stage that
+    legitimately finished its run ages ago must not inflate the number."""
+    clock = [0.0]
+    stub = _StubPipeline()
+    mon = HealthMonitor(
+        stub, degraded_after_s=5.0, stalled_after_s=30.0, clock=lambda: clock[0]
+    )
+    # the source finished its whole run at t=0 and is quiet forever after
+    stub.rows[0].num_in = stub.rows[0].num_out = 10
+    stub.rows[1].num_in = 10
+    mon.observe()  # baseline
+    for t, done in ((100.0, 4), (200.0, 8)):
+        clock[0] = t
+        stub.rows[1].num_out = done
+        assert mon.observe() is StageHealth.HEALTHY
+    clock[0] = 235.0  # "work" quiet for 35s; "source" quiet for 235s
+    with pytest.raises(PipelineStalled) as ei:
+        mon.check()
+    assert ei.value.stage == "work"
+    assert ei.value.stalled_for_s == pytest.approx(35.0)
+
+
 def test_health_quiet_pipeline_blames_source():
     """No stage shows pending work but nothing moves either: the SOURCE is
     the suspect (a stuck source never enqueues anything downstream)."""
@@ -499,6 +583,24 @@ def test_guard_raises_instead_of_hanging():
         assert ei.value.stage == "work"
         release.set()
     assert got == list(range(4))
+
+
+def test_guard_tick_shorter_than_interbatch_latency_drops_nothing():
+    """Every health tick used to schedule a fresh sink getter and abandon
+    the timed-out one mid-consume — so whenever inter-batch latency
+    exceeded the tick (the exact degraded case guard exists for), batches
+    and the EOF were silently eaten by orphaned getters.  A timed-out
+    get_item must resume the SAME getter on the next call."""
+
+    def fn(x):
+        time.sleep(0.08)  # every item arrives slower than the tick
+        return x
+
+    p = build(range(12), lambda b: b.pipe(fn, name="work", concurrency=1), sink=1)
+    mon = HealthMonitor(p, degraded_after_s=5.0, stalled_after_s=10.0)
+    with p.auto_stop():
+        got = list(mon.guard(tick=0.01))
+    assert got == list(range(12))  # nothing leaked, EOF arrived
 
 
 def test_degrade_action_is_idempotent_and_swallows_errors():
