@@ -7,9 +7,30 @@ HTTP backend**: the same shards served over a loopback ``http.server``
 with Range support, consumed via ``ShardDataset("http://...")`` (which
 builds HTTP range reads → retry/backoff → prefetcher cache automatically).
 
+Flight-recorder walkthrough (the observability layer, ``core/trace.py``):
+the remote-shards run below executes under ``tracing()`` with the tracer
+passed to ``build_image_loader(trace=...)``, so every layer records spans —
+per-chunk stage phases, queue waits, shard fetches and cache hits/misses,
+the host→device transfer — one track per worker thread.  The capture is
+exported as Chrome Trace JSON (load it at https://ui.perfetto.dev or
+``chrome://tracing``) to ``$REPRO_TRACE_PATH`` (default
+``imagenet_trace.json`` next to this file).  The recipe is three lines:
+
+    with tracing() as tracer:
+        pipe = build_image_loader(ds, ..., trace=tracer)
+        ...consume...
+    tracer.export("trace.json")
+
+``tracing()`` also installs the tracer process-wide so subsystems built
+outside the loader (prefetcher, peer tier, chaos) land on the same
+timeline; for scrape-style monitoring instead of post-hoc traces, see
+``core.metrics`` (``StatsHistory`` + ``MetricsExporter``'s ``/metrics``).
+
 Run: PYTHONPATH=src python examples/imagenet_pipeline.py
 """
 
+import os
+import pathlib
 import tempfile
 import time
 
@@ -25,6 +46,7 @@ from repro.data import (
     build_image_loader,
     pack,
 )
+from repro.core import tracing
 from repro.data.baselines import MPLoader
 from repro.kernels.ops import dequant_normalize
 
@@ -113,7 +135,11 @@ def main() -> None:
 
         # same shards behind a simulated-latency remote + local cache: the
         # prefetcher overlaps shard fetch with decode, the dashboard shows
-        # the cache doing its job
+        # the cache doing its job.  This run doubles as the flight-recorder
+        # walkthrough: tracing() installs the tracer process-wide (the
+        # prefetcher resolves it at call time), trace= hands it to the
+        # engine/queues/transfer, and the capture lands in a Perfetto-
+        # loadable JSON with one track per worker thread.
         prefetcher = ShardPrefetcher(
             SimulatedLatencySource(
                 LocalShardSource(d + "/shards"), latency_s=0.01
@@ -122,20 +148,32 @@ def main() -> None:
             max_bytes=1 << 30,
         )
         remote_ds = ShardDataset(d + "/shards", prefetcher=prefetcher)
-        pipe = build_image_loader(
-            remote_ds, batch_size=16, hw=(112, 112), decode_concurrency=4,
-            sampler=CheckpointableSampler(
-                len(remote_ds),
-                batch_size=1,
-                seed=0,
-                shard_sizes=remote_ds.shard_sizes,
-                shard_window=48,
-            ),
-        )
-        n_img, dt = consume(pipe)
+        with tracing() as tracer:
+            pipe = build_image_loader(
+                remote_ds, batch_size=16, hw=(112, 112), decode_concurrency=4,
+                sampler=CheckpointableSampler(
+                    len(remote_ds),
+                    batch_size=1,
+                    seed=0,
+                    shard_sizes=remote_ds.shard_sizes,
+                    shard_window=48,
+                ),
+                trace=tracer,
+            )
+            n_img, dt = consume(pipe)
         print(f"\nSPDL (remote shards + cache): {n_img / dt:.0f} img/s")
         print(pipe.format_stats())
         remote_ds.close()
+
+        trace_path = os.environ.get(
+            "REPRO_TRACE_PATH",
+            str(pathlib.Path(__file__).resolve().parent / "imagenet_trace.json"),
+        )
+        tracer.export(trace_path)
+        cats = {e.get("cat") for e in tracer.events()} - {None}
+        print(f"flight recorder: {len(tracer)} spans across "
+              f"{sorted(cats)} -> {trace_path} "
+              "(open at https://ui.perfetto.dev)")
 
         # the same shards over a REAL http server (loopback, Range-capable):
         # a bare URL root builds HttpShardSource → RetryingSource →

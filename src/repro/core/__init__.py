@@ -17,8 +17,10 @@ from .health import (
     origin_only,
     widen_sparse_threshold,
 )
+from .metrics import MetricsExporter, MetricsServer, StatsHistory, WindowRates
 from .pipeline import Pipeline
 from .stats import ResourceSampler, StageStatsSnapshot, format_stats
+from .trace import NULL_TRACER, Tracer, get_tracer, set_tracer, tracing
 
 __all__ = [
     "PipelineBuilder",
@@ -41,4 +43,13 @@ __all__ = [
     "ResourceSampler",
     "StageStatsSnapshot",
     "format_stats",
+    "Tracer",
+    "NULL_TRACER",
+    "get_tracer",
+    "set_tracer",
+    "tracing",
+    "StatsHistory",
+    "WindowRates",
+    "MetricsExporter",
+    "MetricsServer",
 ]

@@ -258,6 +258,7 @@ class PipelineBuilder:
         num_threads: int = 8,
         auto_fuse: bool = False,
         straggler_workers: int = 8,
+        trace=None,
     ) -> Pipeline:
         """Finalize the pipeline.  The fusion pass runs here: explicit
         ``fuse()`` groups are collapsed (invalid groups raise), and with
@@ -265,7 +266,11 @@ class PipelineBuilder:
         order-preserving pipe stages are collapsed too (ineligible pairs
         are silently left alone).  ``straggler_workers`` sizes the
         pipeline's shared straggler pool (only created when some stage set
-        ``straggler_after``)."""
+        ``straggler_after``).  ``trace`` is an optional
+        ``core.trace.Tracer``: stage/phase spans and queue-wait spans of
+        this pipeline are recorded into it (see the engine docstring's
+        "Observability" section; install it process-wide with
+        ``trace.set_tracer`` to also capture shard/transfer spans)."""
         self._require_source()
         if len(self._specs) < 2:
             raise ValueError("pipeline needs at least a source and one stage")
@@ -275,6 +280,7 @@ class PipelineBuilder:
             num_threads=num_threads,
             sink_buffer_size=self._sink_buffer_size or 3,
             straggler_workers=straggler_workers,
+            tracer=trace,
         )
 
     # -- fusion pass ----------------------------------------------------

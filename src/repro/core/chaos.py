@@ -22,6 +22,8 @@ import threading
 import time
 from typing import Any, Callable
 
+from . import trace as _trace
+
 
 class ChaosError(RuntimeError):
     """The injected per-item failure (distinguishable from real bugs)."""
@@ -83,17 +85,30 @@ class FaultInjectingStage:
         # one private stream per call ordinal: the draw is independent of
         # thread scheduling, so fault COUNTS are reproducible run-to-run
         r = random.Random((self.seed << 20) ^ next(self._calls)).random()
+        tracer = _trace.get_tracer()
         if r < self.hang_rate:
             with self._lock:
                 self.injected_hangs += 1
+            if tracer.enabled:
+                tracer.instant(
+                    "chaos:hang", "chaos",
+                    {"stage": self.__name__, "hang_s": self.hang_s},
+                )
             time.sleep(self.hang_s)
         elif r < self.hang_rate + self.error_rate:
             with self._lock:
                 self.injected_errors += 1
+            if tracer.enabled:
+                tracer.instant("chaos:error", "chaos", {"stage": self.__name__})
             raise ChaosError(f"injected failure (seed={self.seed})")
         elif r < self.hang_rate + self.error_rate + self.slow_rate:
             with self._lock:
                 self.injected_slow += 1
+            if tracer.enabled:
+                tracer.instant(
+                    "chaos:slow", "chaos",
+                    {"stage": self.__name__, "slow_s": self.slow_s},
+                )
             time.sleep(self.slow_s)
         return self.fn(item)
 

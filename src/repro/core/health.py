@@ -12,7 +12,13 @@ HEALTHY / DEGRADED / STALLED state per stage from successive
 ``Pipeline.stats()`` snapshots (progress = ``num_out + num_failed`` delta —
 a stage skipping bad items is making progress), sheds optional work while
 degraded, and raises a structured ``PipelineStalled`` naming the suspect
-stage instead of letting the consumer hang.
+stage instead of letting the consumer hang.  The snapshots ride a
+``core.metrics.StatsHistory`` (one ring shared with dashboards and the
+``/metrics`` exporter): every ``observe()`` appends a sample, so guarding
+a pipeline gives you its windowed rates for free via
+``monitor.history.window(...)``; state *transitions* are also recorded as
+tracer instants (category ``health``) when a process-wide tracer is
+installed.
 
 It is deliberately *not* a background thread: ``observe()`` is cheap (one
 stats snapshot) and is driven by the consumer's own cadence — either
@@ -54,7 +60,9 @@ import time
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Iterator
 
+from . import trace as _trace
 from .errors import PipelineStalled
+from .metrics import StatsHistory
 
 logger = logging.getLogger("repro.core")
 
@@ -145,6 +153,7 @@ class HealthMonitor:
         actions: list[DegradeAction] | tuple = (),
         escalate_every_s: float | None = None,
         clock: Callable[[], float] = time.monotonic,
+        history: StatsHistory | None = None,
     ):
         if degraded_after_s <= 0 or stalled_after_s <= 0:
             raise ValueError("health thresholds must be > 0 seconds")
@@ -158,8 +167,13 @@ class HealthMonitor:
             escalate_every_s if escalate_every_s is not None else degraded_after_s
         )
         self._clock = clock
-        # per-row: last observed progress count and when it last changed
-        self._progress: dict[int, tuple[int, float]] = {}
+        # the time series this monitor reads (and feeds): progress-change
+        # ledger + windowed rates live here, shared with dashboards/exporters
+        self.history = (
+            history
+            if history is not None
+            else StatsHistory(pipeline, clock=clock)
+        )
         self._t_last_action: float | None = None
         self._states: dict[str, StageHealth] = {}
         # True when the last STALLED verdict came from the whole-pipeline
@@ -168,24 +182,17 @@ class HealthMonitor:
         self._sentinel_stall = False
 
     # -- state derivation ---------------------------------------------------
-    def _quiet_for(self, i: int, count: int, now: float) -> float:
-        prev = self._progress.get(i)
-        if prev is None or prev[0] != count:
-            self._progress[i] = (count, now)
-            return 0.0
-        return now - prev[1]
-
     def observe(self) -> StageHealth:
-        """Snapshot stats, update per-stage states, fire degrade rungs.
-        Returns the overall health (worst across stages)."""
+        """Append a sample to the history, update per-stage states, fire
+        degrade rungs.  Returns the overall health (worst across stages)."""
         now = self._clock()
-        snaps = self.pipeline.stats()
+        snaps = self.history.sample(now=now)
         states: dict[str, StageHealth] = {}
         worst = StageHealth.HEALTHY
         finished = bool(getattr(self.pipeline, "finished", False))
         any_progress = False
         for i, s in enumerate(snaps):
-            quiet = self._quiet_for(i, s.num_out + s.num_failed, now)
+            quiet = self.history.quiet_for(i, now=now)
             if quiet == 0.0:
                 any_progress = True
             # a quiet stage is only suspect while it HOLDS work: items in
@@ -206,8 +213,7 @@ class HealthMonitor:
         # stall from the consumer's seat (e.g. the SOURCE is stuck, so no
         # stage ever shows pending work) — track whole-pipeline quiet via a
         # sentinel row keyed past the real ones
-        total = sum(s.num_out + s.num_failed for s in snaps)
-        quiet_all = self._quiet_for(-1, total, now)
+        quiet_all = self.history.quiet_for(-1, now=now)
         self._sentinel_stall = False
         if not finished and not any_progress and worst is StageHealth.HEALTHY:
             # no stage shows pending work, so the source is the suspect
@@ -219,6 +225,13 @@ class HealthMonitor:
             elif quiet_all >= self.degraded_after_s:
                 states[src_name] = StageHealth.DEGRADED
                 worst = StageHealth.DEGRADED
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            for name, state in states.items():
+                if self._states.get(name, StageHealth.HEALTHY) is not state:
+                    tracer.instant(
+                        f"health:{name}", "health", {"state": state.value}
+                    )
         self._states = states
         if worst != StageHealth.HEALTHY:
             self._maybe_escalate(now)
@@ -264,16 +277,14 @@ class HealthMonitor:
                 # whole-pipeline stall: no individual row is stalled, so the
                 # sentinel's own quiet time IS the stall duration (a source
                 # row that legitimately finished ages ago must not inflate it)
-                q = self._progress.get(-1)
-                quiets = [now - q[1]] if q else []
+                quiets = [self.history.quiet_for(-1, now=now)]
             else:
                 # quiet time of the STALLED rows only — finished stages and
                 # the sentinel must not overstate how long we've been stuck
                 quiets = [
-                    now - self._progress[i][1]
+                    self.history.quiet_for(i, now=now)
                     for i, s in enumerate(snaps)
-                    if i in self._progress
-                    and self._states.get(s.name) is StageHealth.STALLED
+                    if self._states.get(s.name) is StageHealth.STALLED
                 ]
             raise PipelineStalled(
                 stage,

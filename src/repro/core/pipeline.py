@@ -22,6 +22,7 @@ from .engine import StageRuntime, StageSpec, StragglerPool
 from .errors import PipelineFailure, PipelineStopped
 from .queues import EOF, MonitoredQueue
 from .stats import StageStatsSnapshot, format_stats
+from .trace import NULL_TRACER
 
 logger = logging.getLogger("repro.core")
 
@@ -46,12 +47,16 @@ class Pipeline:
         num_threads: int,
         sink_buffer_size: int,
         straggler_workers: int = 8,
+        tracer=None,
     ):
         self._specs = specs
         self._num_threads = num_threads
         self._sink_buffer_size = sink_buffer_size
         self._straggler_workers = straggler_workers
         self._straggler_pool: StragglerPool | None = None
+        # engine + queue spans go to this tracer (NULL_TRACER = off: one
+        # attribute check per site); wire via ``build(trace=...)``
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
@@ -131,12 +136,15 @@ class Pipeline:
                 # bound to the consumer's chunk so amortization actually
                 # happens (items are small: indices, refs, views)
                 size = max(size, self._specs[i + 1].input_chunk)
-            out_q = MonitoredQueue(max(1, size), name=f"q:{spec.name}")
+            out_q = MonitoredQueue(
+                max(1, size), name=f"q:{spec.name}", tracer=self.tracer
+            )
             queues.append(out_q)
             runtimes.append(
                 StageRuntime(
                     spec, in_q, out_q, self._executor,
                     straggler_pool=self._straggler_pool,
+                    tracer=self.tracer,
                 )
             )
             in_q = out_q

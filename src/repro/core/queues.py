@@ -15,6 +15,7 @@ import time
 from typing import Any
 
 from .stats import StageStats
+from .trace import NULL_TRACER
 
 
 class _Sentinel:
@@ -37,21 +38,30 @@ class MonitoredQueue:
 
     ``put`` blocking is charged to the *producer* stage (backpressure);
     ``get`` blocking is charged to the *consumer* stage (starvation).
+
+    Blocking waits are also recorded as tracer spans (category ``queue``,
+    track = the scheduler thread) — only the blocking branch pays; the
+    non-blocking fast path stays untouched and the clock readings are the
+    ones the wait counters already took.
     """
 
-    def __init__(self, maxsize: int, name: str = "q"):
+    def __init__(self, maxsize: int, name: str = "q", tracer=None):
         self._q: asyncio.Queue[Any] = asyncio.Queue(maxsize)
         self.name = name
         self.producer_stats: StageStats | None = None
         self.consumer_stats: StageStats | None = None
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # ------------------------------------------------------------------
     async def put(self, item: Any) -> None:
         if self._q.full():
             t0 = time.monotonic()
             await self._q.put(item)
+            dt = time.monotonic() - t0
             if self.producer_stats is not None:
-                self.producer_stats.put_wait += time.monotonic() - t0
+                self.producer_stats.put_wait += dt
+            if self.tracer.enabled:
+                self.tracer.complete(f"put_wait {self.name}", "queue", t0, dt)
         else:
             self._q.put_nowait(item)
 
@@ -59,8 +69,11 @@ class MonitoredQueue:
         if self._q.empty():
             t0 = time.monotonic()
             item = await self._q.get()
+            dt = time.monotonic() - t0
             if self.consumer_stats is not None:
-                self.consumer_stats.get_wait += time.monotonic() - t0
+                self.consumer_stats.get_wait += dt
+            if self.tracer.enabled:
+                self.tracer.complete(f"get_wait {self.name}", "queue", t0, dt)
         else:
             item = self._q.get_nowait()
         if self.consumer_stats is not None and item is not EOF:
@@ -82,8 +95,11 @@ class MonitoredQueue:
         if self._q.empty():
             t0 = time.monotonic()
             item = await self._q.get()
+            dt = time.monotonic() - t0
             if self.consumer_stats is not None:
-                self.consumer_stats.get_wait += time.monotonic() - t0
+                self.consumer_stats.get_wait += dt
+            if self.tracer.enabled:
+                self.tracer.complete(f"get_wait {self.name}", "queue", t0, dt)
         else:
             item = self._q.get_nowait()
         out = [item]
@@ -107,8 +123,11 @@ class MonitoredQueue:
             if self._q.full():
                 t0 = time.monotonic()
                 await self._q.put(item)
+                dt = time.monotonic() - t0
                 if self.producer_stats is not None:
-                    self.producer_stats.put_wait += time.monotonic() - t0
+                    self.producer_stats.put_wait += dt
+                if self.tracer.enabled:
+                    self.tracer.complete(f"put_wait {self.name}", "queue", t0, dt)
             else:
                 self._q.put_nowait(item)
 

@@ -10,8 +10,14 @@ renders the dashboard used to find the bottleneck stage.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
+
+#: Cap on distinct exception types tracked per stage; further types fold
+#: into the ``"_other"`` bucket so a pathological error stream cannot grow
+#: the counter without bound.
+MAX_ERROR_TYPES = 16
 
 
 @dataclasses.dataclass
@@ -37,6 +43,9 @@ class StageStats:
     put_wait: float = 0.0  # seconds blocked waiting for output space (backpressured)
     first_out_t: float | None = None  # monotonic time of first emitted item
     last_error: str | None = None
+    # bounded per-exception-type failure counts (``last_error`` keeps only
+    # the most recent repr; this keeps the distribution)
+    errors_by_type: dict[str, int] = dataclasses.field(default_factory=dict)
     arena: object | None = None  # SlabArena of an aggregate_into stage, if any
     cache: object | None = None  # shard cache/prefetcher probed by this stage
     _t_start: float = dataclasses.field(default_factory=time.monotonic)
@@ -61,6 +70,10 @@ class StageStats:
     def record_failure(self, err: BaseException) -> None:
         self.num_failed += 1
         self.last_error = repr(err)
+        etype = type(err).__name__
+        if etype not in self.errors_by_type and len(self.errors_by_type) >= MAX_ERROR_TYPES:
+            etype = "_other"
+        self.errors_by_type[etype] = self.errors_by_type.get(etype, 0) + 1
 
     # -- derived -----------------------------------------------------------
     @property
@@ -85,6 +98,9 @@ class StageStats:
 
     def snapshot(self) -> "StageStatsSnapshot":
         cache = self.cache.stats() if self.cache is not None else {}
+        ttfi = (
+            self.first_out_t - self._t_start if self.first_out_t is not None else None
+        )
         return StageStatsSnapshot(
             name=self.name,
             concurrency=self.concurrency,
@@ -102,6 +118,10 @@ class StageStats:
             get_wait=self.get_wait,
             put_wait=self.put_wait,
             last_error=self.last_error,
+            task_time=self.task_time,
+            elapsed=self.elapsed,
+            time_to_first_s=ttfi,
+            errors_by_type=tuple(sorted(self.errors_by_type.items())),
             bytes_allocated=getattr(self.arena, "bytes_allocated", 0),
             slabs_in_flight=(
                 self.arena.slabs_in_flight if self.arena is not None else 0
@@ -135,6 +155,16 @@ class StageStatsSnapshot:
     get_wait: float
     put_wait: float
     last_error: str | None
+    # cumulative task seconds + stage uptime: the pair windowed-rate math
+    # (``core.metrics.StatsHistory``) needs that the derived qps/occupancy
+    # averages destroy
+    task_time: float = 0.0
+    elapsed: float = 0.0
+    # seconds from stage start to its first emitted item (the paper's
+    # first-batch-latency signal); None until something came out
+    time_to_first_s: float | None = None
+    # bounded per-exception-type failure counts, as sorted (type, n) pairs
+    errors_by_type: tuple[tuple[str, int], ...] = ()
     # chunked execution: items per executor dispatch (1 = per-item path),
     # and whether chunk= is even applicable (sync pipe stage)
     chunk: int = 1
@@ -168,26 +198,49 @@ class StageStatsSnapshot:
     origin_bytes: int = 0
 
 
-def format_stats(snaps: list[StageStatsSnapshot]) -> str:
+def format_stats(snaps: list[StageStatsSnapshot], window=None) -> str:
     """Render the visibility dashboard.
 
     A stage with high ``put_wait`` is backpressured (downstream is the
     bottleneck); a stage with high ``get_wait`` is starved (upstream is the
     bottleneck); the bottleneck stage itself shows high occupancy and low
-    waits.
+    waits.  ``ttfi_ms`` is time-to-first-item — the paper's first-batch
+    latency signal, per stage.
+
+    ``window`` (a ``StatsHistory.window()`` result: ``{stage: WindowRates}``)
+    adds *current* rate columns next to the lifetime averages — ``qps_w`` /
+    ``occ_w%`` are the trailing-window values, which is what "is it slow
+    NOW" questions need (the lifetime ``qps`` column averages over the
+    whole run).
     """
+    windowed = window or {}
     hdr = (
         f"{'stage':<24}{'conc':>5}{'in':>9}{'out':>9}{'fail':>6}"
         f"{'qps':>10}{'task_ms':>9}{'occ%':>6}{'get_w':>8}{'put_w':>8}"
+        f"{'ttfi_ms':>9}"
     )
+    if windowed:
+        hdr += f"{'qps_w':>10}{'occ_w%':>7}"
     lines = [hdr, "-" * len(hdr)]
     for s in snaps:
-        lines.append(
+        ttfi = f"{s.time_to_first_s * 1e3:>9.1f}" if s.time_to_first_s is not None else f"{'-':>9}"
+        line = (
             f"{s.name:<24}{s.concurrency:>5}{s.num_in:>9}{s.num_out:>9}"
             f"{s.num_failed:>6}{s.qps:>10.1f}{s.avg_task_time * 1e3:>9.2f}"
             f"{s.occupancy * 100:>6.1f}{s.get_wait:>8.2f}{s.put_wait:>8.2f}"
+            f"{ttfi}"
         )
+        if windowed:
+            w = windowed.get(s.name)
+            if w is not None:
+                line += f"{w.qps:>10.1f}{w.occupancy * 100:>7.1f}"
+            else:
+                line += f"{'-':>10}{'-':>7}"
+        lines.append(line)
     for s in snaps:
+        if s.errors_by_type:
+            kinds = " ".join(f"{t}={n}" for t, n in s.errors_by_type)
+            lines.append(f"[{s.name}] errors: {kinds} last={s.last_error}")
         if s.stragglers or s.straggler_shed:
             avg = s.straggler_time / s.stragglers * 1e3 if s.stragglers else 0.0
             lines.append(
@@ -238,11 +291,27 @@ class ResourceSampler:
     def _read() -> tuple[float, int]:
         with open("/proc/self/stat") as f:
             parts = f.read().split()
-        tick = 100.0  # USER_HZ; universal on linux
+        try:
+            tick = float(os.sysconf("SC_CLK_TCK")) or 100.0
+        except (ValueError, OSError, AttributeError):
+            tick = 100.0  # USER_HZ default when sysconf can't say
         cpu_s = (int(parts[13]) + int(parts[14])) / tick  # utime + stime
         with open("/proc/self/statm") as f:
             rss_pages = int(f.read().split()[1])
-        return cpu_s, rss_pages * 4096
+        try:
+            page = os.sysconf("SC_PAGE_SIZE") or 4096
+        except (ValueError, OSError, AttributeError):
+            page = 4096
+        return cpu_s, rss_pages * page
+
+    def current(self) -> tuple[float, int]:
+        """Latest ``(cpu_seconds, rss_bytes)`` — the newest background
+        sample, or a fresh /proc read when the sampler is not running
+        (this is what the ``/metrics`` exporter scrapes)."""
+        if self.samples:
+            _t, cpu, rss = self.samples[-1]
+            return cpu, rss
+        return self._read()
 
     def _run(self) -> None:
         while not self._stop.wait(self.interval):

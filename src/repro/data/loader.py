@@ -274,6 +274,7 @@ def build_image_loader(
     chunk: int = 16,  # items per executor dispatch; 1 = per-item path
     fuse_stages: bool = True,  # collapse read+decode into one worker call
     straggler_after: float | None = None,  # soft deadline on read/decode
+    trace=None,  # core.trace.Tracer: flight-recorder spans for every layer
 ) -> Pipeline:
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
@@ -295,7 +296,8 @@ def build_image_loader(
             yield from batch
 
     transfer = DeviceTransfer(
-        shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer
+        shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer,
+        tracer=trace,
     )
     index_stream, cache_probe = _maybe_prefetch(indices(), dataset)
 
@@ -354,7 +356,7 @@ def build_image_loader(
             .pipe(make_batch, name="collate")
             .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
             .add_sink(buffer_size=sink_buffer)
-            .build(num_threads=num_threads)
+            .build(num_threads=num_threads, trace=trace)
         )
 
     # Zero-copy slab path (see module docstring "Memory model").
@@ -417,7 +419,7 @@ def build_image_loader(
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
         .add_sink(buffer_size=sink_buffer)
-        .build(num_threads=num_threads)
+        .build(num_threads=num_threads, trace=trace)
     )
     pipe.add_stop_callback(arena.close)
     pipe.add_stop_callback(transfer.flush)
@@ -440,6 +442,7 @@ def build_lm_loader(
     arena_slabs: int | None = None,  # None = sized from the consumer window
     chunk: int = 16,  # items per executor dispatch; 1 = per-item path
     straggler_after: float | None = None,  # soft deadline on the read stage
+    trace=None,  # core.trace.Tracer: flight-recorder spans for every layer
 ) -> tuple[Pipeline, CheckpointableSampler]:
     """Returns (pipeline, sampler) — the sampler is checkpointed alongside
     model state (fault tolerance; see runtime/trainer.py).
@@ -473,7 +476,9 @@ def build_lm_loader(
     def read(i: int) -> bytes:
         return dataset.read_bytes(i)
 
-    transfer = DeviceTransfer(shardings, consumer_window=sink_buffer)
+    transfer = DeviceTransfer(
+        shardings, consumer_window=sink_buffer, tracer=trace
+    )
     doc_stream, cache_probe = _maybe_prefetch(doc_ids(), dataset)
 
     if not zero_copy:
@@ -493,7 +498,7 @@ def build_lm_loader(
             .pipe(collate, concurrency=decode_concurrency, name="collate")
             .pipe(transfer, concurrency=1, name="transfer")
             .add_sink(buffer_size=sink_buffer)
-            .build(num_threads=num_threads)
+            .build(num_threads=num_threads, trace=trace)
         )
         return pipe, sampler
 
@@ -520,7 +525,7 @@ def build_lm_loader(
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
         .pipe(transfer, concurrency=1, name="transfer")
         .add_sink(buffer_size=sink_buffer)
-        .build(num_threads=num_threads)
+        .build(num_threads=num_threads, trace=trace)
     )
     pipe.add_stop_callback(arena.close)
     pipe.add_stop_callback(transfer.flush)

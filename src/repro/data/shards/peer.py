@@ -69,6 +69,8 @@ from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from concurrent.futures import wait as futures_wait
 
+from ...core import trace as _trace
+from ...core.metrics import CONTENT_TYPE_LATEST as _METRICS_CONTENT_TYPE
 from .dataset import validate_shard_name
 from .format import ShardReader
 from .sources import HttpShardSource, RangeNotSupported, SourceUnavailable
@@ -118,6 +120,12 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
 
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
         srv = self.server
+        if self.path.split("?", 1)[0] == "/metrics" and srv.metrics is not None:
+            # mounted observability endpoint: Prometheus text exposition
+            # (checked before shard resolution; "/metrics" is reserved)
+            body = srv.metrics.render().encode()
+            self._send(200, body, {"Content-Type": _METRICS_CONTENT_TYPE})
+            return
         with srv.lock:
             srv.requests += 1
         name = urllib.parse.unquote(self.path.lstrip("/"))
@@ -202,8 +210,18 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
 
     daemon_threads = True
 
-    def __init__(self, prefetcher, *, host: str = "127.0.0.1", port: int = 0):
+    def __init__(
+        self,
+        prefetcher,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        metrics=None,
+    ):
         self.prefetcher = prefetcher
+        # optional core.metrics.MetricsExporter: mounts GET /metrics on this
+        # server (one port serves shards to peers AND telemetry to scrapers)
+        self.metrics = metrics
         self.lock = threading.Lock()
         self.requests = 0
         self.misses = 0
@@ -315,9 +333,18 @@ class PeerShardSource:
         """Peer ``i`` answered at the transport level: close its circuit
         (a successful probe is a recovery; a closed peer is a no-op)."""
         with self._lock:
-            if self._state[i] == _HALF_OPEN:
+            recovered = self._state[i] == _HALF_OPEN
+            changed = self._state[i] != _CLOSED
+            if recovered:
                 self.recoveries += 1
             self._state[i] = _CLOSED
+        if changed:
+            tracer = _trace.get_tracer()
+            if tracer.enabled:
+                tracer.instant(
+                    "breaker:close", "peer",
+                    {"peer": self.peer_urls[i], "recovered": recovered},
+                )
 
     def _trip(self, i: int) -> None:
         """Peer ``i`` failed at the transport level: open its circuit."""
@@ -325,6 +352,12 @@ class PeerShardSource:
             self.errors += 1
             self._state[i] = _OPEN
             self._down_until[i] = self._clock() + self.cooldown_s
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            tracer.instant(
+                "breaker:open", "peer",
+                {"peer": self.peer_urls[i], "cooldown_s": self.cooldown_s},
+            )
 
     def _try_each(self, op, what: str) -> bytes:
         n = len(self._sources)
@@ -355,6 +388,11 @@ class PeerShardSource:
                     admitted.discard(i)
                     with self._lock:
                         self.probes += 1
+                    tracer = _trace.get_tracer()
+                    if tracer.enabled:
+                        tracer.instant(
+                            "breaker:probe", "peer", {"peer": self.peer_urls[i]}
+                        )
                 try:
                     data = op(self._sources[i])
                 except FileNotFoundError:
@@ -588,6 +626,12 @@ class TieredSource:
             return data
         with self._lock:
             self.hedges += 1
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            tracer.instant(
+                "hedge:start", "peer",
+                {"what": what, "after_s": self.hedge_after_s},
+            )
         origin_fut = self._origin_ex.submit(self._origin_call, origin_call)
         pending = {peer_fut, origin_fut}
         origin_exc: BaseException | None = None
@@ -602,6 +646,10 @@ class TieredSource:
                     peer_fut.cancel()
                     with self._lock:
                         self.hedge_wins += 1
+                    if tracer.enabled:
+                        tracer.instant(
+                            "hedge:win", "peer", {"what": what, "winner": "origin"}
+                        )
                     raise
                 except BaseException as e:  # noqa: BLE001 - collected below
                     if f is origin_fut:
@@ -617,6 +665,12 @@ class TieredSource:
                 else:
                     with self._lock:
                         self.hedge_wins += 1
+                if tracer.enabled:
+                    tracer.instant(
+                        "hedge:win", "peer",
+                        {"what": what,
+                         "winner": "peer" if f is peer_fut else "origin"},
+                    )
                 return data
         # both lanes failed: surface the origin's error (authoritative —
         # a FileNotFoundError here really means the object does not exist)

@@ -98,6 +98,7 @@ from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 
 import numpy as np
 
+from ...core import trace as _trace
 from .dataset import MANIFEST_NAME, validate_shard_name
 from .format import (
     ENTRY_SIZE,
@@ -516,6 +517,8 @@ class ShardPrefetcher:
             # (promotion, or a Range-ignoring origin below): serve the range
             # locally — zero wire bytes, so no fetch counters move.
             return bytes(entry[0].raw(start, length))
+        tracer = _trace.get_tracer()
+        t0 = time.monotonic() if tracer.enabled else 0.0
         try:
             data = self.source.fetch_range(name, start, length)
         except RangeNotSupported as e:
@@ -545,6 +548,11 @@ class ShardPrefetcher:
             with self._lock:
                 self.range_fetches += 1
                 self.bytes_fetched += len(data)
+        if tracer.enabled:
+            tracer.complete(
+                f"range {name}", "shard", t0, time.monotonic() - t0,
+                {"start": start, "length": length},
+            )
         if len(data) != length:
             raise ShardCorruption(
                 f"{name}: range {start}+{length} returned {len(data)} bytes"
@@ -620,6 +628,7 @@ class ShardPrefetcher:
         payload, fetch only their coalesced ranges (sparse entry).
         Otherwise — no hints, no ranges, or the window wants most of the
         shard anyway — fetch the whole shard to disk."""
+        tracer = _trace.get_tracer()
         t0 = time.monotonic()
         try:
             # range_supported goes False the moment the source sees a server
@@ -657,8 +666,13 @@ class ShardPrefetcher:
                     return reader
             return self._fetch_full(name)
         finally:
+            dt = time.monotonic() - t0
             with self._lock:
-                self.fetch_time += time.monotonic() - t0
+                self.fetch_time += dt
+            if tracer.enabled:
+                # one span per shard fetch, on whatever thread ran it
+                # (prefetch pool or a demand caller)
+                tracer.complete(f"fetch {name}", "shard", t0, dt)
 
     def _evict_over_budget_locked(self) -> list[str]:
         """LRU-evict past the byte budget; caller holds the lock and must
@@ -782,7 +796,10 @@ class ShardPrefetcher:
                     and entry[0] is sparse_reader
                 )
             if live:
-                self._replace_with_full(name, self._fetch_full(name), promotion=True)
+                with _trace.get_tracer().span(f"promote {name}", "shard"):
+                    self._replace_with_full(
+                        name, self._fetch_full(name), promotion=True
+                    )
         except Exception:
             pass  # advisory: the sparse entry keeps serving; demand reads may retrigger
         finally:
@@ -883,9 +900,15 @@ class ShardPrefetcher:
                 if next(reversed(self._cached)) != name:
                     self._cached.move_to_end(name)  # refresh LRU position
                 self.hits += 1
+                tracer = _trace.get_tracer()
+                if tracer.enabled:
+                    tracer.instant("cache:hit", "shard", {"shard": name})
                 return entry[0]
             validate_shard_name(name)
             self.misses += 1
+            tracer = _trace.get_tracer()
+            if tracer.enabled:
+                tracer.instant("cache:miss", "shard", {"shard": name})
             fut = self._inflight.get(name)
             if fut is None:
                 my_fut = self._inflight[name] = Future()

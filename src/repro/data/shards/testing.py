@@ -38,6 +38,11 @@ and ``tests/test_faults.py``) — all default off, all settable live:
   connections serviceable, which is a restart, not a crash).
 
 Counters for assertions: ``stalls``, ``truncations``, ``flaky_failures``.
+
+Telemetry: pass ``metrics=`` (a ``core.metrics.MetricsExporter``) to mount
+``GET /metrics`` on the same port — Prometheus text scrapes ride the shard
+port, and deliberately bypass the request counters and chaos faults so a
+scrape never perturbs a test's assertions or consumes a fault budget.
 """
 
 from __future__ import annotations
@@ -51,6 +56,8 @@ import socket
 import threading
 import time
 import urllib.parse
+
+from ...core.metrics import CONTENT_TYPE_LATEST as _METRICS_CONTENT_TYPE
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
 
@@ -111,6 +118,15 @@ class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
             self.close_connection = True
             with contextlib.suppress(OSError):
                 self.connection.shutdown(socket.SHUT_RDWR)
+            return
+        # /metrics is reserved (never a shard name) and served outside the
+        # chaos/counter path: a scrape must not consume a fault budget
+        if self.path.split("?", 1)[0] == "/metrics" and srv.metrics is not None:
+            self._send(
+                200,
+                srv.metrics.render().encode(),
+                {"Content-Type": _METRICS_CONTENT_TYPE},
+            )
             return
         with srv.lock:
             srv.requests += 1
@@ -185,9 +201,12 @@ class ShardHTTPServer(http.server.ThreadingHTTPServer):
         *,
         support_ranges: bool = True,
         chaos_seed: int = 0,
+        metrics=None,
     ):
         self.root = pathlib.Path(root).resolve()
         self.support_ranges = support_ranges
+        # optional core.metrics.MetricsExporter mounted at GET /metrics
+        self.metrics = metrics
         self.lock = threading.Lock()
         self.requests = 0
         self.bytes_served = 0
@@ -226,11 +245,13 @@ def serve_shards(
     *,
     support_ranges: bool = True,
     chaos_seed: int = 0,
+    metrics=None,
 ):
     """Context manager: serve ``root`` on a loopback port; yields the server
     (use ``server.url`` as an ``HttpShardSource`` root)."""
     server = ShardHTTPServer(
-        root, support_ranges=support_ranges, chaos_seed=chaos_seed
+        root, support_ranges=support_ranges, chaos_seed=chaos_seed,
+        metrics=metrics,
     )
     thread = threading.Thread(
         target=server.serve_forever, name="shard-http", daemon=True

@@ -34,12 +34,14 @@ retain batches beyond the current iteration must copy them.  No
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Any
 
 import jax
 import numpy as np
 
+from ..core import trace as _trace
 from .arena import SLAB_KEY
 
 
@@ -64,6 +66,7 @@ class DeviceTransfer:
         uint8_wire: bool = False,
         hold_slabs: int | None = None,
         consumer_window: int = 3,
+        tracer=None,
     ):
         if hold_slabs is None:
             hold_slabs = consumer_window + 2
@@ -72,6 +75,9 @@ class DeviceTransfer:
         self.hold_slabs = hold_slabs  # slabs kept alive behind the current one
         self.bytes_moved = 0
         self.num_batches = 0
+        # explicit tracer, else whatever is installed process-wide at call
+        # time (host→device spans land on the worker thread's track)
+        self._tracer = tracer
         self._held: deque[Any] = deque()
 
     def __call__(self, batch: Any) -> Any:
@@ -80,16 +86,26 @@ class DeviceTransfer:
             slab = batch.pop(SLAB_KEY, None)
             if self.uint8_wire:
                 batch = {k: to_uint8_wire(v) for k, v in batch.items()}
-        self.bytes_moved += (
+        nbytes = (
             sum(v.nbytes for v in batch.values() if hasattr(v, "nbytes"))
             if isinstance(batch, dict)
             else getattr(batch, "nbytes", 0)
         )
+        self.bytes_moved += nbytes
         self.num_batches += 1
+        tracer = self._tracer if self._tracer is not None else _trace.get_tracer()
+        t0 = time.monotonic() if tracer.enabled else 0.0
         if self.shardings is None:
             out = jax.device_put(batch)
         else:
             out = jax.device_put(batch, self.shardings)
+        if tracer.enabled:
+            # dispatch time only: device_put is async, so this span is the
+            # host-side cost; the wire time overlaps the consumer's step
+            tracer.complete(
+                "device_put", "transfer", t0, time.monotonic() - t0,
+                {"bytes": nbytes, "batch": self.num_batches},
+            )
         if slab is not None:
             # The copy for `slab` is now in flight; recycle the one from
             # hold_slabs batches ago, whose copy is certainly consumed.

@@ -1,0 +1,166 @@
+"""Dashboard rendering + resource sampling (core/stats.py).
+
+format_stats is the thing a human reads at 3am; these tests pin the
+rendering contract — which extra lines appear for which snapshot fields,
+how the ttfi / windowed-rate columns format — and the snapshot
+passthrough of the cumulative fields the windowed-rate math depends on.
+"""
+
+import dataclasses
+import time
+
+import pytest
+
+from repro.core.metrics import WindowRates
+from repro.core.stats import (
+    MAX_ERROR_TYPES,
+    ResourceSampler,
+    StageStats,
+    StageStatsSnapshot,
+    format_stats,
+)
+
+
+def snap(name="s", **kw) -> StageStatsSnapshot:
+    base = dict(
+        name=name, concurrency=2, num_in=10, num_out=9, num_failed=1,
+        qps=3.0, avg_task_time=0.002, occupancy=0.5, get_wait=0.1,
+        put_wait=0.2, last_error="ValueError('bad')",
+    )
+    base.update(kw)
+    return StageStatsSnapshot(**base)
+
+
+# -- format_stats ----------------------------------------------------------
+def test_format_stats_basic_columns():
+    out = format_stats([snap(time_to_first_s=0.1234)])
+    hdr = out.splitlines()[0]
+    for col in ("stage", "conc", "in", "out", "fail", "qps", "task_ms",
+                "occ%", "get_w", "put_w", "ttfi_ms"):
+        assert col in hdr
+    assert "123.4" in out  # ttfi rendered in ms
+    # no window given: no windowed columns
+    assert "qps_w" not in hdr
+
+
+def test_format_stats_ttfi_dash_before_first_item():
+    row = format_stats([snap(time_to_first_s=None)]).splitlines()[2]
+    assert row.rstrip().endswith("-")
+
+
+def test_format_stats_window_columns():
+    w = {"s": WindowRates(name="s", dt=5.0, in_rate=2.0, qps=7.5,
+                          fail_rate=0.0, occupancy=0.25,
+                          get_wait_frac=0.1, put_wait_frac=0.0)}
+    out = format_stats([snap(), snap(name="other")], window=w)
+    hdr = out.splitlines()[0]
+    assert "qps_w" in hdr and "occ_w%" in hdr
+    row_s = out.splitlines()[2]
+    assert "7.5" in row_s and "25.0" in row_s
+    # a stage absent from the window dict renders dashes, not garbage
+    row_other = out.splitlines()[3]
+    assert row_other.rstrip().endswith("-")
+
+
+def test_format_stats_errors_line():
+    out = format_stats(
+        [snap(errors_by_type=(("KeyError", 2), ("ValueError", 5)))]
+    )
+    assert "[s] errors: KeyError=2 ValueError=5 last=ValueError('bad')" in out
+
+
+def test_format_stats_extra_lines():
+    s = snap(
+        stragglers=3, straggler_time=0.6, straggler_shed=1,
+        num_slabs=4, slabs_in_flight=2, bytes_allocated=2 << 20,
+        cache_hits=8, cache_misses=2, cache_evictions=1,
+        bytes_cached=1 << 20, prefetch_depth=1, bytes_fetched=1 << 20,
+        promotions=2, source_errors=1, source_retries=3,
+        peer_hits=5, peer_bytes=1 << 20, origin_bytes=2 << 20,
+    )
+    out = format_stats([s])
+    assert "[s] stragglers: detached=3 avg_ms=200.0 shed=1" in out
+    assert "[s] arena: slabs_in_flight=2/4 bytes_allocated=2.0MB" in out
+    assert "shard-cache: hits=8 misses=2 (80% hit)" in out
+    assert "src_errors=1 src_retries=3" in out
+    assert "promotions=2" in out
+    assert "[s] peers: peer_hits=5" in out
+
+
+def test_format_stats_quiet_without_optionals():
+    out = format_stats([snap()])
+    assert "stragglers" not in out
+    assert "arena" not in out
+    assert "shard-cache" not in out
+    assert "peers" not in out
+    assert "errors:" not in out
+
+
+# -- StageStats recording + snapshot passthrough ---------------------------
+def test_errors_by_type_bounded():
+    st = StageStats(name="s")
+    for i in range(MAX_ERROR_TYPES + 5):
+        err = type(f"Err{i}", (RuntimeError,), {})("boom")
+        st.record_failure(err)
+    assert len(st.errors_by_type) == MAX_ERROR_TYPES + 1  # incl. _other
+    assert st.errors_by_type["_other"] == 5
+    assert st.num_failed == MAX_ERROR_TYPES + 5
+    # an already-tracked type keeps counting even at the cap
+    st.record_failure(type("Err0", (RuntimeError,), {})("again"))
+    assert st.errors_by_type["Err0"] == 2
+
+
+def test_snapshot_passthrough():
+    st = StageStats(name="s", concurrency=3)
+    st.record_task(0.25)
+    st.record_out_many(4)
+    st.record_failure(ValueError("x"))
+    s = st.snapshot()
+    assert s.task_time == pytest.approx(0.25)
+    assert s.elapsed > 0
+    assert s.time_to_first_s is not None and s.time_to_first_s >= 0
+    assert dict(s.errors_by_type) == {"ValueError": 1}
+    assert dataclasses.asdict(s)["num_out"] == 4
+
+
+def test_snapshot_ttfi_none_before_output():
+    assert StageStats(name="s").snapshot().time_to_first_s is None
+
+
+def test_record_out_many_zero_keeps_first_out_unset():
+    st = StageStats(name="s")
+    st.record_out_many(0)
+    assert st.first_out_t is None and st.num_out == 0
+
+
+# -- ResourceSampler -------------------------------------------------------
+def test_resource_sampler_read_plausible():
+    cpu, rss = ResourceSampler._read()
+    assert cpu >= 0.0
+    assert rss > 1 << 20  # a CPython process is bigger than 1MB
+
+
+def test_resource_sampler_current_prefers_background_sample():
+    r = ResourceSampler()
+    cpu, rss = r.current()  # no samples yet: fresh /proc read
+    assert rss > 0
+    r.samples.append((time.monotonic(), 1.5, 123))
+    assert r.current() == (1.5, 123)
+
+
+def test_resource_sampler_summary_edge_cases():
+    r = ResourceSampler()
+    s = r.summary()  # <2 samples: util 0, rss from a fresh read
+    assert s["cpu_util"] == 0.0 and s["peak_rss_mb"] > 0
+    r.samples = [(0.0, 1.0, 100 << 20), (10.0, 6.0, 300 << 20)]
+    s = r.summary()
+    assert s["cpu_util"] == pytest.approx(0.5)
+    assert s["peak_rss_mb"] == pytest.approx(300.0)
+    assert s["avg_rss_mb"] == pytest.approx(200.0)
+
+
+def test_resource_sampler_background_thread():
+    with ResourceSampler(interval=0.01) as r:
+        time.sleep(0.08)
+    assert len(r.samples) >= 2
+    assert r.summary()["peak_rss_mb"] > 0
