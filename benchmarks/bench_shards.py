@@ -24,7 +24,13 @@ bench_zero_copy's job:
 - ``origin_cold`` / ``peer_warm``: the peer exchange tier — rank A pays
   the origin cold, then serves its warm cache over a ``PeerShardServer``;
   rank B reads every shard through a ``TieredSource`` and must touch the
-  origin ZERO times (asserted via the origin server's request counter).
+  origin ZERO times (asserted via the origin server's request counter);
+- ``projection``: columnar (format v2) shards holding
+  image + caption + metadata fields (image ≈ 40% of the payload), read
+  image-only over HTTP two ways — full fetch (whole shards cross the
+  wire) vs projection pushdown (``fields=("image",)`` rides the prefetch
+  hints, so only the image column's ranges are fetched).  The wire-byte
+  ratio must come in at or under ``gate_projection_wire_ratio`` (0.5).
 
 ``shard_mmap_epoch2`` re-reads the same warm mapping: per-sample crc
 verification is memoized on first read, so epoch 2 is pure pointer math
@@ -33,8 +39,13 @@ verification is memoized on first read, so epoch 2 is pure pointer math
 Results persist to ``BENCH_shards.json`` at the repo root; gates:
 ``speedup_cold >= 2`` (packed shards at least 2x per-file items/s cold),
 ``http_index_first_bytes < http_whole_bytes`` (strict),
-``http_warm_vs_local`` ≈ 1 (±10%), and ``peer_zero_origin`` (no origin
-shard requests during rank B's peer-served pass).
+``http_warm_vs_local`` ≈ 1 (±10%), ``peer_zero_origin`` (no origin
+shard requests during rank B's peer-served pass), and
+``projection_wire_ratio <= 0.5`` (image-only reads of a three-field
+corpus move at most half the full-fetch wire bytes).
+
+``python -m benchmarks.bench_shards --gate`` re-checks the projection
+gate at smoke size and exits nonzero on regression (CI wires this in).
 """
 
 from __future__ import annotations
@@ -42,6 +53,7 @@ from __future__ import annotations
 import json
 import pathlib
 import shutil
+import sys
 import tempfile
 import time
 
@@ -60,6 +72,7 @@ from repro.data import (
     TieredSource,
     pack,
 )
+from repro.data.shards import ShardWriterV2, write_manifest
 from repro.data.shards.testing import serve_shards
 
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_shards.json"
@@ -68,6 +81,10 @@ N_ITEMS = 2048
 HW = (64, 64)
 SAMPLES_PER_SHARD = 256
 REMOTE_LATENCY_S = 0.005
+# projection: image-only reads of an image+caption+metadata corpus must
+# move at most this fraction of the full-fetch wire bytes
+PROJECTION_GATE = 0.5
+PROJECTION_FIELDS = {"image": 4000, "caption": 3000, "metadata": 3000}
 
 
 def _read_throughput(ds, order: np.ndarray) -> dict:
@@ -235,6 +252,108 @@ def _peer_section(shards_dir: pathlib.Path, cache_root: pathlib.Path) -> dict:
     return results
 
 
+def _projection_corpus(root: pathlib.Path, n: int, per_shard: int) -> None:
+    """Columnar v2 shards: image + caption + metadata per sample (image is
+    40% of the payload — the fraction an image-only read should approach)."""
+    rng = np.random.default_rng(1)
+    root.mkdir(parents=True, exist_ok=True)
+    shards: list[dict] = []
+    done = 0
+    while done < n:
+        count = min(per_shard, n - done)
+        name = f"shard-{len(shards):05d}.rpshard"
+        with ShardWriterV2(root / name) as w:
+            for _ in range(count):
+                w.add(
+                    {
+                        f: rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+                        for f, size in PROJECTION_FIELDS.items()
+                    }
+                )
+        shards.append(
+            {"name": name, "n": count, "bytes": (root / name).stat().st_size}
+        )
+        done += count
+    write_manifest(
+        root,
+        shards,
+        {"format_version": 2, "fields": list(PROJECTION_FIELDS)},
+    )
+
+
+def _field_throughput(ds, order: np.ndarray, field: str = "image") -> dict:
+    t0 = time.monotonic()
+    n_bytes = 0
+    for i in order:
+        n_bytes += len(ds.read_fields(int(i), (field,))[field])
+    dt = time.monotonic() - t0
+    return {
+        "items_per_sec": len(order) / dt,
+        "mb_per_sec": n_bytes / dt / 2**20,
+        "items": len(order),
+    }
+
+
+def _projection_section(*, smoke: bool = False) -> dict:
+    """Image-only reads over HTTP: full fetch vs projection pushdown."""
+    n = 64 if smoke else 512
+    per_shard = 16 if smoke else 64
+    with tempfile.TemporaryDirectory() as d:
+        d = pathlib.Path(d)
+        root = d / "corpus"
+        _projection_corpus(root, n, per_shard)
+        meta = ShardDataset(root)
+        shard_names, shard_sizes = meta.shard_names, meta.shard_sizes
+        meta.close()
+        order = np.arange(n)
+        inflight = max(2, len(shard_names))
+        with serve_shards(root) as srv:
+            # -- full fetch: whole shards cross the wire, image read locally
+            pf_full = ShardPrefetcher(
+                RetryingSource(HttpShardSource(srv.url)),
+                d / "cache_full",
+                max_bytes=1 << 32,
+                index_first=False,
+                max_inflight=inflight,
+            )
+            ds_full = ShardDataset(root, prefetcher=pf_full)
+            for name in shard_names:
+                pf_full.schedule(name)
+            full = _field_throughput(ds_full, order)
+            full_wire = pf_full.stats()["bytes_fetched"]
+            ds_full.close()
+
+            # -- projection pushdown: only the image column's ranges fetched
+            pf_proj = ShardPrefetcher(
+                RetryingSource(HttpShardSource(srv.url)),
+                d / "cache_proj",
+                max_bytes=1 << 32,
+                index_first=True,
+                max_inflight=inflight,
+            )
+            ds_proj = ShardDataset(
+                root, prefetcher=pf_proj, fields=("image",)
+            )
+            for name, size in zip(shard_names, shard_sizes):
+                pf_proj.schedule(name, samples=list(range(size)), fields=("image",))
+            projected = _field_throughput(ds_proj, order)
+            proj_stats = pf_proj.stats()
+            ds_proj.close()
+    ratio = proj_stats["bytes_fetched"] / max(full_wire, 1)
+    return {
+        "full_fetch": {**full, "bytes_fetched": full_wire},
+        "projected": {
+            **projected,
+            "bytes_fetched": proj_stats["bytes_fetched"],
+            "bytes_skipped": proj_stats["bytes_skipped"],
+            "fields_requested": proj_stats["fields_requested"],
+            "sparse_shards": proj_stats["sparse_shards"],
+        },
+        "wire_ratio": ratio,
+        "meets_gate": bool(ratio <= PROJECTION_GATE),
+    }
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     n = 256 if smoke else N_ITEMS
     per_shard = 64 if smoke else SAMPLES_PER_SHARD
@@ -275,6 +394,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
 
         http = _http_section(d / "shards", d / "http_caches")
         peer = _peer_section(d / "shards", d / "peer_caches")
+    projection = _projection_section(smoke=smoke)
 
     speedup_cold = shard["items_per_sec"] / max(per_file["items_per_sec"], 1e-9)
     warm_speedup = remote_warm["items_per_sec"] / max(
@@ -303,6 +423,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         "remote_warm_over_cold": warm_speedup,
         **http,
         **peer,
+        "projection": projection,
+        "projection_wire_ratio": projection["wire_ratio"],
+        "gate_projection_wire_ratio": PROJECTION_GATE,
     }
     if not smoke:  # persist only full runs; smoke numbers are noise
         OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
@@ -320,6 +443,8 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         ("http_warm", http["http_warm"]),
         ("origin_cold", peer["origin_cold"]),
         ("peer_warm", peer["peer_warm"]),
+        ("projection_full_fetch", projection["full_fetch"]),
+        ("projection_pushdown", projection["projected"]),
     ):
         rows.append(
             (
@@ -355,9 +480,39 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
             f"_{'ZERO_ORIGIN' if peer['peer_zero_origin'] else 'ORIGIN_LEAK'}",
         )
     )
+    rows.append(
+        (
+            "shards_projection_wire_bytes",
+            0.0,
+            f"x{projection['wire_ratio']:.2f}_of_full_fetch_wire_bytes"
+            f"_{'MEETS_GATE' if projection['meets_gate'] else 'OVER_GATE'}",
+        )
+    )
     return rows
 
 
+def check_gate() -> int:
+    """CI regression tripwire: re-measure the projection workload at smoke
+    size and fail if the wire-byte ratio rose above the recorded gate."""
+    gate = PROJECTION_GATE
+    if OUT_PATH.is_file():
+        gate = float(
+            json.loads(OUT_PATH.read_text()).get("gate_projection_wire_ratio", gate)
+        )
+    projection = _projection_section(smoke=True)
+    ratio = projection["wire_ratio"]
+    print(
+        f"shards_projection gate: x{ratio:.2f} of full-fetch wire bytes, "
+        f"gate x{gate:.2f}"
+    )
+    if ratio > gate:
+        print(f"REGRESSION: projection wire ratio x{ratio:.2f} > gate x{gate:.2f}")
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    for r in run():
+    if "--gate" in sys.argv:
+        sys.exit(check_gate())
+    for r in run("--smoke" in sys.argv):
         print(",".join(map(str, r)))

@@ -316,6 +316,13 @@ def stage_metrics_lines(
                   "Bytes downloaded from shard sources.", s.bytes_fetched, **lb)
             f.add(f"{p}_shard_promotions_total", "counter",
                   "Sparse-to-full cache promotions.", s.promotions, **lb)
+            if s.bytes_skipped or s.fields_requested:
+                f.add(f"{p}_shard_skipped_bytes_total", "counter",
+                      "Wire bytes avoided by columnar projection.",
+                      s.bytes_skipped, **lb)
+                f.add(f"{p}_shard_fields_requested", "gauge",
+                      "Distinct field names requested from the prefetcher.",
+                      s.fields_requested, **lb)
             if s.source_errors or s.source_retries:
                 f.add(f"{p}_shard_source_errors_total", "counter",
                       "Shard source fetch errors.", s.source_errors, **lb)

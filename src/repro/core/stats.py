@@ -133,6 +133,8 @@ class StageStats:
             bytes_cached=int(cache.get("bytes_cached", 0)),
             prefetch_depth=int(cache.get("prefetch_depth", 0)),
             bytes_fetched=int(cache.get("bytes_fetched", 0)),
+            bytes_skipped=int(cache.get("bytes_skipped", 0)),
+            fields_requested=int(cache.get("fields_requested", 0)),
             source_errors=int(cache.get("source_errors", 0)),
             source_retries=int(cache.get("source_retries", 0)),
             promotions=int(cache.get("promotions", 0)),
@@ -189,6 +191,11 @@ class StageStatsSnapshot:
     bytes_fetched: int = 0
     source_errors: int = 0
     source_retries: int = 0
+    # columnar projection visibility (format v2 shards read with fields=...):
+    # wire bytes the projection avoided fetching, and how many distinct
+    # field names consumers have asked this prefetcher for
+    bytes_skipped: int = 0
+    fields_requested: int = 0
     # peer-exchange visibility (nonzero only behind a peer.TieredSource):
     # fetches answered by warm peer ranks vs bytes that had to come from the
     # origin object store, plus sparse→full cache promotions
@@ -263,6 +270,11 @@ def format_stats(snaps: list[StageStatsSnapshot], window=None) -> str:
             )
             if s.bytes_fetched:
                 line += f" fetched={s.bytes_fetched / 2**20:.1f}MB"
+            if s.bytes_skipped or s.fields_requested:
+                line += (
+                    f" skipped={s.bytes_skipped / 2**20:.1f}MB"
+                    f" fields={s.fields_requested}"
+                )
             if s.promotions:
                 line += f" promotions={s.promotions}"
             if s.source_errors or s.source_retries:

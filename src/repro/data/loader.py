@@ -107,6 +107,15 @@ then tries the peers' warm caches before the origin, and the read stage's
 dashboard row grows ``peer_hits``/``origin_bytes`` (see
 ``repro.data.shards.peer``).
 
+Columnar (format v2) shards add **projection pushdown**:
+``build_image_loader(ds, fields=("image",))`` reads only the named column
+— the read stage's zero-copy view covers just that field's bytes, and on
+the prefetcher path the field name rides the lookahead hints so sparse
+fetches pull only that column's byte ranges off the wire (``bytes_skipped``
+on the dashboard counts what projection saved).  A ``ShardDataset``
+constructed with its own ``fields=`` projection gets the same hint wiring
+automatically in both loaders.
+
 Checkpoint caveat: the lookahead wrapper holds up to ``_PREFETCH_LOOKAHEAD``
 already-drawn indices that the sampler has counted as handed out, so a
 sampler checkpoint taken mid-stream on the prefetcher path skips at most
@@ -191,7 +200,10 @@ _PREFETCH_LOOKAHEAD = 64
 
 
 def _with_shard_prefetch(
-    indices: Iterable[int], dataset: Any, lookahead: int = _PREFETCH_LOOKAHEAD
+    indices: Iterable[int],
+    dataset: Any,
+    lookahead: int = _PREFETCH_LOOKAHEAD,
+    fields: tuple[str, ...] | None = None,
 ) -> Iterator[int]:
     """Index-stream wrapper for prefetcher-backed shard datasets: peek
     ``lookahead`` samples ahead of what the pipeline has been handed and
@@ -213,16 +225,26 @@ def _with_shard_prefetch(
     The buffered indices have already advanced the sampler's cursor, so a
     checkpoint taken mid-stream treats them as consumed: resume skips at
     most ``lookahead`` samples beyond the sink-buffered batches (see the
-    module docstring's checkpoint caveat)."""
+    module docstring's checkpoint caveat).
+
+    ``fields`` (columnar v2 shards) rides every hint: a sparse fetch then
+    coalesces ranges over the requested columns only, so projection
+    pushdown reaches the wire from here."""
     pf = dataset.prefetcher
     want_hints = bool(getattr(pf, "index_first", False))
     buf: deque[int] = deque()
     run_shard = -1
     run_samples: list[int] | None = []  # None = run already committed full
 
+    def schedule(shard: int, samples=None) -> None:
+        if fields is not None:
+            pf.schedule(dataset.shard_names[shard], samples=samples, fields=fields)
+        else:
+            pf.schedule(dataset.shard_names[shard], samples=samples)
+
     def commit_run() -> None:
         if run_shard >= 0 and run_samples:
-            pf.schedule(dataset.shard_names[run_shard], samples=run_samples)
+            schedule(run_shard, run_samples)
 
     for i in indices:
         shard, local = dataset.shard_and_offset(i)
@@ -232,14 +254,14 @@ def _with_shard_prefetch(
             if not want_hints:
                 # no ranged reads available: schedule the whole shard as
                 # early as possible (maximum fetch/decode overlap)
-                pf.schedule(dataset.shard_names[shard])
+                schedule(shard)
                 run_samples = None
         if want_hints and run_samples is not None:
             run_samples.append(local)
             if len(run_samples) >= lookahead:
                 # the window wants most of this shard: commit to a full
                 # fetch now rather than waiting for the run to end
-                pf.schedule(dataset.shard_names[shard])
+                schedule(shard)
                 run_samples = None
         buf.append(i)
         if len(buf) > lookahead:
@@ -248,12 +270,18 @@ def _with_shard_prefetch(
     yield from buf
 
 
-def _maybe_prefetch(indices: Iterable[int], dataset: Any) -> tuple[Iterable[int], Any]:
-    """(index stream, cache probe) — wired only for prefetcher datasets."""
+def _maybe_prefetch(
+    indices: Iterable[int], dataset: Any, fields: tuple[str, ...] | None = None
+) -> tuple[Iterable[int], Any]:
+    """(index stream, cache probe) — wired only for prefetcher datasets.
+    ``fields=None`` falls back to the dataset's own projection, so a
+    ``ShardDataset(fields=...)`` hints its columns without loader help."""
     prefetcher = getattr(dataset, "prefetcher", None)
     if prefetcher is None:
         return indices, None
-    return _with_shard_prefetch(indices, dataset), prefetcher
+    if fields is None:
+        fields = getattr(dataset, "fields", None)
+    return _with_shard_prefetch(indices, dataset, fields=fields), prefetcher
 
 
 def build_image_loader(
@@ -275,11 +303,29 @@ def build_image_loader(
     fuse_stages: bool = True,  # collapse read+decode into one worker call
     straggler_after: float | None = None,  # soft deadline on read/decode
     trace=None,  # core.trace.Tracer: flight-recorder spans for every layer
+    fields: tuple[str, ...] | None = None,  # columnar projection, e.g. ("image",)
 ) -> Pipeline:
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
     if straggler_after is not None and chunk <= 1:
         raise ValueError("straggler_after requires chunk > 1 (see pipe())")
+    # Columnar projection: this pipeline decodes exactly one image blob per
+    # sample, so the projection must name exactly one field.  The name is
+    # pushed down every layer — the read stage pulls only that column, the
+    # prefetch hints carry it to the wire, and multi-field shards stop
+    # paying fetch+decode for the columns this loader never touches.
+    if fields is not None:
+        fields = tuple(fields)
+        if len(fields) != 1:
+            raise ValueError(
+                f"the image pipeline decodes one field per sample; "
+                f"fields={list(fields)} names {len(fields)}"
+            )
+        if getattr(dataset, "schema_fields", None) is None:
+            raise TypeError(
+                "fields= needs a columnar (format v2) ShardDataset — "
+                "migrate with pack(..., format_version=2)"
+            )
     # fusion widens both stages to max(read, decode) concurrency — a
     # concurrency-1 stage may be deliberate (serialization), so don't
     fuse_stages = fuse_stages and (
@@ -299,24 +345,38 @@ def build_image_loader(
         shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer,
         tracer=trace,
     )
-    index_stream, cache_probe = _maybe_prefetch(indices(), dataset)
+    index_stream, cache_probe = _maybe_prefetch(indices(), dataset, fields=fields)
+
+    if fields is not None:
+        _field = fields[0]
+
+        def read_blob(i: int) -> memoryview:
+            # projected read: only this column's bytes (zero-copy view)
+            return dataset.read_fields(i, fields)[_field]
+    else:
+        read_blob = dataset.read_bytes
 
     if zero_copy and len(dataset) > 0:
         # The slab spec hard-codes uint8 (H, W, 3) slots.  A dataset of
         # incompatible samples (grayscale, float, video clips) would hole
         # out EVERY item under OnError.SKIP — a silent empty epoch — so
         # sniff one sample and fall back to list-collate instead.  Shard
-        # manifests record sample 0's layout, which answers the question
-        # without reading data (a remote dataset would otherwise download a
-        # whole shard for this one header).
-        meta = getattr(dataset, "sample_meta", None)
+        # manifests record sample 0's layout (per field on columnar
+        # manifests), which answers the question without reading data (a
+        # remote dataset would otherwise download a whole shard for this
+        # one header).
+        meta = (
+            dataset.field_meta(fields[0])
+            if fields is not None and callable(getattr(dataset, "field_meta", None))
+            else getattr(dataset, "sample_meta", None)
+        )
         if meta is not None:
             dtype, shape = meta
             if len(shape) != 3 or shape[2] != 3 or dtype != np.uint8:
                 zero_copy = False
         else:
             try:
-                probe = decode_sample(dataset.read_bytes(0))
+                probe = decode_sample(read_blob(0))
             except Exception:
                 pass  # unreadable first sample: the runtime path will skip it
             else:
@@ -327,7 +387,7 @@ def build_image_loader(
         # Classic list-collate fallback: each decode allocates its own
         # output, the collate stage allocates a fresh slab per batch.
         def read(i: int) -> bytes:
-            return dataset.read_bytes(i)
+            return read_blob(i)
 
         def decode(data: bytes) -> np.ndarray:
             img = decode_sample(data)
@@ -369,7 +429,7 @@ def build_image_loader(
     def read(item) -> tuple:
         i, ref = item
         try:
-            return dataset.read_bytes(i), ref
+            return read_blob(i), ref
         except Exception:
             ref.mark_hole()  # the slot was already assigned; don't leak it
             raise

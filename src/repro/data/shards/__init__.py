@@ -25,9 +25,19 @@ Each ``.rpshard`` file is ``[header | payload | index]`` (little-endian):
 * **index** (16 B/sample, written after the payload so the writer streams):
   ``offset:u64``, ``length:u32``, ``crc32:u32``.
 
+**Format v2 (columnar)** keeps the same header (``version=2``) but lays
+the payload out as one contiguous *column region per named field*, with a
+per-column index carrying per-(field, sample) offsets/lengths/crc32s.
+Readers that only need some fields fetch only those columns — *projection
+pushdown* — and the saving propagates through every layer: sparse
+prefetch coalesces ranges per projected column, ranged sources download
+only those spans, and peers serve column ranges from their warm caches.
+See ``format.py`` for the byte-level spec.
+
 Versioning: the magic pins the major layout, ``version`` the minor
 revision; readers reject unknown magics and newer-than-self versions and
-keep reading every older version ever shipped.
+keep reading every older version ever shipped.  ``open_shard_reader``
+peeks the header and returns the right reader class for either version.
 
 CRC policy: crcs are computed over the encoded sample bytes at pack time
 and verified on every read by default; a mismatch raises
@@ -70,6 +80,11 @@ Public surface
 --------------
 ``ShardWriter`` / ``ShardReader``  one-file pack/read (``format.py``;
                                    ``ShardIndex`` for index-only parses);
+``ShardWriterV2`` / ``ShardReaderV2``  columnar (format v2) pack/read with
+                                   field projection (``ShardIndexV2`` for
+                                   index-only parses;
+                                   ``open_shard_reader`` dispatches on the
+                                   header version byte);
 ``ShardDataset`` / ``pack``        multi-shard dataset + migration tool
                                    (``dataset.py``; an ``http(s)://`` root
                                    builds the remote stack automatically);
@@ -93,7 +108,17 @@ from .dataset import (
     validate_shard_name,
     write_manifest,
 )
-from .format import ShardCorruption, ShardIndex, ShardReader, ShardWriter
+from .format import (
+    MappedShardReader,
+    ShardCorruption,
+    ShardIndex,
+    ShardIndexV2,
+    ShardReader,
+    ShardReaderV2,
+    ShardWriter,
+    ShardWriterV2,
+    open_shard_reader,
+)
 from .peer import PeerMiss, PeerShardServer, PeerShardSource, TieredSource
 from .prefetch import (
     LocalShardSource,
@@ -112,6 +137,7 @@ __all__ = [
     "MANIFEST_NAME",
     "HttpShardSource",
     "LocalShardSource",
+    "MappedShardReader",
     "PeerMiss",
     "PeerShardServer",
     "PeerShardSource",
@@ -120,13 +146,17 @@ __all__ = [
     "ShardCorruption",
     "ShardDataset",
     "ShardIndex",
+    "ShardIndexV2",
     "ShardPrefetcher",
     "ShardReader",
+    "ShardReaderV2",
     "ShardWriter",
+    "ShardWriterV2",
     "SimulatedLatencySource",
     "SourceUnavailable",
     "SparseShardReader",
     "TieredSource",
+    "open_shard_reader",
     "pack",
     "validate_shard_name",
     "write_manifest",

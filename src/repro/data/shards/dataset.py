@@ -41,8 +41,22 @@ Shard names from the manifest are validated (``validate_shard_name``) to a
 single bare path component before any cache path is built from them — the
 manifest is remote-controlled data in remote mode.
 
+Columnar shards (format v2, see ``format.py``) add **projection**: the
+manifest carries ``"format_version": 2`` and a ``"fields"`` schema, a
+sample is a dict of named fields, and ``ShardDataset(fields=("image",))``
+narrows every layer below — ``read_fields`` returns only the requested
+columns, and in remote mode the projection rides the prefetch hints so
+sparse fetches pull only the requested columns' byte ranges off the wire.
+``read_bytes`` (the one-blob protocol every loader speaks) keeps working
+on a v2 dataset whenever exactly one field is in play — the sole schema
+field, or a single-field projection — so single-field columnar datasets
+drop into existing loaders unchanged; a multi-field dataset with no
+projection fails loudly rather than guessing which column you meant.
+
 ``pack(dataset, out_dir)`` converts anything with ``read_bytes``/``len`` —
-an ``ArrayDataset`` directory in particular — into this layout.
+an ``ArrayDataset`` directory in particular — into this layout;
+``pack(..., format_version=2, fields=("image",))`` migrates to columnar
+shards (sources exposing ``read_fields`` keep all their fields).
 """
 
 from __future__ import annotations
@@ -55,7 +69,7 @@ from typing import Any
 import numpy as np
 
 from ..codec import decode_sample, parse_header
-from .format import ShardReader, ShardWriter
+from .format import ShardWriter, ShardWriterV2, open_shard_reader
 
 MANIFEST_NAME = "manifest.json"
 MANIFEST_VERSION = 1
@@ -127,6 +141,7 @@ class ShardDataset:
         self,
         root: str | pathlib.Path,
         *,
+        fields: tuple[str, ...] | list[str] | None = None,
         prefetcher: Any | None = None,
         verify_crc: bool | str = True,
         cache_dir: str | pathlib.Path | None = None,
@@ -197,6 +212,29 @@ class ShardDataset:
             self.shard_names: list[str] = [
                 validate_shard_name(s["name"]) for s in manifest["shards"]
             ]
+            self.format_version = int(manifest.get("format_version", 1))
+            schema = manifest.get("fields")
+            self.schema_fields: tuple[str, ...] | None = (
+                tuple(schema) if schema else None
+            )
+            self.fields: tuple[str, ...] | None = None
+            if fields is not None:
+                names = tuple(fields)
+                if not names:
+                    raise ValueError("fields= must name at least one field")
+                if self.schema_fields is None:
+                    raise TypeError(
+                        "fields= projection needs a columnar (format v2) "
+                        "dataset; this manifest has no field schema — "
+                        "migrate with pack(..., format_version=2)"
+                    )
+                unknown = [f for f in names if f not in self.schema_fields]
+                if unknown:
+                    raise ValueError(
+                        f"unknown fields {unknown} (schema has "
+                        f"{list(self.schema_fields)})"
+                    )
+                self.fields = names
         except BaseException:
             # a stack built here must not leak its thread pool, sockets, or
             # temp cache dir when the manifest turns out to be bad
@@ -207,7 +245,7 @@ class ShardDataset:
         self.shard_sizes: list[int] = [int(s["n"]) for s in manifest["shards"]]
         self._cum = np.cumsum([0] + self.shard_sizes)
         self._n = int(self._cum[-1])
-        self._readers: dict[int, ShardReader] = {}  # local mode, lazily opened
+        self._readers: dict[int, Any] = {}  # local mode, lazily opened
         self._readers_lock = threading.Lock()
 
     def _cleanup_auto_cache(self) -> None:
@@ -239,15 +277,57 @@ class ShardDataset:
         """(dtype, shape) of sample 0 as recorded by ``pack`` in the
         manifest, or None for manifests predating the field.  Lets loaders
         sniff the sample layout without reading (for remote datasets:
-        downloading a whole shard of) actual data."""
+        downloading a whole shard of) actual data.  On a columnar (v2)
+        manifest this resolves through the single effective field when the
+        projection (or sole schema field) narrows to one — the layout the
+        one-blob loader path would actually read."""
         meta = self.manifest.get("sample0")
         if not meta:
             return None
+        if "fields" in meta:  # v2 per-field layout
+            names = self.fields or self.schema_fields or ()
+            if len(names) == 1:
+                return self.field_meta(names[0])
+            return None
         return np.dtype(meta["dtype"]), tuple(meta["shape"])
 
-    def _reader(self, shard: int) -> ShardReader:
+    def field_meta(self, field: str) -> tuple[np.dtype, tuple[int, ...]] | None:
+        """(dtype, shape) of ``field`` in sample 0 as recorded by a v2
+        ``pack``, or None when unrecorded / not a codec blob."""
+        meta = self.manifest.get("sample0") or {}
+        fm = (meta.get("fields") or {}).get(field)
+        if not fm or "dtype" not in fm:
+            return None
+        return np.dtype(fm["dtype"]), tuple(fm["shape"])
+
+    def _sole_field(self, reader_fields) -> str:
+        """The single field a one-blob ``read_bytes`` call maps to on a
+        columnar shard — the projection if it names exactly one, else the
+        shard's only field; anything wider fails loudly."""
+        if self.fields is not None:
+            if len(self.fields) == 1:
+                return self.fields[0]
+            raise TypeError(
+                f"read_bytes is one-blob-per-sample but the projection names "
+                f"{list(self.fields)}; use read_fields(i) for multi-field reads"
+            )
+        names = tuple(reader_fields)
+        if len(names) == 1:
+            return names[0]
+        raise TypeError(
+            f"read_bytes on a multi-field columnar dataset (fields "
+            f"{list(names)}) needs a projection: ShardDataset(fields=(name,)) "
+            "or read_fields(i, fields=...)"
+        )
+
+    def _reader(self, shard: int):
         if self.prefetcher is not None:
-            return self.prefetcher.reader(self.shard_names[shard])
+            name = self.shard_names[shard]
+            if self.fields is not None:
+                # projection rides along so sparse fetches pull only the
+                # requested columns' ranges
+                return self.prefetcher.reader(name, fields=self.fields)
+            return self.prefetcher.reader(name)
         r = self._readers.get(shard)
         if r is None:
             # Open (and eagerly verify) OUTSIDE the lock: concurrent read
@@ -255,7 +335,7 @@ class ShardDataset:
             # whole-payload crc pass.  The install is double-checked; a
             # losing duplicate is closed (safe — no views were handed out),
             # at worst duplicating one open/verify under a race.
-            candidate = ShardReader(self.root / self.shard_names[shard])
+            candidate = open_shard_reader(self.root / self.shard_names[shard])
             if self.verify_crc == "eager":
                 # coalesced verification: one whole-payload pass on the
                 # opening thread, then reads skip the crc (the per-sample
@@ -272,10 +352,33 @@ class ShardDataset:
         return self._n
 
     def read_bytes(self, i: int) -> memoryview:
-        """Zero-copy encoded bytes of sample ``i`` (mmap slice)."""
+        """Zero-copy encoded bytes of sample ``i`` (mmap slice).  On a
+        columnar (v2) shard this reads the single effective field — see
+        ``_sole_field``."""
         shard = self.shard_of(i)
         local = i - int(self._cum[shard])
-        return self._reader(shard).read(local, verify=self.verify_crc)
+        reader = self._reader(shard)
+        names = getattr(reader, "field_names", None)  # set ⇒ columnar v2
+        if names is not None:
+            field = self._sole_field(names)
+            return reader.read_field(local, field, verify=bool(self.verify_crc))
+        return reader.read(local, verify=self.verify_crc)
+
+    def read_fields(self, i: int, fields=None) -> dict[str, memoryview]:
+        """Projected read of sample ``i``: ``{field: zero-copy memoryview}``.
+        ``fields=None`` means the dataset's projection (all schema fields if
+        none was set).  Columnar (format v2) datasets only."""
+        shard = self.shard_of(i)
+        local = i - int(self._cum[shard])
+        reader = self._reader(shard)
+        if getattr(reader, "field_names", None) is None:
+            raise TypeError(
+                "read_fields needs a columnar (format v2) dataset — "
+                "migrate with pack(..., format_version=2)"
+            )
+        if fields is None:
+            fields = self.fields
+        return reader.read_fields(local, fields, verify=bool(self.verify_crc))
 
     def read_bytes_many(self, indices) -> list[memoryview]:
         """Bulk ``read_bytes``: one vectorized index→shard resolution for
@@ -292,12 +395,18 @@ class ShardDataset:
         verify = self.verify_crc
         out: list[memoryview] = []
         reader = None
+        field = None
         cur = -1
         for s, li in zip(shards.tolist(), locals_.tolist()):
             if s != cur:
                 reader = self._reader(s)
+                names = getattr(reader, "field_names", None)
+                field = self._sole_field(names) if names is not None else None
                 cur = s
-            out.append(reader.read(li, verify=verify))
+            if field is not None:
+                out.append(reader.read_field(li, field, verify=bool(verify)))
+            else:
+                out.append(reader.read(li, verify=verify))
         return out
 
     def __getitem__(self, i: int) -> np.ndarray:
@@ -332,6 +441,16 @@ class ShardDataset:
         self._readers_lock = threading.Lock()
 
 
+def _sniff_meta(blob) -> dict:
+    """Per-sample codec metadata for the manifest; samples that are not
+    codec blobs record an empty dict."""
+    try:
+        dtype, shape, _ = parse_header(blob)
+        return {"dtype": dtype.name, "shape": list(shape)}
+    except Exception:
+        return {}
+
+
 def pack(
     dataset: Any,
     out_dir: str | pathlib.Path,
@@ -339,6 +458,8 @@ def pack(
     samples_per_shard: int = 1024,
     max_shard_bytes: int | None = None,
     prefix: str = "shard",
+    format_version: int = 1,
+    fields: tuple[str, ...] | list[str] | None = None,
 ) -> ShardDataset:
     """Pack any ``read_bytes``/``__len__`` dataset into a sharded directory.
 
@@ -346,14 +467,41 @@ def pack(
     ``max_shard_bytes`` of payload, whichever comes first.  Unreadable
     source samples are packed as-is only if ``read_bytes`` succeeds —
     failures propagate (migration should not silently drop data).
+
+    ``format_version=2`` writes columnar shards: a source exposing
+    ``read_fields(i)`` (another v2 ``ShardDataset``, or any dict-of-blobs
+    provider) keeps all its fields (``fields=`` selects a subset); a plain
+    one-blob source packs its payload into a single column named by
+    ``fields=("name",)`` (default ``"data"``).  The manifest gains
+    ``"format_version"``, the field schema, and per-field ``sample0``
+    metadata, so a v1→v2 migration is one ``pack`` call and projection
+    works end to end on the result.
     """
     if samples_per_shard < 1:
         raise ValueError("samples_per_shard must be >= 1")
+    if format_version not in (1, 2):
+        raise ValueError(f"format_version must be 1 or 2, got {format_version}")
+    if fields is not None and format_version != 2:
+        raise TypeError("fields= only applies to format_version=2 (columnar)")
+    columnar = format_version == 2
+    # a source provides fields if it has read_fields AND is not itself a
+    # one-blob ShardDataset (v1 datasets carry the method but it raises)
+    reads_fields = (
+        columnar
+        and callable(getattr(dataset, "read_fields", None))
+        and getattr(dataset, "schema_fields", ...) is not None
+    )
+    field_names: tuple[str, ...] | None = tuple(fields) if fields else None
+    if columnar and not reads_fields and field_names is not None and len(field_names) > 1:
+        raise TypeError(
+            f"source has no read_fields — its one blob per sample cannot "
+            f"split into {list(field_names)}; name at most one field"
+        )
     out_dir = pathlib.Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
     shards: list[dict] = []
     sample0: dict | None = None
-    writer: ShardWriter | None = None
+    writer: ShardWriter | ShardWriterV2 | None = None
 
     def roll() -> None:
         nonlocal writer
@@ -371,19 +519,36 @@ def pack(
     try:
         for i in range(len(dataset)):
             if writer is None:
-                writer = ShardWriter(out_dir / f"{prefix}-{len(shards):05d}.rpshard")
-            data = dataset.read_bytes(i)
+                path = out_dir / f"{prefix}-{len(shards):05d}.rpshard"
+                writer = (
+                    ShardWriterV2(path, fields=field_names)
+                    if columnar
+                    else ShardWriter(path)
+                )
+            if reads_fields:
+                sample = {
+                    k: bytes(v)
+                    for k, v in dataset.read_fields(i, field_names).items()
+                }
+                if field_names is None:
+                    field_names = tuple(sample)
+            else:
+                data = dataset.read_bytes(i)
+                if columnar:
+                    if field_names is None:
+                        field_names = ("data",)
+                    sample = {field_names[0]: data}
             if sample0 is None:
                 # record sample 0's layout so loaders can sniff dtype/shape
                 # from the manifest alone (a remote dataset would otherwise
-                # download a whole shard just to peek at one header);
-                # samples that are not codec blobs simply leave the field out
-                try:
-                    dtype, shape, _ = parse_header(data)
-                    sample0 = {"dtype": dtype.name, "shape": list(shape)}
-                except Exception:
-                    sample0 = {}
-            writer.add(data)
+                # download a whole shard just to peek at one header)
+                if columnar:
+                    sample0 = {
+                        "fields": {k: _sniff_meta(v) for k, v in sample.items()}
+                    }
+                else:
+                    sample0 = _sniff_meta(data)
+            writer.add(sample if columnar else data)
             if writer.n_samples >= samples_per_shard or (
                 max_shard_bytes is not None and writer.payload_bytes >= max_shard_bytes
             ):
@@ -396,5 +561,11 @@ def pack(
             writer.abort()
             writer.path.unlink(missing_ok=True)
         raise
-    write_manifest(out_dir, shards, {"sample0": sample0} if sample0 else None)
+    extra: dict = {}
+    if columnar:
+        extra["format_version"] = 2
+        extra["fields"] = list(field_names or ())
+    if sample0:
+        extra["sample0"] = sample0
+    write_manifest(out_dir, shards, extra or None)
     return ShardDataset(out_dir)

@@ -52,6 +52,13 @@ Sparse→full promotion (``prefetch.py``) closes the loop: a sparse entry
 that demand-fetches past ``promote_threshold`` upgrades to a whole-shard
 disk entry — which this server can then serve whole to every other rank.
 
+Columnar (format v2) shards need no special casing here: ranged reads are
+absolute file offsets whatever the format, so a peer running a projected
+read asks for **column regions** and this server answers them from full
+entries or resident sparse spans exactly as it answers v1 sample ranges —
+a rank that only ever fetched the ``image`` column serves those column
+spans (plus the re-serialized header/column index) to its peers.
+
 ``testing.ShardHTTPServer`` remains the *origin* fixture (serving a shard
 directory); this module is the production peer tier grown out of it.
 """
@@ -72,7 +79,7 @@ from concurrent.futures import wait as futures_wait
 from ...core import trace as _trace
 from ...core.metrics import CONTENT_TYPE_LATEST as _METRICS_CONTENT_TYPE
 from .dataset import validate_shard_name
-from .format import ShardReader
+from .format import MappedShardReader
 from .sources import HttpShardSource, RangeNotSupported, SourceUnavailable
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
@@ -150,7 +157,7 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
             self._miss("unavailable")
 
     def _serve_whole(self, reader) -> None:
-        if not isinstance(reader, ShardReader):
+        if not isinstance(reader, MappedShardReader):
             # sparse entries cannot answer a whole-shard GET (only the
             # origin holds the full payload until promotion lands)
             self._miss("sparse")
@@ -167,7 +174,7 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
             return
         total = (
             reader.nbytes
-            if isinstance(reader, ShardReader)
+            if isinstance(reader, MappedShardReader)
             else reader.index.total_bytes
         )
         start = int(m.group(1))

@@ -56,6 +56,19 @@ surfaced by the source as ``RangeNotSupported`` carrying the body) takes
 the same install path: the body that already crossed the wire becomes the
 disk entry — exactly one wire fetch, never download-slice-discard-refetch.
 
+Projection pushdown (columnar v2 shards)
+----------------------------------------
+On a columnar shard (format v2, see ``format.py``) the hints can carry a
+**field projection** too (``schedule(name, samples=..., fields=("image",))``,
+wired from ``ShardDataset(fields=...)``): the index-first decision then
+counts only the requested columns' bytes, and the sparse entry coalesces
+ranges **per requested column only** — the caption/metadata columns of an
+image-only read never cross the wire.  ``bytes_skipped`` accounts the
+payload bytes projection avoided fetching (hinted samples' non-requested
+columns), and ``fields_requested`` counts the distinct field names hinted
+so far; both feed the dashboard.  The per-(field, sample) crc keeps the
+corruption contract: a bad cell is a hole in one field of one sample.
+
 Tier composition: with ``peer.TieredSource`` as the source, every fetch
 here first consults warm peer ranks and only then the retrying origin —
 see ``peer.py`` for the full origin → retry → peers → prefetcher stack.
@@ -102,10 +115,16 @@ from ...core import trace as _trace
 from .dataset import MANIFEST_NAME, validate_shard_name
 from .format import (
     ENTRY_SIZE,
+    FORMAT_VERSION_V2,
     HEADER_SIZE,
+    INDEX_PREAMBLE_SIZE,
+    MappedShardReader,
     ShardCorruption,
     ShardIndex,
+    ShardIndexV2,
     ShardReader,
+    open_shard_reader,
+    parse_index_preamble,
     parse_shard_header,
 )
 from .sources import RangeNotSupported
@@ -217,20 +236,48 @@ class SparseShardReader:
     them alive, mirroring the mmap/unlink contract of the on-disk cache.
     Growth is reported to the owning cache through ``_on_grow(delta)`` so
     ``bytes_cached`` tracks partial shards accurately.
+
+    Spans are absolute file offsets, so the machinery is format-agnostic:
+    over a columnar (v2) ``ShardIndexV2`` the same reader serves
+    ``read_field``/``read_fields``, and a ``fields=`` projection restricts
+    which columns a sample's ranges cover — ``ensure``/``missing`` and the
+    coalescer then touch only the projected columns' byte ranges.
     """
 
-    def __init__(self, name: str, index: ShardIndex, range_fetch, *, coalesce_gap: int = 1 << 16):
+    def __init__(
+        self,
+        name: str,
+        index: ShardIndex | ShardIndexV2,
+        range_fetch,
+        *,
+        coalesce_gap: int = 1 << 16,
+        fields: tuple[str, ...] | None = None,
+    ):
         self.name = name
         self.index = index
         self._range_fetch = range_fetch  # (start, length) -> bytes
         self.coalesce_gap = coalesce_gap
+        self._names = getattr(index, "field_names", None)  # None ⇒ v1
+        if self._names is None:
+            if fields is not None:
+                raise TypeError(f"{name}: fields= projection needs a columnar index")
+            self.fields = None
+            self._proj: tuple[str, ...] | None = None
+            self._verified = np.zeros(index.n_samples, dtype=bool)  # crc memo
+        else:
+            # projection resolved once (unknown names raise here, loudly)
+            self.fields = tuple(fields) if fields is not None else None
+            self._proj = index.resolve_fields(self.fields)
+            # per-(field, sample) crc memo, one bitset per column
+            self._verified = {
+                f: np.zeros(index.n_samples, dtype=bool) for f in self._names
+            }
         self._lock = threading.Lock()
         self._starts: list[int] = []  # sorted span start offsets
         self._spans: list[bytes] = []  # parallel span payloads
         self._bytes_held = 0
         self._closed = False
         self._on_grow = None  # installed by the owning ShardPrefetcher
-        self._verified = np.zeros(index.n_samples, dtype=bool)  # crc memo
         #: wire bytes pulled by demand ``read()`` misses (NOT hinted ensure
         #: top-ups) — the mis-prediction signal sparse→full promotion watches
         self.demand_bytes = 0
@@ -242,6 +289,12 @@ class SparseShardReader:
 
     def __len__(self) -> int:
         return self.index.n_samples
+
+    @property
+    def field_names(self) -> tuple[str, ...] | None:
+        """Columnar field names, or None over a v1 index — the same
+        dispatch marker the full readers carry."""
+        return self._names
 
     @property
     def offsets(self):
@@ -299,17 +352,29 @@ class SparseShardReader:
         self._bytes_held += len(data) - removed
         return len(data) - removed
 
-    def _intervals(self, samples: list[int]) -> list[tuple[int, int]]:
-        """Coalesce sorted sample indices into (start, length) fetch runs.
+    def _sample_ranges(self, s: int) -> list[tuple[int, int]]:
+        """Absolute (offset, length) byte ranges sample ``s`` occupies —
+        one range over a v1 index, one per **projected** column over a
+        columnar index (the projection pushdown point: non-requested
+        columns contribute no ranges, so they are never fetched)."""
+        if self._proj is not None:
+            return [self.index.locate(f, s)[:2] for f in self._proj]
+        return [(int(self.index.offsets[s]), int(self.index.lengths[s]))]
 
-        Adjacent samples are byte-adjacent in the packed format, so a run
-        of hinted samples becomes one ranged request; gaps up to
-        ``coalesce_gap`` are fetched too (one round trip beats two)."""
-        offs, lens = self.index.offsets, self.index.lengths
-        out: list[list[int]] = []
+    def _intervals(self, samples: list[int]) -> list[tuple[int, int]]:
+        """Coalesce sample indices into (start, length) fetch runs.
+
+        Adjacent samples are byte-adjacent within a column (and v1 shards
+        are one column), so a run of hinted samples becomes one ranged
+        request per touched column; gaps up to ``coalesce_gap`` are
+        fetched too (one round trip beats two)."""
+        ranges: list[tuple[int, int]] = []
         for s in samples:
-            a = int(offs[s])
-            b = a + int(lens[s])
+            ranges.extend(self._sample_ranges(s))
+        ranges.sort()
+        out: list[list[int]] = []
+        for a, ln in ranges:
+            b = a + ln
             if out and a - out[-1][1] <= self.coalesce_gap:
                 out[-1][1] = max(out[-1][1], b)
             else:
@@ -317,14 +382,17 @@ class SparseShardReader:
         return [(a, b - a) for a, b in out]
 
     def missing(self, samples) -> list[int]:
-        """Hinted samples not yet resident (sorted, deduped, in-range)."""
-        offs, lens = self.index.offsets, self.index.lengths
+        """Hinted samples not yet fully resident under the projection
+        (sorted, deduped, in-range)."""
         wanted = sorted({int(s) for s in samples if 0 <= int(s) < self.n_samples})
         with self._lock:
             return [
                 s
                 for s in wanted
-                if self._find_locked(int(offs[s]), int(lens[s])) is None
+                if any(
+                    ln and self._find_locked(off, ln) is None
+                    for off, ln in self._sample_ranges(s)
+                )
             ]
 
     def ensure(self, samples) -> int:
@@ -344,16 +412,18 @@ class SparseShardReader:
             self._on_grow(grown)
         return grown
 
-    def read(self, i: int, *, verify: bool = True) -> memoryview:
-        if not 0 <= i < self.n_samples:
-            raise IndexError(f"sample {i} out of range [0, {self.n_samples})")
-        off, ln = int(self.index.offsets[i]), int(self.index.lengths[i])
+    def _read_range(self, off: int, ln: int) -> memoryview:
+        """Resident bytes for ``[off, off+ln)``, demand-fetching exactly
+        that range on a miss (the span race/growth bookkeeping both read
+        paths share)."""
+        if ln == 0:
+            return memoryview(b"")
         with self._lock:
             if self._closed:
                 raise RuntimeError(f"SparseShardReader({self.name}) is closed")
             view = self._find_locked(off, ln)
         if view is None:
-            data = self._range_fetch(off, ln)  # demand: exactly this sample
+            data = self._range_fetch(off, ln)  # demand: exactly this range
             grown = 0
             with self._lock:
                 if self._closed:
@@ -368,6 +438,18 @@ class SparseShardReader:
                     view = self._find_locked(off, ln)  # nesting-free: found
             if grown and self._on_grow is not None:
                 self._on_grow(grown)
+        return view
+
+    def read(self, i: int, *, verify: bool = True) -> memoryview:
+        if self._names is not None:
+            raise TypeError(
+                f"{self.name}: columnar sparse entry — read one-blob samples "
+                "via read_field/read_fields"
+            )
+        if not 0 <= i < self.n_samples:
+            raise IndexError(f"sample {i} out of range [0, {self.n_samples})")
+        off, ln = int(self.index.offsets[i]), int(self.index.lengths[i])
+        view = self._read_range(off, ln)
         # crc memo (see ShardReader.read): spans are immutable once resident,
         # so one verification covers every later read; a mismatch is never
         # memoized, keeping the per-sample-hole corruption semantics
@@ -376,6 +458,36 @@ class SparseShardReader:
                 raise ShardCorruption(f"{self.name}: sample {i} failed crc32 check")
             self._verified[i] = True
         return view
+
+    def read_field(self, i: int, field: str, *, verify: bool = True) -> memoryview:
+        """Sample ``i``'s ``field`` cell (columnar indexes only), demand-
+        fetching exactly that cell's range on a miss."""
+        if self._names is None:
+            raise TypeError(f"{self.name}: v1 sparse entry has no fields")
+        off, ln, crc = self.index.locate(field, i)
+        view = self._read_range(off, ln)
+        bits = self._verified[field]
+        if verify and not bits[i]:
+            if zlib.crc32(view) != crc:
+                raise ShardCorruption(
+                    f"{self.name}: sample {i} field {field!r} failed crc32 check"
+                )
+            bits[i] = True
+        return view
+
+    def read_fields(
+        self, i: int, fields=None, *, verify: bool = True
+    ) -> dict[str, memoryview]:
+        """Projected read over the sparse entry: ``{field: memoryview}``.
+        ``fields=None`` means this entry's own projection."""
+        if self._names is None:
+            raise TypeError(f"{self.name}: v1 sparse entry has no fields")
+        if fields is None:
+            fields = self.fields
+        return {
+            f: self.read_field(i, f, verify=verify)
+            for f in self.index.resolve_fields(fields)
+        }
 
     def raw(self, start: int, length: int) -> memoryview | None:
         """Resident raw shard bytes ``[start, start+length)`` or ``None``
@@ -490,6 +602,8 @@ class ShardPrefetcher:
         self.corrupt_samples = 0  # found by install-time verification
         self.bytes_cached = 0
         self.bytes_fetched = 0  # wire bytes: payloads + indexes + ranges
+        self.bytes_skipped = 0  # payload bytes projection avoided fetching
+        self._fields_requested: set[str] = set()  # distinct projected fields
         self.index_fetches = 0
         self.range_fetches = 0
         self.fetch_time = 0.0
@@ -512,7 +626,7 @@ class ShardPrefetcher:
             if self._closed:
                 raise RuntimeError("ShardPrefetcher is closed")
             entry = self._cached.get(name)
-        if entry is not None and isinstance(entry[0], ShardReader):
+        if entry is not None and isinstance(entry[0], MappedShardReader):
             # A full copy landed since this sparse reader was built
             # (promotion, or a Range-ignoring origin below): serve the range
             # locally — zero wire bytes, so no fetch counters move.
@@ -559,34 +673,53 @@ class ShardPrefetcher:
             )
         return data
 
-    def _get_index(self, name: str) -> ShardIndex:
-        """Header + index region of ``name`` via two small ranged reads.
+    def _get_index(self, name: str) -> ShardIndex | ShardIndexV2:
+        """Header + index region of ``name`` via small ranged reads — two
+        for v1 (header, then the fixed-size index), three for columnar v2
+        (header, the 16-byte index preamble that says how long the column
+        index is, then the rest of it).
 
-        Cached in memory (indexes are 16 B/sample — thousands of shards fit
-        in a few MB).  Concurrent first fetches of one index may duplicate
-        the ~KB download; the setdefault keeps exactly one parse."""
+        Cached in memory (indexes are tens of bytes/sample — thousands of
+        shards fit in a few MB).  Concurrent first fetches of one index may
+        duplicate the ~KB download; the setdefault keeps exactly one parse."""
         with self._lock:
             idx = self._indexes.get(name)
         if idx is not None:
             return idx
         header = self.source.fetch_range(name, 0, HEADER_SIZE)
-        _version, n, index_off, _payload_off = parse_shard_header(header, name)
-        index_bytes = self.source.fetch_range(name, index_off, n * ENTRY_SIZE)
-        idx = ShardIndex.parse(header, index_bytes, name)
+        version, n, index_off, _payload_off = parse_shard_header(header, name)
+        if version >= FORMAT_VERSION_V2:
+            preamble = self.source.fetch_range(name, index_off, INDEX_PREAMBLE_SIZE)
+            index_len, _n_fields = parse_index_preamble(preamble, name)
+            rest = (
+                self.source.fetch_range(
+                    name,
+                    index_off + INDEX_PREAMBLE_SIZE,
+                    index_len - INDEX_PREAMBLE_SIZE,
+                )
+                if index_len > INDEX_PREAMBLE_SIZE
+                else b""
+            )
+            index_bytes = preamble + rest
+            idx = ShardIndexV2.parse(header, index_bytes, name)
+        else:
+            index_bytes = self.source.fetch_range(name, index_off, n * ENTRY_SIZE)
+            idx = ShardIndex.parse(header, index_bytes, name)
         with self._lock:
             self.index_fetches += 1
             self.bytes_fetched += len(header) + len(index_bytes)
             return self._indexes.setdefault(name, idx)
 
-    def _fetch_full(self, name: str) -> ShardReader:
+    def _fetch_full(self, name: str) -> MappedShardReader:
         """Download one whole shard, persist it, open a reader."""
         data = self.source.fetch(name)
         with self._lock:
             self.bytes_fetched += len(data)
         return self._persist(name, data)
 
-    def _persist(self, name: str, data: bytes) -> ShardReader:
-        """Stage ``data`` durably under the cache dir and open a reader."""
+    def _persist(self, name: str, data: bytes) -> MappedShardReader:
+        """Stage ``data`` durably under the cache dir and open a reader
+        (format-version dispatched: v1 → ShardReader, v2 → ShardReaderV2)."""
         path = self.cache_dir / name
         # unique temp per fetch: two racing fetches of one shard must not
         # share a staging file (the loser's replace() would find it gone)
@@ -598,7 +731,7 @@ class ShardPrefetcher:
             # replace() must not leave a torn-but-magic-valid cache file
             os.fsync(f.fileno())
         tmp.replace(path)
-        reader = ShardReader(path)
+        reader = open_shard_reader(path)
         if self.verify_on_install:
             # Coalesced crc: one whole-payload pass NOW, on this fetch
             # thread (pool worker or demand caller — never the event loop),
@@ -620,14 +753,23 @@ class ShardPrefetcher:
                     self.corrupt_samples += bad
         return reader
 
-    def _fetch_entry(self, name: str, samples=None) -> ShardReader | SparseShardReader:
+    def _fetch_entry(
+        self, name: str, samples=None, fields=None
+    ) -> MappedShardReader | SparseShardReader:
         """Fetch ``name`` honoring the index-first policy (any thread).
 
         With sample hints and a range-capable source: pull the index first,
         and if the hinted samples cover < ``sparse_threshold`` of the
-        payload, fetch only their coalesced ranges (sparse entry).
-        Otherwise — no hints, no ranges, or the window wants most of the
-        shard anyway — fetch the whole shard to disk."""
+        payload, fetch only their coalesced ranges (sparse entry).  On a
+        columnar shard a ``fields`` projection narrows both the decision
+        and the ranges to the requested columns — the avoided column bytes
+        are credited to ``bytes_skipped``.  A ``fields`` projection with NO
+        sample hints (a demand read through ``ShardDataset(fields=...)``
+        whose schedule hint was dropped) still goes index-first with every
+        sample wanted: fetching just the projected columns of the whole
+        shard beats fetching the whole shard.  Otherwise — no hints, no
+        ranges, or the window wants most of the shard anyway — fetch the
+        whole shard to disk."""
         tracer = _trace.get_tracer()
         t0 = time.monotonic()
         try:
@@ -635,7 +777,7 @@ class ShardPrefetcher:
             # ignore a Range header — from then on "ranged" reads move whole
             # bodies, so sparse fetch would COST bytes, not save them
             if (
-                samples
+                (samples or fields)
                 and self.index_first
                 and getattr(self.source, "range_supported", True)
             ):
@@ -649,10 +791,21 @@ class ShardPrefetcher:
                     with self._lock:
                         self.bytes_fetched += len(e.body)
                     return self._persist(name, e.body)
-                wanted = sorted(
-                    {int(s) for s in samples if 0 <= int(s) < idx.n_samples}
-                )
-                wanted_bytes = sum(int(idx.lengths[s]) for s in wanted)
+                if samples:
+                    wanted = sorted(
+                        {int(s) for s in samples if 0 <= int(s) < idx.n_samples}
+                    )
+                else:  # fields-only: every sample, projected columns only
+                    wanted = list(range(idx.n_samples))
+                columnar = hasattr(idx, "samples_nbytes")  # ShardIndexV2
+                proj = tuple(fields) if (columnar and fields) else None
+                if columnar:
+                    # projection-aware cost: only the requested columns'
+                    # bytes count (unknown field names raise KeyError here
+                    # — a typo'd projection fails the fetch loudly)
+                    wanted_bytes = idx.samples_nbytes(wanted, proj)
+                else:
+                    wanted_bytes = sum(int(idx.lengths[s]) for s in wanted)
                 if wanted and wanted_bytes <= self.sparse_threshold * max(
                     idx.payload_bytes, 1
                 ):
@@ -661,8 +814,14 @@ class ShardPrefetcher:
                         idx,
                         functools.partial(self._range_fetch, name),
                         coalesce_gap=self.coalesce_gap,
+                        fields=proj,
                     )
                     reader.ensure(wanted)
+                    if proj:
+                        skipped = idx.samples_nbytes(wanted, None) - wanted_bytes
+                        if skipped > 0:
+                            with self._lock:
+                                self.bytes_skipped += skipped
                     return reader
             return self._fetch_full(name)
         finally:
@@ -760,7 +919,9 @@ class ShardPrefetcher:
                 self._pool.submit(self._promote_task, name, reader)
         self._unlink_evicted(evicted)
 
-    def _replace_with_full(self, name: str, reader: ShardReader, *, promotion: bool = False) -> None:
+    def _replace_with_full(
+        self, name: str, reader: MappedShardReader, *, promotion: bool = False
+    ) -> None:
         """Install a freshly-persisted full reader over ``name``'s current
         entry (typically its sparse predecessor).  The displaced sparse
         reader is NOT closed — the caller is often one of its in-flight
@@ -772,7 +933,7 @@ class ShardPrefetcher:
                 # the caller (reclaimed by refcount once dropped)
                 return
             entry = self._cached.get(name)
-            if entry is not None and isinstance(entry[0], ShardReader):
+            if entry is not None and isinstance(entry[0], MappedShardReader):
                 reader.close()  # lost the race to another full copy
                 return
             self.bytes_cached += reader.nbytes - (entry[1] if entry else 0)
@@ -807,9 +968,9 @@ class ShardPrefetcher:
                 self._promoting.discard(name)
                 self._bg_inflight -= 1
 
-    def _fetch_and_install(self, name: str, samples=None):
+    def _fetch_and_install(self, name: str, samples=None, fields=None):
         try:
-            reader = self._fetch_entry(name, samples)
+            reader = self._fetch_entry(name, samples, fields)
             self._install(name, reader)
             with self._lock:
                 installed = self._cached.get(name)
@@ -823,7 +984,21 @@ class ShardPrefetcher:
 
     def _ensure_task(self, name: str, reader: SparseShardReader, samples) -> None:
         try:
+            # projection credit for the top-up: the gap samples' fetch pulls
+            # only the projected columns, so the other columns' bytes are
+            # skipped wire traffic too (same accounting as the first fetch)
+            skipped = 0
+            idx = reader.index
+            if reader.fields is not None and hasattr(idx, "samples_nbytes"):
+                gap = reader.missing(samples)
+                if gap:
+                    skipped = idx.samples_nbytes(gap, None) - idx.samples_nbytes(
+                        gap, reader.fields
+                    )
             reader.ensure(samples)
+            if skipped > 0:
+                with self._lock:
+                    self.bytes_skipped += skipped
         except Exception:
             pass  # advisory top-up: demand reads cover whatever is missing
         finally:
@@ -831,7 +1006,7 @@ class ShardPrefetcher:
                 self._ensuring.discard(name)
                 self._bg_inflight -= 1
 
-    def schedule(self, name: str, samples=None) -> bool:
+    def schedule(self, name: str, samples=None, fields=None) -> bool:
         """Start a background fetch of ``name``; False if dropped (cached,
         already in flight, saturated, or closed).  Saturation counts only
         *background* fetches: a demand fetch runs on its caller's thread,
@@ -842,8 +1017,12 @@ class ShardPrefetcher:
         ``samples`` (shard-local indices the caller will read) feeds the
         index-first sparse/full decision; for an already-cached *sparse*
         entry it instead schedules a background top-up of any hinted
-        samples not yet resident."""
+        samples not yet resident.  ``fields`` (columnar shards) projects
+        the fetch onto the named columns only."""
         validate_shard_name(name)
+        if fields:
+            with self._lock:
+                self._fields_requested.update(fields)
         with self._lock:
             if self._closed:
                 return False
@@ -852,7 +1031,9 @@ class ShardPrefetcher:
                 if name in self._inflight or self._bg_inflight >= self.max_inflight:
                     return False
                 self._bg_inflight += 1
-                fut = self._pool.submit(self._fetch_and_install, name, samples)
+                fut = self._pool.submit(
+                    self._fetch_and_install, name, samples, fields
+                )
                 self._inflight[name] = fut
                 return True
             reader = entry[0]
@@ -880,15 +1061,20 @@ class ShardPrefetcher:
             self._pool.submit(self._ensure_task, name, reader, samples)
         return True
 
-    def reader(self, name: str, samples=None) -> ShardReader | SparseShardReader:
+    def reader(
+        self, name: str, samples=None, fields=None
+    ) -> MappedShardReader | SparseShardReader:
         """Blocking get: the reader for ``name``, fetching on miss.
 
         Concurrent requests for one shard share a single download: the
         first requester (or an earlier ``schedule``) owns the fetch, later
-        ones join its future.  ``samples`` hints behave as in
-        ``schedule`` (they only matter on a miss).
+        ones join its future.  ``samples`` and ``fields`` hints behave as
+        in ``schedule`` (they only matter on a miss).
         """
         my_fut: Future | None = None
+        if fields:
+            with self._lock:
+                self._fields_requested.update(fields)
         with self._lock:
             if self._closed:
                 raise RuntimeError("ShardPrefetcher is closed")
@@ -920,7 +1106,7 @@ class ShardPrefetcher:
                 # surface the documented shutdown error, not pool internals
                 raise RuntimeError("ShardPrefetcher is closed") from None
         try:
-            reader = self._fetch_entry(name, samples)
+            reader = self._fetch_entry(name, samples, fields)
             self._install(name, reader)
             with self._lock:
                 installed = self._cached.get(name)
@@ -965,6 +1151,8 @@ class ShardPrefetcher:
                 "prefetch_depth": self._bg_inflight,
                 "fetch_time": self.fetch_time,
                 "bytes_fetched": self.bytes_fetched,
+                "bytes_skipped": self.bytes_skipped,
+                "fields_requested": len(self._fields_requested),
                 "index_fetches": self.index_fetches,
                 "range_fetches": self.range_fetches,
                 "promotions": self.promotions,

@@ -10,7 +10,11 @@ The prefetcher (``prefetch.py``) talks to storage through two methods:
     source that provides it unlocks *index-first fetch*: the prefetcher
     pulls a shard's 32-byte header + index region first and can then fetch
     only the sample ranges a sampler window actually needs, instead of
-    committing to the whole payload.
+    committing to the whole payload.  Ranges are plain absolute byte
+    offsets, so columnar (format v2) projection rides the same method for
+    free: a projected fetch issues ranged GETs that land inside the
+    requested **column regions** only — no backend changes needed for a
+    field-aware read path.
 
 Error contract: ``FileNotFoundError`` means the object does not exist
 (never retried); ``SourceUnavailable`` (an ``OSError``) means the attempt

@@ -651,3 +651,351 @@ def test_verify_on_install_opt_out(tmp_path):
     reader = pf.reader(rds.shard_names[0])
     assert not reader._verified.any()  # no coalesced pass ran
     rds.close()
+
+
+# ---------------------------------------------------------------------------
+# format v2: columnar fields + projection pushdown
+# ---------------------------------------------------------------------------
+import json
+import struct
+
+from repro.data.shards import (
+    ShardIndexV2,
+    ShardReaderV2,
+    ShardWriterV2,
+    open_shard_reader,
+)
+from repro.data.shards.format import (
+    INDEX_PREAMBLE_SIZE,
+    _FIELD_HEAD_SIZE,
+    parse_shard_header,
+)
+
+
+def _v2_shard(tmp_path, n=6):
+    """One columnar shard: fixed-width ``image`` + variable ``caption``."""
+    rng = np.random.default_rng(0)
+    samples = [
+        {
+            "image": rng.integers(0, 256, 64, dtype=np.uint8).tobytes(),
+            "caption": bytes(rng.integers(0, 256, 3 + j, dtype=np.uint8)),
+        }
+        for j in range(n)
+    ]
+    path = tmp_path / "v2.rpshard"
+    with ShardWriterV2(path) as w:
+        for j, s in enumerate(samples):
+            assert w.add(s) == j
+    return path, samples
+
+
+def test_v2_roundtrip_fixed_and_var_columns(tmp_path):
+    path, samples = _v2_shard(tmp_path)
+    with ShardReaderV2(path) as r:
+        assert r.field_names == ("image", "caption")
+        assert r.index.column("image").fixed  # equal lengths auto-vectorize
+        assert not r.index.column("caption").fixed
+        for j, s in enumerate(samples):
+            got = r.read_fields(j)
+            assert {k: bytes(v) for k, v in got.items()} == s
+            assert got["image"].obj is got["caption"].obj  # zero-copy mmap views
+        # vectorized chunk read: one contiguous view over a sample run
+        chunk = r.read_field_chunk("image", 1, 3)
+        assert isinstance(chunk, memoryview)
+        assert bytes(chunk) == b"".join(s["image"] for s in samples[1:4])
+        with pytest.raises(TypeError, match="variable-width"):
+            r.read_field_chunk("caption", 0, 2)
+        with pytest.raises(IndexError):
+            r.read_field_chunk("image", 4, 5)
+
+
+def test_open_shard_reader_dispatches_on_version(tmp_path):
+    v2_path, _ = _v2_shard(tmp_path)
+    v1_path = tmp_path / "v1.rpshard"
+    with ShardWriter(v1_path) as w:
+        w.add(b"blob")
+    r1, r2 = open_shard_reader(v1_path), open_shard_reader(v2_path)
+    try:
+        assert type(r1) is ShardReader
+        assert type(r2) is ShardReaderV2
+    finally:
+        r1.close()
+        r2.close()
+
+
+def test_wrong_version_reader_fails_loudly(tmp_path):
+    """A v2 shard handed to the v1 reader (and vice versa) must refuse with
+    an error naming the right entry point, never misparse."""
+    v2_path, _ = _v2_shard(tmp_path)
+    v1_path = tmp_path / "v1.rpshard"
+    with ShardWriter(v1_path) as w:
+        w.add(b"blob")
+    with pytest.raises(ShardCorruption, match="not a v1 shard"):
+        ShardReader(v2_path)
+    with pytest.raises(ShardCorruption, match="not a v2 shard"):
+        ShardReaderV2(v1_path)
+
+
+def test_v2_truncated_column_index_rejected(tmp_path):
+    path, _ = _v2_shard(tmp_path)
+    raw = path.read_bytes()
+    _, _, index_off, _ = parse_shard_header(raw[:32], "t")
+    # file cut mid-preamble
+    cut = tmp_path / "cut.rpshard"
+    cut.write_bytes(raw[: index_off + 8])
+    with pytest.raises(ShardCorruption, match="preamble extends past"):
+        ShardReaderV2(cut)
+    # preamble claims a longer index region than the file holds
+    grown = bytearray(raw)
+    struct.pack_into("<Q", grown, index_off, len(raw))
+    (tmp_path / "grown.rpshard").write_bytes(grown)
+    with pytest.raises(ShardCorruption, match="region extends past"):
+        ShardReaderV2(tmp_path / "grown.rpshard")
+    # preamble claims a region too short to hold its own field table
+    shrunk = bytearray(raw)
+    struct.pack_into("<Q", shrunk, index_off, INDEX_PREAMBLE_SIZE + 4)
+    (tmp_path / "shrunk.rpshard").write_bytes(shrunk)
+    with pytest.raises(ShardCorruption, match="field table"):
+        ShardReaderV2(tmp_path / "shrunk.rpshard")
+
+
+def test_v2_overlapping_column_regions_rejected(tmp_path):
+    """A column whose region reaches into a sibling's bytes would let one
+    flipped region corrupt two fields while each column's crcs 'verify'."""
+    path, _ = _v2_shard(tmp_path)
+    raw = bytearray(path.read_bytes())
+    _, _, index_off, _ = parse_shard_header(bytes(raw[:32]), "t")
+    # second field-table entry ("caption"): after the preamble and the
+    # "image" entry (fixed head + name bytes)
+    e1 = index_off + INDEX_PREAMBLE_SIZE + _FIELD_HEAD_SIZE + len(b"image")
+    (col_off,) = struct.unpack_from("<Q", raw, e1 + 6)
+    (col_len,) = struct.unpack_from("<Q", raw, e1 + 14)
+    struct.pack_into("<Q", raw, e1 + 6, col_off - 1)  # reach into "image"
+    struct.pack_into("<Q", raw, e1 + 14, col_len + 1)
+    path.write_bytes(raw)
+    with pytest.raises(ShardCorruption, match="overlapping column regions"):
+        ShardReaderV2(path)
+
+
+def test_v2_unknown_field_raises(tmp_path):
+    path, _ = _v2_shard(tmp_path)
+    with ShardReaderV2(path) as r:
+        with pytest.raises(KeyError, match="nope"):
+            r.read_fields(0, ("nope",))
+        with pytest.raises(KeyError):
+            r.read_field(0, "nope")
+
+
+def test_v2_per_column_crc_is_a_per_sample_per_field_hole(tmp_path):
+    path, samples = _v2_shard(tmp_path)
+    with ShardReaderV2(path) as r:
+        off, ln, _ = r.index.locate("caption", 2)
+    raw = bytearray(path.read_bytes())
+    raw[off + 1] ^= 0xFF
+    path.write_bytes(raw)
+    r = ShardReaderV2(path)
+    assert r.verify_all() == 1  # exactly one corrupt cell
+    # sibling field of the same sample and sibling samples are untouched
+    assert bytes(r.read_field(2, "image")) == samples[2]["image"]
+    assert bytes(r.read_field(1, "caption")) == samples[1]["caption"]
+    for _ in range(2):  # never memoized: raises on every read
+        with pytest.raises(ShardCorruption, match="field 'caption'"):
+            r.read_field(2, "caption")
+    r.read_field(2, "caption", verify=False)  # opt-out skips the crc
+    r.close()
+
+
+def test_pack_v2_sharddataset_parity_and_projection(tmp_path):
+    ds = SyntheticImageDataset.materialize(tmp_path / "src", 18, hw=(8, 8), seed=4)
+    v2 = pack(
+        ds, tmp_path / "v2", samples_per_shard=5, format_version=2, fields=("image",)
+    )
+    assert v2.format_version == 2
+    assert v2.schema_fields == ("image",)
+    man = json.loads((tmp_path / "v2" / "manifest.json").read_text())
+    assert man["format_version"] == 2 and man["fields"] == ["image"]
+    assert v2.sample_meta == (np.dtype(np.uint8), (8, 8, 3))  # via field_meta
+    for i in range(18):
+        np.testing.assert_array_equal(v2[i], ds[i])
+        assert bytes(v2.read_bytes(i)) == ds.read_bytes(i)
+    proj = ShardDataset(tmp_path / "v2", fields=("image",))
+    np.testing.assert_array_equal(proj[3], ds[3])
+    with pytest.raises(ValueError, match="nope"):
+        ShardDataset(tmp_path / "v2", fields=("nope",))
+    v1 = pack(ds, tmp_path / "v1", samples_per_shard=5)
+    with pytest.raises(TypeError, match="columnar"):
+        ShardDataset(tmp_path / "v1", fields=("image",))
+    for d in (v2, proj, v1):
+        d.close()
+
+
+def test_pack_cli_v1_to_v2_migration_parity(tmp_path):
+    """Satellite: ``python -m repro.data.shards`` migrates v1→v2 (and back)
+    with per-field byte parity."""
+    from repro.data.shards.__main__ import main
+
+    ds = SyntheticImageDataset.materialize(tmp_path / "src", 12, hw=(8, 8), seed=7)
+    main([str(tmp_path / "src"), str(tmp_path / "v1"), "--samples-per-shard", "5"])
+    main(
+        [
+            str(tmp_path / "v1"),
+            str(tmp_path / "v2"),
+            "--samples-per-shard",
+            "4",
+            "--format-version",
+            "2",
+            "--fields",
+            "image",
+        ]
+    )
+    v1, v2 = ShardDataset(tmp_path / "v1"), ShardDataset(tmp_path / "v2")
+    assert v2.schema_fields == ("image",)
+    for i in range(12):
+        assert bytes(v2.read_fields(i)["image"]) == bytes(v1.read_bytes(i))
+        np.testing.assert_array_equal(v2[i], ds[i])
+    # and back down: v2 → v1 restores plain one-blob shards
+    main([str(tmp_path / "v2"), str(tmp_path / "back"), "--format-version", "1"])
+    back = ShardDataset(tmp_path / "back")
+    assert back.format_version == 1
+    assert bytes(back.read_bytes(5)) == bytes(v1.read_bytes(5))
+    for d in (v1, v2, back):
+        d.close()
+
+
+def _columnar_corpus(tmp_path, n=16, name="shard-00000.rpshard"):
+    """Image-light corpus (image = 25% of payload) for wire-byte tests."""
+    root = tmp_path / "corpus"
+    root.mkdir()
+    with ShardWriterV2(root / name) as w:
+        for j in range(n):
+            w.add(
+                {
+                    "image": bytes([j]) * 2000,
+                    "caption": bytes([j % 251]) * 3000,
+                    "meta": bytes([(j * 7) % 251]) * 3000,
+                }
+            )
+    return root, name
+
+
+def test_v2_projection_fetches_only_requested_columns(tmp_path):
+    """A sparse fetch with ``fields=("image",)`` pulls only the image
+    column's ranges over the wire and accounts the skipped bytes."""
+    from repro.data.shards.sources import HttpShardSource
+    from repro.data.shards.testing import serve_shards
+
+    root, name = _columnar_corpus(tmp_path)
+    wanted = list(range(8))
+    with serve_shards(root) as srv:
+        pf = ShardPrefetcher(
+            HttpShardSource(srv.url), tmp_path / "cache", max_bytes=1 << 30
+        )
+        reader = pf.reader(name, samples=wanted, fields=("image",))
+        assert reader.field_names == ("image", "caption", "meta")
+        for j in wanted:
+            assert bytes(reader.read_field(j, "image")) == bytes([j]) * 2000
+        with pytest.raises(TypeError):
+            reader.read(0)  # one-blob read has no meaning on a v2 shard
+        st = pf.stats()
+        assert st["bytes_skipped"] >= 8 * 6000  # caption+meta never fetched
+        assert st["fields_requested"] == 1
+        with srv.lock:
+            wire = srv.bytes_served
+        # wire bytes ≈ header + column index + 8 image cells — far below
+        # the 8 samples' full 64000 payload bytes
+        assert wire < 8 * 8000 * 0.5
+        pf.close()
+
+
+def test_v2_sparse_entry_serves_column_ranges_to_peers(tmp_path):
+    """A peer whose cache holds a sparse *projected* entry serves exactly
+    the resident column spans (and the re-serialized index); everything
+    else is a structured miss."""
+    from repro.data.shards.peer import PeerMiss, PeerShardServer, PeerShardSource
+    from repro.data.shards.sources import HttpShardSource
+    from repro.data.shards.testing import serve_shards
+
+    root, name = _columnar_corpus(tmp_path)
+    with ShardReaderV2(root / name) as local:
+        img = local.index.locate("image", 3)
+        cap = local.index.locate("caption", 3)
+    with serve_shards(root) as srv:
+        pf = ShardPrefetcher(
+            HttpShardSource(srv.url), tmp_path / "cache", max_bytes=1 << 30
+        )
+        pf.reader(name, samples=list(range(8)), fields=("image",))
+        with PeerShardServer(pf) as peer:
+            ps = PeerShardSource([peer.url])
+            got = ps.fetch_range(name, img[0], img[1])
+            assert got == bytes([3]) * 2000  # resident image cell served
+            with pytest.raises(PeerMiss):
+                ps.fetch_range(name, cap[0], cap[1])  # caption never fetched
+        pf.close()
+
+
+def test_build_image_loader_field_projection(tmp_path):
+    """``build_image_loader(fields=("image",))`` over a multi-field v2
+    dataset decodes only the image column; extra fields ride along unread."""
+
+    class _TwoField:
+        """dict-of-blobs source: encoded image + a caption sidecar."""
+
+        schema_fields = ("image", "caption")
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def __len__(self):
+            return len(self.inner)
+
+        def read_fields(self, i, fields=None):
+            blobs = {
+                "image": self.inner.read_bytes(i),
+                "caption": b"caption-%d" % i,
+            }
+            return {f: blobs[f] for f in (fields or self.schema_fields)}
+
+    ds = SyntheticImageDataset.materialize(tmp_path / "src", 24, hw=(8, 8), seed=9)
+    sds = pack(
+        _TwoField(ds), tmp_path / "packed", samples_per_shard=6, format_version=2
+    )
+    assert sds.schema_fields == ("image", "caption")
+    assert bytes(sds.read_fields(5)["caption"]) == b"caption-5"
+    with pytest.raises(ValueError, match="one field per sample"):
+        build_image_loader(sds, batch_size=4, hw=(8, 8), fields=("image", "caption"))
+    p = build_image_loader(
+        sds,
+        batch_size=6,
+        hw=(8, 8),
+        num_threads=2,
+        fields=("image",),
+        sampler=CheckpointableSampler(len(sds), batch_size=1, shuffle=False),
+    )
+    with p.auto_stop():
+        batches = list(p)
+    assert len(batches) == 4
+    for b in batches:
+        assert np.asarray(b["images"]).shape == (6, 8, 8, 3)
+    sds.close()
+
+
+def test_v2_fields_only_demand_fetch_stays_projected(tmp_path):
+    """A demand read carrying a projection but no sample hints (e.g. its
+    schedule hint was dropped under inflight pressure) still goes
+    index-first and fetches only the projected columns of the shard."""
+    from repro.data.shards.sources import HttpShardSource
+    from repro.data.shards.testing import serve_shards
+
+    root, name = _columnar_corpus(tmp_path)
+    with serve_shards(root) as srv:
+        pf = ShardPrefetcher(
+            HttpShardSource(srv.url), tmp_path / "cache", max_bytes=1 << 30
+        )
+        reader = pf.reader(name, fields=("image",))
+        assert reader.field_names is not None  # sparse columnar entry
+        for j in range(16):
+            assert bytes(reader.read_field(j, "image")) == bytes([j]) * 2000
+        st = pf.stats()
+        assert st["sparse_shards"] == 1
+        assert st["bytes_skipped"] >= 16 * 6000  # caption+meta never fetched
+        pf.close()
