@@ -34,7 +34,7 @@ REGISTRY = [
     ("fig5 loader throughput", "bench_loader_throughput"),
     ("table2 first batch", "bench_first_batch"),
     ("fig6/7 resources", "bench_resources"),
-    ("fig8/9 e2e inference+training", "bench_e2e"),
+    ("fig8/9 e2e inference+training + ViT hot path", "bench_e2e"),
     ("table3 GIL modes", "bench_gil_modes"),
     ("appC video/decord", "bench_video"),
     ("wire format (beyond-paper)", "bench_wire_format"),

@@ -41,6 +41,20 @@ amortizations make the per-item cost O(items/chunk):
   each phase keeps its own ``on_error``/``timeout``, and a failure is
   attributed to the phase that raised.
 
+The hot path ends at the device, and the same amortization now covers the
+last leg.  A **vectorized chunk stage** (``pipe(fn, chunk=N,
+vectorized=True)``) hands the whole drained chunk to ``fn`` as one list —
+the shape ``DeviceTransfer.transfer_many`` uses to issue a chunk of
+``device_put`` dispatches per executor call — and on the consumer side
+``Pipeline.get_items(n)`` drains up to *n* sink batches per cross-thread
+round trip (``MonitoredQueue.get_many`` through the sink).  ``get_item``
+and ``get_items`` share one consumer-side stash and the same lossless
+timeout-resume contract: a call that times out leaves its still-running
+getter parked, the next call (either flavor) resumes it, order is
+preserved, EOF surfaces exactly once.  End to end a batch costs O(1/chunk)
+loop hops from slab assembly to the accelerator (see ``data/loader.py``,
+"The hot path to the device").
+
 Straggler slow lane (``pipe(..., straggler_after=...)``)
 --------------------------------------------------------
 Chunked execution has a failure mode of its own: one slow item holds its

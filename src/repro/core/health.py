@@ -294,22 +294,29 @@ class HealthMonitor:
         return state
 
     # -- consumption --------------------------------------------------------
-    def guard(self, *, tick: float = 1.0) -> Iterator[Any]:
+    def guard(self, *, tick: float = 1.0, chunk: int = 1) -> Iterator[Any]:
         """Iterate the pipeline with stall detection: yields every item,
         polls health every ``tick`` seconds of sink silence, and raises
         ``PipelineStalled`` instead of blocking forever.  Degrade rungs
         fire from the same cadence.
 
-        Ticking is lossless: a timed-out ``get_item`` keeps its sink getter
-        pending inside the ``Pipeline`` and the next call resumes it, so a
-        tick shorter than the inter-batch latency never drops a batch or
-        the EOF."""
+        ``chunk > 1`` drains via ``Pipeline.get_items(chunk, ...)`` — one
+        cross-thread round trip per chunk of already-buffered items instead
+        of one per item — and still yields item by item.
+
+        Ticking is lossless either way: a timed-out drain keeps its sink
+        getter pending inside the ``Pipeline`` and the next call (per-item
+        or chunked) resumes it, so a tick shorter than the inter-batch
+        latency never drops a batch or the EOF."""
         while True:
             try:
-                item = self.pipeline.get_item(timeout=tick)
+                if chunk > 1:
+                    items = self.pipeline.get_items(chunk, timeout=tick)
+                else:
+                    items = [self.pipeline.get_item(timeout=tick)]
             except FuturesTimeout:
                 self.check()
                 continue
             except StopIteration:
                 return
-            yield item
+            yield from items

@@ -328,6 +328,19 @@ def stage_metrics_lines(
                       "Shard source fetch errors.", s.source_errors, **lb)
                 f.add(f"{p}_shard_source_retries_total", "counter",
                       "Shard source fetch retries.", s.source_retries, **lb)
+        if s.device_decode_batches or s.device_decode_ms:
+            f.add(f"{p}_device_decode_batches_total", "counter",
+                  "Batches decoded on-chip by the fused dequant/normalize/"
+                  "augment kernel behind DeviceTransfer.",
+                  s.device_decode_batches, **lb)
+            f.add(f"{p}_device_decode_dispatch_seconds_total", "counter",
+                  "Host-side dispatch seconds spent launching the fused "
+                  "on-chip decode (the device work itself is async).",
+                  s.device_decode_ms / 1e3, **lb)
+        if s.sink_drained_chunks:
+            f.add(f"{p}_sink_drained_chunks_total", "counter",
+                  "Chunks the consumer pulled via the chunked sink drain "
+                  "(Pipeline.get_items).", s.sink_drained_chunks, **lb)
         if s.peer_hits or s.peer_bytes or s.origin_bytes:
             f.add(f"{p}_shard_peer_hits_total", "counter",
                   "Shard fetches answered by warm peers.", s.peer_hits, **lb)

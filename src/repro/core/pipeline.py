@@ -5,6 +5,12 @@ main thread; a dedicated *scheduler thread* runs the loop (paper §5.5.2) and
 the loop dispatches stage work to the worker thread pool.  The main thread
 only ever touches the sink queue — GIL competition is confined to the main
 thread and the scheduler thread, which is the paper's central scaling trick.
+
+The sink hop itself is chunk-pullable: ``get_items(n)`` drains up to ``n``
+already-buffered items in one cross-thread round trip (the consumer-side
+mirror of the engine's ``pipe(..., chunk=N)``), while ``get_item`` stays the
+per-item path.  Both share one timeout-resume stash, so a polling consumer
+can mix them freely without losing items or the EOF.
 """
 
 from __future__ import annotations
@@ -12,8 +18,10 @@ from __future__ import annotations
 import asyncio
 import concurrent.futures
 import contextlib
+import dataclasses
 import logging
 import threading
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Iterator
 
@@ -65,9 +73,24 @@ class Pipeline:
         self._root_task: asyncio.Task | None = None
         self._runtimes: list[StageRuntime] = []
         self._sink_q: MonitoredQueue | None = None
-        # A get_item(timeout=...) that times out leaves its _anext getter
-        # running on the loop; it is kept here so the next call resumes it.
+        # A get_item/get_items(timeout=...) that times out leaves its sink
+        # getter running on the loop; it is kept here so the next call —
+        # EITHER entry point — resumes it instead of scheduling a second
+        # getter (which would leak sink items).  The getter resolves to a
+        # chunk (list) of items; anything the resuming call doesn't want
+        # right now waits in ``_stash``.
         self._pending_anext: concurrent.futures.Future | None = None
+        # Consumer-side item stash: already-drained sink items not yet
+        # handed out (a resumed chunk getter can return more than the
+        # current call asked for).  Consumer-thread-only, like get_item.
+        self._stash: deque[Any] = deque()
+        # True once EOF has been drained from the sink: every later call
+        # (after the stash empties) raises StopIteration instead of
+        # scheduling a getter that would block forever.
+        self._sink_eof = False
+        # chunked sink drains completed (a get_items call that returned
+        # items counts one chunk) — surfaced on the sink stage's stats row
+        self._sink_drained_chunks = 0
         self._started = False
         self._stopped = False
         self._loop_ready = threading.Event()
@@ -199,24 +222,31 @@ class Pipeline:
             self.stop()
 
     # -- consumption --------------------------------------------------------
-    async def _anext(self) -> Any:
-        """Runs on the loop: next sink item, or raise if the pipeline died."""
+    async def _anext_many(self, n: int) -> list[Any]:
+        """Runs on the loop: drain up to ``n`` sink items in one hop, or
+        raise if the pipeline died.  ``MonitoredQueue.get_many`` blocks only
+        for the first item and sweeps whatever else is buffered, so this is
+        the chunked counterpart of the old per-item ``_anext`` — one
+        cross-thread round trip per CHUNK instead of per item.  EOF, when
+        present, is always the last element of the returned list."""
         assert self._sink_q is not None and self._root_task is not None
-        get_t = asyncio.ensure_future(self._sink_q.get())
+        get_t = asyncio.ensure_future(self._sink_q.get_many(n))
         done, _ = await asyncio.wait(
             {get_t, self._root_task}, return_when=asyncio.FIRST_COMPLETED
         )
         if get_t in done:
-            item = get_t.result()
-            if item is EOF:
+            items = get_t.result()
+            if items and items[-1] is EOF:
                 # Close the EOF-vs-error race: surface fail-fast errors.
                 await asyncio.wait({self._root_task})
                 self._reraise_root()
-            return item
+            return items
+        # get_many awaits only its FIRST item; cancellation here cannot
+        # strand partially-drained items (the sweep phase never awaits).
         get_t.cancel()
         self._reraise_root()
         # Root finished cleanly: the EOF is guaranteed to be in the sink.
-        return await self._sink_q.get()
+        return await self._sink_q.get_many(n)
 
     @staticmethod
     def _unwrap(exc: BaseException) -> BaseException:
@@ -248,16 +278,8 @@ class Pipeline:
             return
         raise self._unwrap(exc)
 
-    def get_item(self, timeout: float | None = None) -> Any:
-        """Fetch one item from the sink (blocking the consumer thread).
-
-        Raises ``StopIteration`` on EOF, ``PipelineFailure`` on fail-fast
-        errors, ``concurrent.futures.TimeoutError`` on timeout.  A timed-out
-        call does NOT abandon its sink getter: the getter keeps running on
-        the loop and the next ``get_item`` resumes waiting on it, so polling
-        with a timeout (e.g. ``HealthMonitor.guard``) never drops an item or
-        the EOF.
-        """
+    def _ensure_consumable(self) -> None:
+        """Start lazily, surface stop/setup errors, wait for the sink."""
         if not self._started:
             self.start()
         if self._stopped:
@@ -271,23 +293,82 @@ class Pipeline:
             assert self._root_fut is not None
             self._root_fut.result()  # surfaces setup errors
             raise PipelineStopped("pipeline root exited before sink install")
+
+    def _refill_stash(self, n: int, timeout: float | None) -> None:
+        """Drain the next chunk (≤ ``n`` items) from the sink into
+        ``_stash``, resuming a pending getter left by a timed-out call.
+
+        Both ``get_item`` and ``get_items`` funnel through here, so they
+        SHARE the ``_pending_anext`` stash: a timeout-polling consumer can
+        mix the two freely and never lose an item or the EOF.  A resumed
+        getter may return more (or fewer) items than ``n`` — the excess
+        waits in ``_stash`` for the next call.  Raises ``StopIteration``
+        only with the stash empty and EOF drained.
+        """
+        if self._stash:
+            return
+        if self._sink_eof:
+            raise StopIteration
         fut = self._pending_anext
         if fut is None:
-            fut = asyncio.run_coroutine_threadsafe(self._anext(), self._loop)
+            assert self._loop is not None
+            fut = asyncio.run_coroutine_threadsafe(
+                self._anext_many(n), self._loop
+            )
         try:
-            item = fut.result(timeout)
+            items = fut.result(timeout)
         except BaseException:
             # On a wait timeout the getter coroutine is still running and
-            # WILL consume the next sink item — keep the future so the next
-            # call collects that item instead of scheduling a second getter
-            # (which would leak one sink item per timed-out call).  A future
+            # WILL consume the next sink chunk — keep the future so the next
+            # call collects that chunk instead of scheduling a second getter
+            # (which would leak sink items per timed-out call).  A future
             # that is already done raised from inside the pipeline: drop it.
             self._pending_anext = fut if not fut.done() else None
             raise
         self._pending_anext = None
-        if item is EOF:
-            raise StopIteration
-        return item
+        if items and items[-1] is EOF:
+            self._sink_eof = True
+            items = items[:-1]
+        self._stash.extend(items)
+        if not self._stash:
+            raise StopIteration  # EOF was the whole chunk
+
+    def get_item(self, timeout: float | None = None) -> Any:
+        """Fetch one item from the sink (blocking the consumer thread).
+
+        Raises ``StopIteration`` on EOF, ``PipelineFailure`` on fail-fast
+        errors, ``concurrent.futures.TimeoutError`` on timeout.  A timed-out
+        call does NOT abandon its sink getter: the getter keeps running on
+        the loop and the next ``get_item`` (or ``get_items``) resumes
+        waiting on it, so polling with a timeout (e.g.
+        ``HealthMonitor.guard``) never drops an item or the EOF.
+        """
+        self._ensure_consumable()
+        self._refill_stash(1, timeout)
+        return self._stash.popleft()
+
+    def get_items(self, n: int, timeout: float | None = None) -> list[Any]:
+        """Drain up to ``n`` sink items in ONE cross-thread round trip.
+
+        The chunked consumer pull: blocks only until the FIRST item is
+        available (latency over batching — a partial chunk is returned
+        immediately, never awaited full), then sweeps whatever else the
+        sink already buffered, up to ``n``.  Returns a non-empty list of
+        1..n items; raises like ``get_item`` (``StopIteration`` once,
+        after the final partial chunk, when the stream is exhausted).
+
+        Shares the timeout-resume stash with ``get_item``: mixing the two
+        under a polling consumer is lossless, and EOF is surfaced exactly
+        once.  Items retain sink order across calls.
+        """
+        if n < 1:
+            raise ValueError(f"get_items needs n >= 1, got {n}")
+        self._ensure_consumable()
+        self._refill_stash(n, timeout)
+        take = min(n, len(self._stash))
+        out = [self._stash.popleft() for _ in range(take)]
+        self._sink_drained_chunks += 1
+        return out
 
     def __iter__(self) -> Iterator[Any]:
         if not self._started:
@@ -303,7 +384,14 @@ class Pipeline:
         # one row per ORIGINAL stage: a fused runtime contributes a row per
         # phase (timings recorded inside the worker), so fusion is invisible
         # to dashboards except for the vanished queue waits
-        return [st.snapshot() for rt in self._runtimes for st in rt.phase_stats]
+        snaps = [st.snapshot() for rt in self._runtimes for st in rt.phase_stats]
+        if snaps and self._sink_drained_chunks:
+            # the chunked sink drain has no stage of its own — its counter
+            # rides the terminal stage's row (the one feeding the sink)
+            snaps[-1] = dataclasses.replace(
+                snaps[-1], sink_drained_chunks=self._sink_drained_chunks
+            )
+        return snaps
 
     def format_stats(self) -> str:
         return format_stats(self.stats())

@@ -83,14 +83,18 @@ class MonitoredQueue:
     async def get_many(self, max_items: int) -> list[Any]:
         """Pull up to ``max_items`` items in ONE event-loop hop.
 
-        This is the chunked-execution primitive: blocking (and the get_wait
-        charge) happens only for the *first* item; everything already
-        buffered is drained without touching the loop again, so the
+        This is the chunked-execution primitive — chunked pipe stages,
+        aggregate stages, and the consumer-side sink drain
+        (``Pipeline.get_items``) all pull through it: blocking (and the
+        get_wait charge) happens only for the *first* item; everything
+        already buffered is drained without touching the loop again, so the
         per-item hop cost is amortized over the chunk.  A chunk is never
         awaited full: whatever is available now is returned (latency over
         batching).  ``EOF`` is only ever the LAST element of the returned
         list — nothing follows it on the wire, and nothing is consumed
-        past it.
+        past it.  Cancellation while awaiting the first item strands
+        nothing: the sweep phase never awaits, so a cancelled ``get_many``
+        has consumed either zero items or the list it returns.
         """
         if self._q.empty():
             t0 = time.monotonic()

@@ -141,6 +141,8 @@ class StageStats:
             peer_hits=int(cache.get("source_peer_hits", 0)),
             peer_bytes=int(cache.get("source_peer_bytes", 0)),
             origin_bytes=int(cache.get("source_origin_bytes", 0)),
+            device_decode_ms=float(cache.get("device_decode_ms", 0.0)),
+            device_decode_batches=int(cache.get("device_decode_batches", 0)),
         )
 
 
@@ -203,6 +205,13 @@ class StageStatsSnapshot:
     peer_hits: int = 0
     peer_bytes: int = 0
     origin_bytes: int = 0
+    # consumer/device boundary visibility: chunks the consumer pulled via
+    # the chunked sink drain (``Pipeline.get_items``; rides the terminal
+    # stage's row), and the on-chip fused-decode dispatch cost a
+    # ``DeviceTransfer(device_decode=...)`` stage reports via its probe
+    sink_drained_chunks: int = 0
+    device_decode_ms: float = 0.0
+    device_decode_batches: int = 0
 
 
 def format_stats(snaps: list[StageStatsSnapshot], window=None) -> str:
@@ -258,6 +267,22 @@ def format_stats(snaps: list[StageStatsSnapshot], window=None) -> str:
             lines.append(
                 f"[{s.name}] arena: slabs_in_flight={s.slabs_in_flight}/{s.num_slabs}"
                 f" bytes_allocated={s.bytes_allocated / 2**20:.1f}MB"
+            )
+        if s.device_decode_batches or s.device_decode_ms:
+            avg = (
+                s.device_decode_ms / s.device_decode_batches
+                if s.device_decode_batches
+                else 0.0
+            )
+            lines.append(
+                f"[{s.name}] device-decode: batches={s.device_decode_batches}"
+                f" dispatch_ms={s.device_decode_ms:.1f} avg_ms={avg:.2f}"
+            )
+        if s.sink_drained_chunks:
+            items = s.num_out / s.sink_drained_chunks
+            lines.append(
+                f"[{s.name}] sink: drained_chunks={s.sink_drained_chunks}"
+                f" avg_items/chunk={items:.1f}"
             )
         if s.cache_hits or s.cache_misses or s.prefetch_depth:
             total = s.cache_hits + s.cache_misses

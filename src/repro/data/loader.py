@@ -78,6 +78,40 @@ Ordering and memory rules under chunking:
   so arena backpressure blocks a pool thread rather than polling the loop;
   ``Pipeline.stop()`` still wakes it via the ``arena.close`` callback.
 
+The hot path to the device (``transfer_chunk=``, default 2)
+-----------------------------------------------------------
+The batch → device leg is chunked too, on both ends of the sink:
+
+* **Transfer stage**: with ``transfer_chunk > 1`` the transfer runs as a
+  vectorized chunk stage (``DeviceTransfer.transfer_many``) — one executor
+  call issues ``device_put`` (+ the fused on-chip decode, below) for a
+  whole chunk of batches, in arrival order, amortizing the engine's
+  per-batch hops over the largest items in the pipeline.
+* **Sink drain**: consumers pull matching chunks with
+  ``Pipeline.get_items(n)`` (or ``HealthMonitor.guard(chunk=n)``) — one
+  cross-thread round trip drains up to *n* buffered batches.  Ordering is
+  preserved end to end: ``get_items`` returns batches exactly in emission
+  order, and mixing ``get_item``/``get_items`` calls on the same pipeline
+  is safe (they share one stash; a timed-out call never loses the batch it
+  was waiting on).
+* **Memory**: every batch parked in the ``chunk``-widened batch→transfer
+  queue pins a slab, and up to ``transfer_chunk - 1`` dispatched-but-unput
+  batches sit in the transfer worker mid-chunk, so both the transfer's
+  hold window (``consumer_window + 1 + transfer_chunk``) and the arena's
+  deadlock floor (see ``_ring_size``) grow with ``transfer_chunk``.
+  Slabs still recycle per batch, in order, chunked or not.
+* **Failure**: the vectorized stage fails whole-chunk — a ``device_put``
+  error poisons its chunk-mates (they were dispatched by the same call).
+  Batches are few and transfers don't fail per-sample, so this trades an
+  irrelevant failure granularity for the hop amortization.
+
+With ``device_decode=DeviceDecode(mean, std, ...)`` the loader ships
+**uint8 wire bytes end to end**: slab rows stay uint8 through collate and
+transfer, and the fused ``dequant_normalize_augment`` kernel (uint8→bf16
+dequant, per-channel normalize, flip/crop augment, one VMEM pass) runs
+on-chip right after ``device_put`` — zero host-side float math on pixels.
+See ``data/transfer.py`` and ``kernels/dequant_normalize.py``.
+
 **Checkpoint skip bound under chunking**: samples accumulate inside
 in-flight chunks before they reach a delivered batch, so a sampler
 checkpoint taken mid-stream can additionally skip the samples resident in
@@ -85,8 +119,10 @@ chunked stages — at most ``chunk`` per unit of stage concurrency plus the
 ``chunk``-widened queues.  On the default wiring that is
 ``(max(read_concurrency, decode_concurrency) + 3) × chunk`` samples (the
 fused read+decode stage runs at the max of the two concurrencies) — on
-top of the sink-buffered batches (sampler.py) and, on the prefetcher
-path, the ``_PREFETCH_LOOKAHEAD`` window below.
+top of the sink-buffered batches (sampler.py), the ``2 × transfer_chunk``
+batches the chunked transfer leg can hold (its widened input queue plus
+the dispatch chunk in flight), and, on the prefetcher path, the
+``_PREFETCH_LOOKAHEAD`` window below.
 Still bounded and epoch-local; set ``chunk=1`` to restore the narrow
 per-item bound when checkpoint tightness matters more than throughput.
 
@@ -172,25 +208,49 @@ from .codec import (
 )
 from .packing import SequencePacker, collate
 from .sampler import CheckpointableSampler
-from .transfer import DeviceTransfer
+from .transfer import DeviceDecode, DeviceTransfer
 
 
-def _ring_size(arena_slabs: int | None, transfer: DeviceTransfer) -> int:
+def _ring_size(
+    arena_slabs: int | None, transfer: DeviceTransfer, transfer_chunk: int = 2
+) -> int:
     """Slab-ring size for a loader: the ring must outsize the slabs pinned
     at once (transfer hold + inter-stage queues + the one being filled) or
-    the binder deadlocks the pipeline.  An explicit request below that
-    floor is an error, not a silent inflation — the caller set it as a
-    memory cap and must raise it (or the sink buffer) knowingly."""
-    floor = transfer.hold_slabs + 4
+    the binder deadlocks the pipeline.  The batch→transfer queue is widened
+    to the transfer stage's chunk (so the chunked drain can actually fill
+    its chunks), and every batch parked there pins a slab — the floor
+    grows with ``transfer_chunk`` past the default 2.  An explicit request
+    below the floor is an error, not a silent inflation — the caller set
+    it as a memory cap and must raise it (or the sink buffer) knowingly."""
+    in_flight = 2 + max(2, transfer_chunk)  # queue + assembling + mid-transfer
+    floor = transfer.hold_slabs + in_flight
     if arena_slabs is None:
         return floor
     if arena_slabs < floor:
         raise ValueError(
             f"arena_slabs={arena_slabs} is below the deadlock floor "
-            f"{floor} (= transfer hold {transfer.hold_slabs} + 4 in-flight); "
-            "raise arena_slabs or lower sink_buffer"
+            f"{floor} (= transfer hold {transfer.hold_slabs} + {in_flight} "
+            "in-flight); raise arena_slabs or lower sink_buffer/transfer_chunk"
         )
     return arena_slabs
+
+
+def _pipe_transfer(
+    builder: PipelineBuilder, transfer: DeviceTransfer, transfer_chunk: int
+) -> PipelineBuilder:
+    """Wire the terminal transfer stage (§2.1: exactly one transfer task).
+
+    ``transfer_chunk > 1`` dispatches a drained chunk of batches per engine
+    hop (``transfer_many`` as a vectorized chunk stage) — one executor call
+    issues the whole chunk's ``device_put`` (+ fused decode) dispatches in
+    order.  The ``cache=transfer`` probe surfaces ``device_decode_ms`` /
+    ``device_decode_batches`` on the transfer stage's stats row."""
+    if transfer_chunk > 1:
+        return builder.pipe(
+            transfer.transfer_many, concurrency=1, name="transfer",
+            chunk=transfer_chunk, vectorized=True, cache=transfer,
+        )
+    return builder.pipe(transfer, concurrency=1, name="transfer", cache=transfer)
 
 
 #: how many samples of headroom the shard-prefetch wrapper keeps between
@@ -304,9 +364,13 @@ def build_image_loader(
     straggler_after: float | None = None,  # soft deadline on read/decode
     trace=None,  # core.trace.Tracer: flight-recorder spans for every layer
     fields: tuple[str, ...] | None = None,  # columnar projection, e.g. ("image",)
+    device_decode: DeviceDecode | None = None,  # on-chip fused decode tail
+    transfer_chunk: int = 2,  # batches per transfer dispatch; 1 = per-batch
 ) -> Pipeline:
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    if transfer_chunk < 1:
+        raise ValueError("transfer_chunk must be >= 1")
     if straggler_after is not None and chunk <= 1:
         raise ValueError("straggler_after requires chunk > 1 (see pipe())")
     # Columnar projection: this pipeline decodes exactly one image blob per
@@ -343,8 +407,10 @@ def build_image_loader(
 
     transfer = DeviceTransfer(
         shardings, uint8_wire=uint8_wire, consumer_window=sink_buffer,
+        dispatch_chunk=transfer_chunk, device_decode=device_decode,
         tracer=trace,
     )
+
     index_stream, cache_probe = _maybe_prefetch(indices(), dataset, fields=fields)
 
     if fields is not None:
@@ -410,11 +476,11 @@ def build_image_loader(
         )
         if fuse_stages:
             builder.fuse("read", "decode")
+        builder = builder.aggregate(
+            batch_size, drop_last=True, name="batch"
+        ).pipe(make_batch, name="collate")
         return (
-            builder
-            .aggregate(batch_size, drop_last=True, name="batch")
-            .pipe(make_batch, name="collate")
-            .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
+            _pipe_transfer(builder, transfer, transfer_chunk)
             .add_sink(buffer_size=sink_buffer)
             .build(num_threads=num_threads, trace=trace)
         )
@@ -423,7 +489,7 @@ def build_image_loader(
     arena = SlabArena(
         {"images": ((*hw, 3), np.uint8)},
         batch_size=batch_size,
-        num_slabs=_ring_size(arena_slabs, transfer),
+        num_slabs=_ring_size(arena_slabs, transfer, transfer_chunk),
     )
 
     def read(item) -> tuple:
@@ -474,10 +540,9 @@ def build_image_loader(
     )
     if fuse_stages:
         builder.fuse("read", "decode")
+    builder = builder.aggregate_into(arena, batch_size, drop_last=True, name="batch")
     pipe = (
-        builder
-        .aggregate_into(arena, batch_size, drop_last=True, name="batch")
-        .pipe(transfer, concurrency=1, name="transfer")  # §2.1: exactly one
+        _pipe_transfer(builder, transfer, transfer_chunk)
         .add_sink(buffer_size=sink_buffer)
         .build(num_threads=num_threads, trace=trace)
     )
@@ -503,6 +568,7 @@ def build_lm_loader(
     chunk: int = 16,  # items per executor dispatch; 1 = per-item path
     straggler_after: float | None = None,  # soft deadline on the read stage
     trace=None,  # core.trace.Tracer: flight-recorder spans for every layer
+    transfer_chunk: int = 2,  # batches per transfer dispatch; 1 = per-batch
 ) -> tuple[Pipeline, CheckpointableSampler]:
     """Returns (pipeline, sampler) — the sampler is checkpointed alongside
     model state (fault tolerance; see runtime/trainer.py).
@@ -522,6 +588,8 @@ def build_lm_loader(
     """
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    if transfer_chunk < 1:
+        raise ValueError("transfer_chunk must be >= 1")
     if straggler_after is not None and chunk <= 1:
         raise ValueError("straggler_after requires chunk > 1 (see pipe())")
     sampler = sampler or CheckpointableSampler(
@@ -537,7 +605,8 @@ def build_lm_loader(
         return dataset.read_bytes(i)
 
     transfer = DeviceTransfer(
-        shardings, consumer_window=sink_buffer, tracer=trace
+        shardings, consumer_window=sink_buffer,
+        dispatch_chunk=transfer_chunk, tracer=trace,
     )
     doc_stream, cache_probe = _maybe_prefetch(doc_ids(), dataset)
 
@@ -546,7 +615,7 @@ def build_lm_loader(
             doc = decode_sample(data)
             return packer.add(doc)  # 0..k completed rows
 
-        pipe = (
+        builder = (
             PipelineBuilder()
             .add_source(doc_stream, name="sampler")
             .pipe(read, concurrency=read_concurrency, name="read",
@@ -556,7 +625,9 @@ def build_lm_loader(
             .disaggregate(name="rows")
             .aggregate(batch_size, drop_last=True, name="batch")
             .pipe(collate, concurrency=decode_concurrency, name="collate")
-            .pipe(transfer, concurrency=1, name="transfer")
+        )
+        pipe = (
+            _pipe_transfer(builder, transfer, transfer_chunk)
             .add_sink(buffer_size=sink_buffer)
             .build(num_threads=num_threads, trace=trace)
         )
@@ -566,7 +637,7 @@ def build_lm_loader(
     arena = SlabArena(
         {k: row_shape for k in ("tokens", "labels", "positions", "segment_ids")},
         batch_size=batch_size,
-        num_slabs=_ring_size(arena_slabs, transfer),
+        num_slabs=_ring_size(arena_slabs, transfer, transfer_chunk),
     )
     next_slot = arena.slot_writer()  # only touched by the concurrency=1 packer
 
@@ -574,7 +645,7 @@ def build_lm_loader(
         doc = decode_sample(data)
         return packer.add_into(doc, next_slot)  # 0..k completed slot tickets
 
-    pipe = (
+    builder = (
         PipelineBuilder()
         .add_source(doc_stream, name="sampler")
         .pipe(read, concurrency=read_concurrency, name="read",
@@ -583,7 +654,9 @@ def build_lm_loader(
         .pipe(pack_into, concurrency=1, name="decode+pack", chunk=chunk)  # stateful
         .disaggregate(name="rows")
         .aggregate_into(arena, batch_size, drop_last=True, name="batch")
-        .pipe(transfer, concurrency=1, name="transfer")
+    )
+    pipe = (
+        _pipe_transfer(builder, transfer, transfer_chunk)
         .add_sink(buffer_size=sink_buffer)
         .build(num_threads=num_threads, trace=trace)
     )

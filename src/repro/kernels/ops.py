@@ -16,6 +16,9 @@ import jax.numpy as jnp
 
 from . import ref
 from .dequant_normalize import dequant_normalize as _dequant_pallas
+from .dequant_normalize import (
+    dequant_normalize_augment as _dequant_augment_pallas,
+)
 from .flash_attention import flash_attention as _flash_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
@@ -59,3 +62,26 @@ def dequant_normalize(x, mean, std, *, use_pallas="auto"):
     if use:
         return _dequant_pallas(x, mean, std, interpret=interp)
     return ref.dequant_normalize_ref(x, mean, std)
+
+
+@partial(jax.jit, static_argnames=("out_hw", "out_dtype", "use_pallas"))
+def dequant_normalize_augment(
+    x, mean, std, flip=None, crop=None, *,
+    out_hw=None, out_dtype=jnp.bfloat16, use_pallas="auto",
+):
+    """Fused on-chip decode tail: crop → flip → dequant → normalize → NCHW.
+
+    The device side of the ``uint8_wire`` contract (what
+    ``DeviceTransfer(device_decode=...)`` dispatches): uint8 (or [0,1]
+    float) NHWC in, normalized ``out_dtype`` NCHW out, one pass.
+    """
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _dequant_augment_pallas(
+            x, mean, std, flip=flip, crop=crop,
+            out_hw=out_hw, out_dtype=out_dtype, interpret=interp,
+        )
+    return ref.dequant_normalize_augment_ref(
+        x, mean, std, flip=flip, crop=crop,
+        out_hw=out_hw, out_dtype=out_dtype,
+    )

@@ -39,3 +39,35 @@ def dequant_normalize_ref(x, mean, std, *, out_dtype=jnp.bfloat16):
     y = x.astype(jnp.float32) / 255.0
     y = (y - mean[None, None, None, :]) / std[None, None, None, :]
     return y.transpose(0, 3, 1, 2).astype(out_dtype)
+
+
+def dequant_normalize_augment_ref(
+    x, mean, std, *, flip=None, crop=None, out_hw=None, out_dtype=jnp.bfloat16
+):
+    """Oracle for the fused decode: per-sample crop → horizontal flip →
+    dequant → per-channel normalize → NCHW, as separate jnp ops.
+
+    ``x`` is (N,H,W,C) uint8 (dequantized by /255) or float already in
+    [0,1] (dequant is then the identity).  ``flip`` (N,) nonzero = mirror
+    the width axis; ``crop`` (N,2) = (top, left) offsets of an
+    ``out_hw``-sized window, clamped in-bounds like ``lax.dynamic_slice``.
+    """
+    n, h, w, c = x.shape
+    oh, ow = out_hw if out_hw is not None else (h, w)
+    scale = (1.0 / 255.0) if jnp.issubdtype(x.dtype, jnp.integer) else 1.0
+    if flip is None:
+        flip = jnp.zeros((n,), jnp.int32)
+    if crop is None:
+        crop = jnp.zeros((n, 2), jnp.int32)
+    crop = jnp.clip(
+        crop.astype(jnp.int32), 0, jnp.array([h - oh, w - ow], jnp.int32)
+    )
+
+    def one(img, f, off):
+        y = jax.lax.dynamic_slice(img, (off[0], off[1], 0), (oh, ow, c))
+        y = y.astype(jnp.float32) * scale
+        y = jnp.where(f != 0, y[:, ::-1, :], y)
+        return (y - mean[None, None, :]) / std[None, None, :]
+
+    y = jax.vmap(one)(x, flip.astype(jnp.int32), crop)
+    return y.transpose(0, 3, 1, 2).astype(out_dtype)

