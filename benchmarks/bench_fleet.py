@@ -1,0 +1,481 @@
+"""Elastic shard fleet under churn: membership, bounded remap, warm
+restart, and admission control — the robustness gates for the
+membership/placement layer (``membership.py``).
+
+Scenarios (rows):
+
+* ``fleet_churn`` — 4 warm peers behind a consistent-hash ring; one is
+  killed mid-epoch (and swept from membership), then a replacement
+  joins.  The gated claims: the churn epoch sustains
+  ≥ ``GATE_CHURN_RATIO`` of clean-epoch throughput, and each membership
+  change remaps ≤ 2/N of the keyspace (measured over a probe keyspace,
+  not just the handful of bench shards).
+* ``fleet_warm_restart`` — a rank reads an epoch through a
+  ``persist_state=True`` prefetcher, "crashes" (close), and restarts
+  over the same cache dir.  The restarted rank must serve
+  ≥ ``GATE_WARM_REUSE`` of the epoch's bytes from the persisted
+  manifest/spans with **zero** re-fetch of already-resident ranges.
+* ``fleet_admission`` — two tenants against one admission-controlled
+  origin: the quota'd tenant must converge on its byte-rate quota
+  (± ``GATE_QUOTA_TOL``) while the unmetered tenant keeps
+  ≥ ``GATE_NEIGHBOR_RATIO`` of its solo throughput — no noisy-neighbor
+  collapse.
+
+Gates recorded in ``BENCH_fleet.json``; ``--gate`` re-checks them at
+smoke size and exits nonzero on regression (CI's ``fleet-churn`` job).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+import threading
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = _ROOT / "BENCH_fleet.json"
+
+N_PEERS = 4
+GATE_CHURN_RATIO = 0.8  # churn epoch keeps >= 80% of clean throughput
+GATE_REMAP_MAX = 2 / N_PEERS  # keys remapped per membership change
+GATE_WARM_REUSE = 0.9  # fraction of epoch bytes served from persisted state
+GATE_QUOTA_TOL = 0.10  # throttled tenant lands on quota +- 10%
+GATE_NEIGHBOR_RATIO = 0.9  # unmetered tenant keeps >= 90% of solo rate
+
+#: probe keyspace for remap-fraction measurement (the bench's handful of
+#: shards is too coarse to resolve a 2/N bound)
+PROBE_KEYS = [f"probe-{i:05d}.rpshard" for i in range(400)]
+
+
+def _make_shards(root: pathlib.Path, *, n_items: int):
+    from repro.data import SyntheticImageDataset, pack
+
+    files = SyntheticImageDataset.materialize(
+        root / "files", n_items, hw=(32, 32), seed=0
+    )
+    pack(files, root / "shards", samples_per_shard=32)
+    shards = sorted((root / "shards").glob("*.rpshard"))
+    return root / "shards", [s.name for s in shards]
+
+
+def _serve(shards_dir: pathlib.Path, **kw):
+    import threading as _t
+
+    from repro.data.shards.testing import ShardHTTPServer
+
+    srv = ShardHTTPServer(shards_dir, **kw)
+    thread = _t.Thread(target=srv.serve_forever, daemon=True)
+    thread.start()
+    return srv, thread
+
+
+def _owner_snapshot(ring) -> dict[str, str]:
+    return {k: ring.owners(k, 1)[0] for k in PROBE_KEYS}
+
+
+def _remap_fraction(before: dict[str, str], after: dict[str, str]) -> float:
+    return sum(1 for k in PROBE_KEYS if before[k] != after[k]) / len(PROBE_KEYS)
+
+
+# -- scenario 1: churn ------------------------------------------------------
+def _churn(shards_dir: pathlib.Path, names: list[str], *, rounds: int) -> dict:
+    """Kill 1 of N warm peers mid-epoch, sweep it from membership, admit a
+    replacement — sustained throughput + bounded remap, zero corruption."""
+    from repro.data.shards.peer import PeerShardSource, TieredSource
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+
+    raw = {n: (shards_dir / n).read_bytes() for n in names}
+    epoch = [n for _ in range(rounds) for n in names]
+
+    def run_epoch(churn: bool) -> dict:
+        servers, threads = [], []
+        for _ in range(N_PEERS):
+            s, t = _serve(shards_dir)
+            servers.append(s)
+            threads.append(t)
+        origin, origin_t = _serve(shards_dir)
+        threads.append(origin_t)
+        ps = PeerShardSource(
+            [s.url for s in servers],
+            placement="ring",
+            replicas=1,
+            timeout=2.0,
+            cooldown_s=0.2,
+        )
+        tiered = TieredSource(
+            RetryingSource(HttpShardSource(origin.url), base_delay_s=0.01), ps
+        )
+        # the victim must actually own keys in this epoch, or the crash is
+        # invisible to the consumer: kill the primary owner of most shards
+        owner_counts: dict[str, int] = {}
+        for n in names:
+            o = ps._ring.owners(n, 1)[0]
+            owner_counts[o] = owner_counts.get(o, 0) + 1
+        victim_url = max(owner_counts, key=owner_counts.get)
+        victim = next(s for s in servers if s.url == victim_url)
+        survivors = [s for s in servers if s is not victim]
+        kill_at = len(epoch) // 3
+        # a full pass of the keyspace between crash and sweep: the dead
+        # peer is guaranteed to be routed to while still in the ring, so
+        # the breaker (not luck) covers the registry-lag window
+        sweep_at = kill_at + len(names)
+        rejoin_at = 2 * len(epoch) // 3
+        remap_fractions: list[float] = []
+        mismatches = 0
+        replacement = None
+        kill_thread = None
+        try:
+            t0 = time.monotonic()
+            for i, name in enumerate(epoch):
+                if churn and i == kill_at:
+                    # crash, not graceful leave — and the victim's shutdown
+                    # runs off-thread (a crashing rank does not block its
+                    # consumers' read loops)
+                    kill_thread = threading.Thread(target=victim.kill)
+                    kill_thread.start()
+                if churn and i == sweep_at:
+                    # dead_after_s elapsed: the registry view drops the peer
+                    before = _owner_snapshot(ps._ring)
+                    ps.sync_membership([s.url for s in survivors])
+                    remap_fractions.append(
+                        _remap_fraction(before, _owner_snapshot(ps._ring))
+                    )
+                if churn and i == rejoin_at:
+                    replacement, rt = _serve(shards_dir)
+                    threads.append(rt)
+                    before = _owner_snapshot(ps._ring)
+                    ps.sync_membership(
+                        [s.url for s in survivors] + [replacement.url]
+                    )
+                    remap_fractions.append(
+                        _remap_fraction(before, _owner_snapshot(ps._ring))
+                    )
+                if tiered.fetch(name) != raw[name]:
+                    mismatches += 1
+            wall = time.monotonic() - t0
+            st = tiered.stats()
+            return {
+                "wall_s": wall,
+                "fetches": len(epoch),
+                "items_per_sec": len(epoch) / wall,
+                "mismatches": mismatches,
+                "remap_fractions": remap_fractions,
+                "membership_changes": ps.stats()["membership_changes"],
+                "ring_remaps": st["ring_remaps"],
+                "peer_hits": st["peer_hits"],
+                "peer_errors": st["peer_errors"],
+                "origin_fetches": st["origin_fetches"],
+            }
+        finally:
+            tiered.close()
+            if kill_thread is not None:
+                kill_thread.join(timeout=10)
+            for s in survivors + ([origin] + ([replacement] if replacement else [])):
+                s.shutdown()
+                s.server_close()
+            if not churn:
+                victim.shutdown()
+                victim.server_close()
+            for t in threads:
+                t.join(timeout=5)
+
+    clean = run_epoch(churn=False)
+    churned = run_epoch(churn=True)
+    return {
+        "clean": clean,
+        "churn": churned,
+        "churn_ratio": churned["items_per_sec"] / clean["items_per_sec"],
+        "max_remap_fraction": max(churned["remap_fractions"], default=0.0),
+    }
+
+
+# -- scenario 2: warm restart ----------------------------------------------
+def _warm_restart(shards_dir: pathlib.Path, names: list[str]) -> dict:
+    """Epoch, crash, restart over the same cache: the second epoch must be
+    served from persisted state, not the wire."""
+    from repro.data import ShardPrefetcher
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+
+    origin, thread = _serve(shards_dir)
+    epoch_bytes = sum((shards_dir / n).stat().st_size for n in names)
+    try:
+        with tempfile.TemporaryDirectory() as cache:
+            pf1 = ShardPrefetcher(
+                RetryingSource(HttpShardSource(origin.url), base_delay_s=0.01),
+                cache,
+                index_first=False,
+                persist_state=True,
+            )
+            t0 = time.monotonic()
+            for n in names:
+                pf1.reader(n)
+            cold_s = time.monotonic() - t0
+            pf1.close()  # the "crash" (state persisted on the way down)
+            wire_before = origin.bytes_served
+
+            pf2 = ShardPrefetcher(
+                RetryingSource(HttpShardSource(origin.url), base_delay_s=0.01),
+                cache,
+                index_first=False,
+                persist_state=True,
+            )
+            t0 = time.monotonic()
+            mismatches = 0
+            for n in names:
+                r = pf2.reader(n)
+                if bytes(r.raw(0, r.nbytes)) != (shards_dir / n).read_bytes():
+                    mismatches += 1
+            warm_s = time.monotonic() - t0
+            reused = pf2.warm_restart_bytes_reused
+            refetched = origin.bytes_served - wire_before
+            pf2.close()
+    finally:
+        origin.shutdown()
+        origin.server_close()
+        thread.join(timeout=5)
+    return {
+        "epoch_bytes": epoch_bytes,
+        "bytes_reused": reused,
+        "reuse_fraction": reused / epoch_bytes,
+        "bytes_refetched": refetched,
+        "mismatches": mismatches,
+        "cold_epoch_s": cold_s,
+        "warm_epoch_s": warm_s,
+        "speedup": cold_s / max(warm_s, 1e-9),
+    }
+
+
+# -- scenario 3: admission --------------------------------------------------
+def _admission(shards_dir: pathlib.Path, names: list[str], *, run_s: float) -> dict:
+    """A quota'd tenant converges on its byte rate; an unmetered tenant
+    keeps its solo throughput next to the throttled one."""
+    from repro.data import AdmissionController
+    from repro.data.shards.membership import TENANT_HEADER
+    from repro.data.shards.sources import HttpShardSource, RetryingSource
+
+    shard_size = (shards_dir / names[0]).stat().st_size
+    quota_bps = 4.0 * shard_size  # ~4 shards/s sustained
+    # two bodies of burst: one is the free opener, the second is headroom
+    # so refill credit earned during round-trips is banked, not clipped at
+    # the cap (a one-body burst would silently tax every cycle by its RTT)
+    burst = 2.0 * shard_size
+
+    def polite_run(origin_url: str, duration: float) -> float:
+        # paced, in-quota consumer (~65 req/s): running it flat-out would
+        # saturate the fixture server and measure ITS queueing, not the
+        # admission layer's isolation
+        src = HttpShardSource(origin_url, headers={TENANT_HEADER: "polite"})
+        fetched = 0
+        i = 0
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < duration:
+            fetched += len(src.fetch(names[i % len(names)]))
+            i += 1
+            time.sleep(0.015)
+        src.close()
+        return fetched / (time.monotonic() - t0)
+
+    # solo baseline: the polite tenant alone on the admission-gated origin
+    adm = AdmissionController(max_inflight=16)
+    adm.set_quota("capped", quota_bps, burst)
+    origin, thread = _serve(shards_dir, admission=adm)
+    try:
+        solo_bps = polite_run(origin.url, run_s * 0.5)
+
+        # contended: the capped tenant hammers while the polite one reads
+        capped = {"bytes": 0, "admits": []}
+
+        def capped_loop():
+            src = RetryingSource(
+                HttpShardSource(origin.url, headers={TENANT_HEADER: "capped"}),
+                max_retries=8,
+                base_delay_s=0.005,
+                jitter=0.0,
+            )
+            t0 = time.monotonic()
+            i = 0
+            while time.monotonic() - t0 < run_s:
+                try:
+                    capped["bytes"] += len(src.fetch(names[i % len(names)]))
+                    capped["admits"].append(time.monotonic())
+                except OSError:
+                    pass  # budget exhausted mid-window: keep hammering
+                i += 1
+            src.close()
+
+        t = threading.Thread(target=capped_loop)
+        t.start()
+        contended_bps = polite_run(origin.url, run_s)
+        t.join()
+    finally:
+        origin.shutdown()
+        origin.server_close()
+        thread.join(timeout=5)
+
+    # Steady-state rate, admit-to-admit: the window opens at the LAST free
+    # (burst) admit — the bucket is empty right after it, so every later
+    # admit is quota-paced — and measuring between admits removes the
+    # window-edge quantization a wall-clock window would add (+-1 body
+    # over a short run is +-10% by itself).
+    admits = capped["admits"]
+    first = int(burst // shard_size) - 1  # index of the last burst admit
+    steady = admits[first:]
+    if len(steady) >= 2:
+        achieved_bps = (len(steady) - 1) * shard_size / (steady[-1] - steady[0])
+    else:
+        achieved_bps = 0.0
+    st = adm.stats()
+    return {
+        "quota_bps": quota_bps,
+        "burst_bytes": burst,
+        "capped_admits": len(admits),
+        "capped_bytes": capped["bytes"],
+        "capped_achieved_bps": achieved_bps,
+        "capped_quota_error": achieved_bps / quota_bps - 1.0,
+        "polite_solo_bps": solo_bps,
+        "polite_contended_bps": contended_bps,
+        "neighbor_ratio": contended_bps / solo_bps,
+        "quota_rejections": st["quota_rejections"],
+        "inflight_rejections": st["inflight_rejections"],
+    }
+
+
+# -- harness ---------------------------------------------------------------
+def _scenarios(*, smoke: bool) -> dict:
+    with tempfile.TemporaryDirectory() as d:
+        shards_dir, names = _make_shards(
+            pathlib.Path(d), n_items=192 if smoke else 512
+        )
+        churn = _churn(shards_dir, names, rounds=20 if smoke else 12)
+        warm = _warm_restart(shards_dir, names)
+        admission = _admission(shards_dir, names, run_s=2.5 if smoke else 5.0)
+    return {
+        "n_peers": N_PEERS,
+        "churn": churn,
+        "warm_restart": warm,
+        "admission": admission,
+        "gate_churn_ratio": GATE_CHURN_RATIO,
+        "gate_remap_max": GATE_REMAP_MAX,
+        "gate_warm_reuse": GATE_WARM_REUSE,
+        "gate_quota_tol": GATE_QUOTA_TOL,
+        "gate_neighbor_ratio": GATE_NEIGHBOR_RATIO,
+    }
+
+
+def _check(result: dict) -> list[str]:
+    """The fleet gates; returns a list of violations (empty = pass)."""
+    bad = []
+    ch = result["churn"]
+    if ch["churn"]["mismatches"] or ch["clean"]["mismatches"]:
+        bad.append(f"churn corruption: {ch}")
+    if ch["churn_ratio"] < result["gate_churn_ratio"]:
+        bad.append(
+            f"churn epoch sustained x{ch['churn_ratio']:.2f} of clean "
+            f"throughput < gate x{result['gate_churn_ratio']:.2f}"
+        )
+    if not ch["churn"]["remap_fractions"]:
+        bad.append("churn never changed membership — scenario inert")
+    if ch["max_remap_fraction"] > result["gate_remap_max"]:
+        bad.append(
+            f"membership change remapped {ch['max_remap_fraction']:.2f} of "
+            f"the keyspace > gate {result['gate_remap_max']:.2f} (2/N)"
+        )
+    if ch["churn"]["peer_errors"] < 1:
+        bad.append("churn: killed peer never tripped the breaker")
+    wm = result["warm_restart"]
+    if wm["mismatches"]:
+        bad.append(f"warm restart corruption: {wm}")
+    if wm["reuse_fraction"] < result["gate_warm_reuse"]:
+        bad.append(
+            f"warm restart reused {wm['reuse_fraction']:.2f} of epoch bytes "
+            f"< gate {result['gate_warm_reuse']:.2f}"
+        )
+    if wm["bytes_refetched"] > 0:
+        bad.append(
+            f"warm restart re-fetched {wm['bytes_refetched']} resident bytes "
+            f"(must be 0)"
+        )
+    ad = result["admission"]
+    if abs(ad["capped_quota_error"]) > result["gate_quota_tol"]:
+        bad.append(
+            f"capped tenant landed {ad['capped_quota_error']:+.1%} off its "
+            f"quota (gate +-{result['gate_quota_tol']:.0%})"
+        )
+    if ad["neighbor_ratio"] < result["gate_neighbor_ratio"]:
+        bad.append(
+            f"polite tenant kept x{ad['neighbor_ratio']:.2f} of solo "
+            f"throughput < gate x{result['gate_neighbor_ratio']:.2f}"
+        )
+    if ad["quota_rejections"] < 1:
+        bad.append("admission never rejected — quota scenario inert")
+    return bad
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    result = _scenarios(smoke=smoke)
+    violations = _check(result)
+    result["violations"] = violations
+    if not smoke:  # persist only full runs; smoke numbers are noise
+        OUT_PATH.write_text(json.dumps(result, indent=2) + "\n")
+
+    ch, wm, ad = result["churn"], result["warm_restart"], result["admission"]
+    rows = [
+        (
+            "fleet_churn",
+            ch["churn"]["wall_s"] * 1e6 / ch["churn"]["fetches"],
+            f"x{ch['churn_ratio']:.2f}_of_clean_"
+            f"remap{ch['max_remap_fraction']:.2f}_"
+            f"{'OK' if ch['churn_ratio'] >= GATE_CHURN_RATIO else 'BELOW_GATE'}",
+        ),
+        (
+            "fleet_warm_restart",
+            wm["warm_epoch_s"] * 1e6,
+            f"{wm['reuse_fraction']:.0%}reused_{wm['bytes_refetched']}refetched_"
+            f"x{wm['speedup']:.1f}_vs_cold",
+        ),
+        (
+            "fleet_admission",
+            1e6 / max(ad["capped_achieved_bps"], 1e-9),
+            f"{ad['capped_quota_error']:+.1%}_off_quota_"
+            f"neighbor_x{ad['neighbor_ratio']:.2f}",
+        ),
+    ]
+    if violations:
+        raise RuntimeError("fleet gates violated: " + "; ".join(violations))
+    return rows
+
+
+def check_gate() -> int:
+    """CI regression tripwire: re-run every fleet scenario at smoke size
+    and fail on any gate violation."""
+    result = _scenarios(smoke=True)
+    ch, wm, ad = result["churn"], result["warm_restart"], result["admission"]
+    print(
+        f"churn: x{ch['churn_ratio']:.2f} of clean "
+        f"(gate >= x{GATE_CHURN_RATIO:.2f}), max remap "
+        f"{ch['max_remap_fraction']:.2f} (gate <= {GATE_REMAP_MAX:.2f})"
+    )
+    print(
+        f"warm_restart: {wm['reuse_fraction']:.0%} reused "
+        f"(gate >= {GATE_WARM_REUSE:.0%}), "
+        f"{wm['bytes_refetched']} bytes refetched (gate == 0)"
+    )
+    print(
+        f"admission: capped {ad['capped_quota_error']:+.1%} off quota "
+        f"(gate +-{GATE_QUOTA_TOL:.0%}), neighbor x{ad['neighbor_ratio']:.2f} "
+        f"(gate >= x{GATE_NEIGHBOR_RATIO:.2f}), "
+        f"{ad['quota_rejections']} quota rejections"
+    )
+    violations = _check(result)
+    for v in violations:
+        print(f"REGRESSION: {v}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    if "--gate" in sys.argv:
+        sys.exit(check_gate())
+    for r in run("--smoke" in sys.argv):
+        print(",".join(map(str, r)))

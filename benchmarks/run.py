@@ -42,6 +42,7 @@ REGISTRY = [
     ("sharded record store (beyond-paper)", "bench_shards"),
     ("engine chunked+fused (beyond-paper)", "bench_engine"),
     ("fault recovery chaos (beyond-paper)", "bench_faults"),
+    ("elastic shard fleet (beyond-paper)", "bench_fleet"),
     ("flight-recorder tracing (beyond-paper)", "bench_trace"),
     ("roofline (dry-run derived)", "roofline"),
 ]

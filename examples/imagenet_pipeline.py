@@ -305,6 +305,29 @@ def main() -> None:
                 peer_ds.close()
             http_ds.close()
 
+            # warm restart: a rank dies (preemption, rolling restart) and
+            # comes back with its cache directory intact.  With
+            # persist_cache=True the prefetcher writes a manifest + sparse
+            # span sidecars (fsync+rename, crash-safe) on close; the
+            # restarted rank re-opens resident shards and spans from disk
+            # instead of re-fetching them, so the origin sees (near) zero
+            # traffic for data the dead rank already paid for.
+            warm_dir = d + "/warm_cache"
+            run1 = ShardDataset(srv.url, cache_dir=warm_dir, persist_cache=True)
+            for i in range(len(run1)):
+                run1[i]  # epoch 1: fill the cache
+            run1.close()  # "crash": state persisted on the way down
+
+            origin_before = srv.requests
+            run2 = ShardDataset(srv.url, cache_dir=warm_dir, persist_cache=True)
+            for i in range(len(run2)):
+                run2[i]  # epoch 2: served from the restored cache
+            reused = run2.prefetcher.stats()["warm_restart_bytes_reused"]
+            print(f"\nwarm restart: {reused / 2**20:.1f}MB re-opened from "
+                  f"the persisted cache, {srv.requests - origin_before} "
+                  "origin requests on the resumed epoch")
+            run2.close()
+
         # ---- columnar shards + projection pushdown (format v2) ----------
         # Real corpora carry more than pixels: pack image + caption as
         # named fields of a columnar v2 shard, then train image-only with

@@ -15,6 +15,7 @@ from .health import (
     StageHealth,
     disable_verify,
     origin_only,
+    shrink_replication,
     widen_sparse_threshold,
 )
 from .metrics import MetricsExporter, MetricsServer, StatsHistory, WindowRates
@@ -39,6 +40,7 @@ __all__ = [
     "DegradeAction",
     "disable_verify",
     "widen_sparse_threshold",
+    "shrink_replication",
     "origin_only",
     "ResourceSampler",
     "StageStatsSnapshot",

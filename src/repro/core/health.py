@@ -36,6 +36,10 @@ degradation applies the next rung.  The stock rungs:
   install (per-sample lazy CRC still protects reads);
 * ``widen_sparse_threshold(prefetcher, factor)`` — prefer sparse/partial
   shard fetches to whole-shard downloads, cutting bytes on the wire;
+* ``shrink_replication(tiered)`` — serve each shard from its ring owner
+  only (skip replica probes): keeps the peer tier but halves its
+  per-request fan-out — the rung *between* widening sparse fetches and
+  giving up on peers entirely;
 * ``origin_only(tiered)`` — stop consulting the peer tier entirely
   (``TieredSource.disable_peers``) when the fleet itself is the suspect.
 
@@ -120,6 +124,17 @@ def widen_sparse_threshold(prefetcher, factor: float = 4.0) -> DegradeAction:
         prefetcher.sparse_threshold = float(prefetcher.sparse_threshold) * factor
 
     return DegradeAction(f"widen_sparse_threshold(x{factor:g})", fn)
+
+
+def shrink_replication(tiered) -> DegradeAction:
+    """Serve each shard from its consistent-hash owner only — replica
+    probes are opportunistic work worth shedding before abandoning the
+    peer tier altogether.  Accepts a ``TieredSource`` (delegates to its
+    peer tier) or a ``PeerShardSource`` directly; a no-op ladder rung for
+    round-robin placement (it has no replicas to shed)."""
+
+    target = getattr(tiered, "peers", tiered)
+    return DegradeAction("shrink_replication", target.shrink_replication)
 
 
 def origin_only(tiered) -> DegradeAction:

@@ -432,6 +432,57 @@ class MetricsExporter:
 
         self.add_collector(collect)
 
+    def add_fleet(
+        self,
+        *,
+        peers: Any = None,
+        registry: Any = None,
+        admission: Any = None,
+        prefetcher: Any = None,
+        name: str = "fleet",
+    ) -> None:
+        """Export the elastic-shard-fleet gauges: ``peers_live`` /
+        ``peers_suspect`` (from the ``registry`` — authoritative — or the
+        consumer-side ``peers`` breaker view), ``ring_remaps_total`` and
+        ``admission_rejections_total``, and the prefetcher's
+        ``warm_restart_bytes_reused_total``.  Pass whichever components
+        this process actually hosts; absent ones export nothing."""
+
+        def collect() -> Iterable[str]:
+            f = _Families()
+            p = self.namespace
+            lb = {"fleet": name}
+            live = suspect = None
+            if registry is not None:
+                rs = registry.stats()
+                live, suspect = rs["peers_live"], rs["peers_suspect"]
+            ps = peers.stats() if peers is not None else {}
+            if live is None:
+                live = ps.get("peers_live")
+                suspect = ps.get("peers_suspect")
+            if live is not None:
+                f.add(f"{p}_fleet_peers_live", "gauge",
+                      "Fleet members currently live.", live, **lb)
+                f.add(f"{p}_fleet_peers_suspect", "gauge",
+                      "Fleet members with missed heartbeats.", suspect, **lb)
+            if "ring_remaps" in ps:
+                f.add(f"{p}_fleet_ring_remaps_total", "counter",
+                      "Consistent-hash arcs remapped by membership changes.",
+                      ps["ring_remaps"], **lb)
+            if admission is not None:
+                f.add(f"{p}_fleet_admission_rejections_total", "counter",
+                      "Requests answered 429 by admission control.",
+                      admission.stats()["admission_rejections"], **lb)
+            if prefetcher is not None:
+                f.add(f"{p}_fleet_warm_restart_bytes_reused_total", "counter",
+                      "Bytes re-opened from persisted state instead of "
+                      "re-fetched.",
+                      prefetcher.stats().get("warm_restart_bytes_reused", 0),
+                      **lb)
+            return f.render().splitlines()
+
+        self.add_collector(collect)
+
     def render(self) -> str:
         with self._lock:
             collectors = list(self._collectors)

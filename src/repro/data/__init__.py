@@ -4,8 +4,12 @@ from .dataset import ArrayDataset, SyntheticImageDataset, SyntheticTokenDataset
 from .loader import build_image_loader, build_lm_loader
 from .sampler import CheckpointableSampler
 from .shards import (
+    AdmissionController,
+    FleetMember,
+    HashRing,
     HttpShardSource,
     LocalShardSource,
+    MembershipRegistry,
     PeerShardServer,
     PeerShardSource,
     RetryingSource,
@@ -34,8 +38,12 @@ __all__ = [
     "ByteTokenizer",
     "build_image_loader",
     "build_lm_loader",
+    "AdmissionController",
+    "FleetMember",
+    "HashRing",
     "HttpShardSource",
     "LocalShardSource",
+    "MembershipRegistry",
     "PeerShardServer",
     "PeerShardSource",
     "RetryingSource",

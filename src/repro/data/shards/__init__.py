@@ -119,6 +119,14 @@ from .format import (
     ShardWriterV2,
     open_shard_reader,
 )
+from .membership import (
+    TENANT_HEADER,
+    AdmissionController,
+    FleetMember,
+    HashRing,
+    MembershipRegistry,
+    TokenBucket,
+)
 from .peer import PeerMiss, PeerShardServer, PeerShardSource, TieredSource
 from .prefetch import (
     LocalShardSource,
@@ -135,9 +143,14 @@ from .sources import (
 
 __all__ = [
     "MANIFEST_NAME",
+    "TENANT_HEADER",
+    "AdmissionController",
+    "FleetMember",
+    "HashRing",
     "HttpShardSource",
     "LocalShardSource",
     "MappedShardReader",
+    "MembershipRegistry",
     "PeerMiss",
     "PeerShardServer",
     "PeerShardSource",
@@ -156,6 +169,7 @@ __all__ = [
     "SourceUnavailable",
     "SparseShardReader",
     "TieredSource",
+    "TokenBucket",
     "open_shard_reader",
     "pack",
     "validate_shard_name",

@@ -150,16 +150,29 @@ class ShardDataset:
         retries: int = 4,
         peers: list[str] | None = None,
         peer_timeout: float = 2.0,
+        fleet: str | None = None,
+        persist_cache: bool = False,
     ):
         self._auto_cache_dir: pathlib.Path | None = None
+        self._fleet_member = None
         owns_prefetcher = False
-        if peers and prefetcher is not None:
+        if fleet and peers:
+            raise TypeError(
+                "fleet= discovers peers from the registry; don't also pass "
+                "a static peers= list"
+            )
+        if (peers or fleet) and prefetcher is not None:
             raise TypeError(
                 "peers= belongs to the URL-mode stack; with your own "
                 "prefetcher, wrap its source in a peer.TieredSource instead"
             )
-        if peers and not _is_url(root):
+        if (peers or fleet) and not _is_url(root):
             raise TypeError("peers= needs an http(s):// root (no origin to tier)")
+        if persist_cache and cache_dir is None:
+            raise TypeError(
+                "persist_cache= needs an explicit cache_dir= (an auto temp "
+                "cache is deleted on close, so there is nothing to resume)"
+            )
         if prefetcher is None and _is_url(root):
             # remote mode from a bare URL: build the standard source stack —
             # origin HTTP range reads → retry/backoff → (optional) warm-peer
@@ -183,13 +196,28 @@ class ShardDataset:
                 source = TieredSource(
                     source, PeerShardSource(peers, timeout=peer_timeout)
                 )
+            elif fleet:
+                # elastic peer tier: membership comes from the registry and
+                # shards route by consistent hash, so ranks can join/leave
+                # mid-epoch without a config change
+                from .membership import FleetMember
+                from .peer import PeerShardSource, TieredSource
+
+                ps = PeerShardSource(
+                    [], timeout=peer_timeout, placement="ring"
+                )
+                source = TieredSource(source, ps)
+                self._fleet_member = FleetMember(fleet, peers=ps)
             prefetcher = ShardPrefetcher(
                 source,
                 cache_dir,
                 max_bytes=cache_bytes,
                 verify_on_install=bool(verify_crc),
+                persist_state=persist_cache,
             )
             owns_prefetcher = True
+            if self._fleet_member is not None:
+                self._fleet_member.start()
         self.root = root if _is_url(root) else pathlib.Path(root)
         self.prefetcher = prefetcher
         self.verify_crc = verify_crc
@@ -239,6 +267,9 @@ class ShardDataset:
             # a stack built here must not leak its thread pool, sockets, or
             # temp cache dir when the manifest turns out to be bad
             if owns_prefetcher:
+                if self._fleet_member is not None:
+                    self._fleet_member.close()
+                    self._fleet_member = None
                 prefetcher.close()
                 self._cleanup_auto_cache()
             raise
@@ -416,6 +447,9 @@ class ShardDataset:
         for r in self._readers.values():
             r.close()
         self._readers.clear()
+        if self._fleet_member is not None:
+            self._fleet_member.close()
+            self._fleet_member = None
         if self.prefetcher is not None:
             self.prefetcher.close()
         # a cache dir we mkdtemp'd is ours to remove — leaving it would

@@ -59,6 +59,45 @@ entries or resident sparse spans exactly as it answers v1 sample ranges —
 a rank that only ever fetched the ``image`` column serves those column
 spans (plus the re-serialized header/column index) to its peers.
 
+Fleet failure semantics
+-----------------------
+The elastic-fleet layer (``membership.py``) turns the static peer list
+into a live ring.  What each event means, end to end:
+
+=============  =============================================================
+Event          Semantics
+=============  =============================================================
+**join**       A rank registers with the registry (``/fleet/register``) and
+               starts heartbeating.  Consumers polling ``/fleet/members``
+               add it via ``sync_membership`` — the consistent-hash ring
+               remaps only the arcs the newcomer now owns (~1/N of the
+               keyspace); every other shard keeps its owner and stays warm.
+**leave**      Graceful: ``/fleet/leave`` removes the member, one ring
+               rebuild, bounded remap.  Crash: heartbeats stop — after
+               ``suspect_after_s`` the registry marks it *suspect* and
+               consumers bench it straight into the request-path circuit
+               breaker (``mark_suspect``) without burning a request
+               timeout; after ``dead_after_s`` it is swept from the view
+               and removed from the ring.  A peer already OPEN when the
+               suspect verdict arrives is NOT double-benched: its existing
+               cooldown stands (``mark_suspect`` never extends
+               ``_down_until``).
+**restart**    The rank re-registers (same or new URL).  Its prefetcher
+               re-opens persisted full shards and sparse spans from the
+               warm-restart sidecar (``persist_state=True``) instead of
+               re-fetching, so it rejoins the fleet *warm*.  On the
+               consumer side a suspect→live transition offers the peer
+               exactly ONE half-open probe (``mark_live`` rewinds the
+               cooldown; the probe — not the registry — closes the
+               circuit).
+**quota**      Admission control (``AdmissionController``): an over-quota
+               tenant (``X-Tenant``) or an over-capacity server gets a
+               structured ``429`` + ``Retry-After``.  ``RetryingSource``
+               honors the hint; peers treat a 429 like any transport
+               fault (bench + retry elsewhere), so one greedy consumer
+               degrades alone instead of collapsing the fleet.
+=============  =============================================================
+
 ``testing.ShardHTTPServer`` remains the *origin* fixture (serving a shard
 directory); this module is the production peer tier grown out of it.
 """
@@ -68,6 +107,7 @@ from __future__ import annotations
 import http.client
 import http.server
 import itertools
+import json
 import re
 import threading
 import time
@@ -80,6 +120,7 @@ from ...core import trace as _trace
 from ...core.metrics import CONTENT_TYPE_LATEST as _METRICS_CONTENT_TYPE
 from .dataset import validate_shard_name
 from .format import MappedShardReader
+from .membership import TENANT_HEADER, HashRing
 from .sources import HttpShardSource, RangeNotSupported, SourceUnavailable
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
@@ -125,36 +166,100 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
             self.server.misses += 1
         self._send(404, why.encode(), {MISS_HEADER: why})
 
+    def _fleet(self, op: str, query: str) -> None:
+        """Registry endpoints (``/fleet/*``): JSON control plane riding the
+        same port as the data plane.  Kept outside the shard request
+        counters — membership chatter must not skew cache hit rates."""
+        reg = self.server.registry
+        params = dict(urllib.parse.parse_qsl(query))
+
+        def _json(obj, status: int = 200) -> None:
+            body = json.dumps(obj).encode()
+            self._send(status, body, {"Content-Type": "application/json"})
+
+        if op == "members":
+            _json(reg.members())
+        elif op == "register":
+            pid, url = params.get("id"), params.get("url")
+            if not pid or not url:
+                _json({"error": "id and url required"}, 400)
+                return
+            _json(reg.register(pid, url))
+        elif op == "heartbeat":
+            pid = params.get("id")
+            if not pid:
+                _json({"error": "id required"}, 400)
+                return
+            _json({"ok": reg.heartbeat(pid)})
+        elif op == "leave":
+            pid = params.get("id")
+            if not pid:
+                _json({"error": "id required"}, 400)
+                return
+            reg.leave(pid)
+            _json({"ok": True})
+        else:
+            _json({"error": f"unknown fleet op {op!r}"}, 404)
+
+    def _admit(self, nbytes: int) -> bool:
+        """Per-tenant quota gate, called just before a body is sent.  False
+        means a 429 + Retry-After already went out."""
+        adm = self.server.admission
+        if adm is None:
+            return True
+        tenant = self.headers.get(TENANT_HEADER, "default")
+        wait = adm.admit(tenant, nbytes)
+        if wait is None:
+            return True
+        self._send(429, b"over quota", {"Retry-After": f"{wait:.3f}"})
+        return False
+
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
         srv = self.server
-        if self.path.split("?", 1)[0] == "/metrics" and srv.metrics is not None:
+        path, _, query = self.path.partition("?")
+        if path == "/metrics" and srv.metrics is not None:
             # mounted observability endpoint: Prometheus text exposition
             # (checked before shard resolution; "/metrics" is reserved)
             body = srv.metrics.render().encode()
             self._send(200, body, {"Content-Type": _METRICS_CONTENT_TYPE})
             return
-        with srv.lock:
-            srv.requests += 1
-        name = urllib.parse.unquote(self.path.lstrip("/"))
-        try:
-            validate_shard_name(name)
-        except ValueError:
-            self._miss("bad-name")  # peers only ever serve bare shard names
+        if path.startswith("/fleet/") and srv.registry is not None:
+            # control plane (reserved like /metrics: validate_shard_name
+            # rejects any "/" so no shard can ever shadow these paths)
+            self._fleet(path[len("/fleet/") :], query)
             return
-        reader = srv.prefetcher.peek(name)  # never fetches, never touches LRU
-        if reader is None:
-            self._miss("absent")
+        adm = srv.admission
+        if adm is not None and not adm.start_request():
+            self._send(
+                429, b"at capacity", {"Retry-After": f"{adm.retry_wait_s:.3f}"}
+            )
             return
-        range_header = self.headers.get("Range")
         try:
-            if range_header:
-                self._serve_range(reader, range_header.strip())
-            else:
-                self._serve_whole(reader)
-        except Exception:
-            # reader torn down mid-serve (prefetcher closed, entry evicted
-            # and unmapped): a miss, not a 500 — the client has the origin
-            self._miss("unavailable")
+            with srv.lock:
+                srv.requests += 1
+            name = urllib.parse.unquote(path.lstrip("/"))
+            try:
+                validate_shard_name(name)
+            except ValueError:
+                self._miss("bad-name")  # peers only ever serve bare shard names
+                return
+            reader = srv.prefetcher.peek(name)  # never fetches, no LRU touch
+            if reader is None:
+                self._miss("absent")
+                return
+            range_header = self.headers.get("Range")
+            try:
+                if range_header:
+                    self._serve_range(reader, range_header.strip())
+                else:
+                    self._serve_whole(reader)
+            except Exception:
+                # reader torn down mid-serve (prefetcher closed, entry evicted
+                # and unmapped): a miss, not a 500 — the client has the origin
+                self._miss("unavailable")
+        finally:
+            if adm is not None:
+                adm.end_request()
 
     def _serve_whole(self, reader) -> None:
         if not isinstance(reader, MappedShardReader):
@@ -163,6 +268,8 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
             self._miss("sparse")
             return
         body = reader.raw(0, reader.nbytes)
+        if not self._admit(len(body)):
+            return
         with self.server.lock:
             self.server.served_whole += 1
         self._send(200, body)
@@ -187,6 +294,8 @@ class _PeerRequestHandler(http.server.BaseHTTPRequestHandler):
         body = reader.raw(start, length)
         if body is None:  # sparse entry: the range is not resident
             self._miss("cold-range")
+            return
+        if not self._admit(len(body)):
             return
         with self.server.lock:
             self.server.served_ranges += 1
@@ -213,6 +322,16 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
     Counters (under ``lock``, also via ``stats()``): ``requests``,
     ``misses``, ``served_whole``, ``served_ranges``, ``bytes_served``,
     ``connections``.
+
+    Optional fleet hooks:
+
+    * ``registry=`` mounts the ``/fleet/*`` membership endpoints
+      (``register``/``heartbeat``/``leave``/``members``) — any one rank's
+      server can host the fleet registry alongside its data plane.
+    * ``admission=`` gates every shard request through an
+      ``AdmissionController`` (max-inflight cap + per-tenant token-bucket
+      quotas keyed on the ``X-Tenant`` header) answering structured
+      ``429`` + ``Retry-After`` when over.
     """
 
     daemon_threads = True
@@ -224,11 +343,17 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
         host: str = "127.0.0.1",
         port: int = 0,
         metrics=None,
+        registry=None,
+        admission=None,
     ):
         self.prefetcher = prefetcher
         # optional core.metrics.MetricsExporter: mounts GET /metrics on this
         # server (one port serves shards to peers AND telemetry to scrapers)
         self.metrics = metrics
+        # optional membership.MembershipRegistry: mounts /fleet/* endpoints
+        self.registry = registry
+        # optional membership.AdmissionController: quota + inflight gating
+        self.admission = admission
         self.lock = threading.Lock()
         self.requests = 0
         self.misses = 0
@@ -255,7 +380,7 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
 
     def stats(self) -> dict[str, int]:
         with self.lock:
-            return {
+            out = {
                 "requests": self.requests,
                 "misses": self.misses,
                 "served_whole": self.served_whole,
@@ -263,6 +388,9 @@ class PeerShardServer(http.server.ThreadingHTTPServer):
                 "bytes_served": self.bytes_served,
                 "connections": self.connections,
             }
+        if self.admission is not None:
+            out.update(self.admission.stats())
+        return out
 
     def close(self) -> None:
         if self._thread is not None:
@@ -305,6 +433,17 @@ class PeerShardSource:
     not one per concurrent fetch.  A probe that completes at the transport
     level (data back, or a structured miss) CLOSEs the circuit; a probe
     that fails re-OPENs it for another ``cooldown_s``.
+
+    Placement: ``placement="round_robin"`` (default) keeps the PR-4
+    behaviour — every healthy peer probed in rotating order.
+    ``placement="ring"`` routes each request over a consistent-hash ring
+    (``HashRing`` with ``vnodes`` points per peer) to the shard's owner
+    plus ``replicas`` distinct backups: O(owner+replicas) probes instead
+    of O(peers), and a membership change remaps only ~1/N of the
+    keyspace.  Ring mode allows an *empty* initial peer list — the
+    membership layer (``FleetMember.sync_membership``) grows and shrinks
+    the ring live via ``add_peer``/``remove_peer``/``mark_suspect``/
+    ``mark_live``.
     """
 
     def __init__(
@@ -315,10 +454,17 @@ class PeerShardSource:
         cooldown_s: float = 5.0,
         headers: dict[str, str] | None = None,
         clock=time.monotonic,
+        placement: str = "round_robin",
+        replicas: int = 1,
+        vnodes: int = 64,
     ):
-        urls = list(peer_urls)
-        if not urls:
+        if placement not in ("round_robin", "ring"):
+            raise ValueError(f"unknown placement {placement!r}")
+        urls = [u.rstrip("/") for u in peer_urls]
+        if not urls and placement != "ring":
             raise ValueError("PeerShardSource needs at least one peer URL")
+        self._timeout = timeout
+        self._headers = headers
         self._sources = [
             HttpShardSource(u, timeout=timeout, headers=headers) for u in urls
         ]
@@ -329,66 +475,111 @@ class PeerShardSource:
         self._state = [_CLOSED] * len(self._sources)
         self._down_until = [0.0] * len(self._sources)
         self._rr = itertools.count()
+        self.placement = placement
+        self.replicas = replicas
+        self._ring = (
+            HashRing(self.peer_urls, vnodes=vnodes) if placement == "ring" else None
+        )
+        self._urls_index = {u: i for i, u in enumerate(self.peer_urls)}
         self.hits = 0
         self.misses = 0  # requests no peer could serve
         self.errors = 0  # transport failures observed (circuit trips)
         self.probes = 0  # half-open probe requests issued
         self.recoveries = 0  # probes that closed the circuit again
         self.bytes_fetched = 0
+        self.suspected = 0  # membership-driven preemptive benchings
+        self.ring_remaps = 0  # vnode arcs that changed owner, cumulative
+        self.membership_changes = 0
 
-    def _settle(self, i: int) -> None:
+    def _resolve_locked(self, i: int, src) -> int | None:
+        """Re-anchor index ``i`` to ``src`` — membership mutations can
+        shift the parallel lists between a request capturing an index and
+        its outcome landing.  None = the peer was removed mid-request."""
+        if 0 <= i < len(self._sources) and self._sources[i] is src:
+            return i
+        try:
+            return self._sources.index(src)
+        except ValueError:
+            return None
+
+    def _settle(self, i: int, src=None) -> None:
         """Peer ``i`` answered at the transport level: close its circuit
         (a successful probe is a recovery; a closed peer is a no-op)."""
         with self._lock:
+            if src is not None:
+                j = self._resolve_locked(i, src)
+                if j is None:
+                    return
+                i = j
             recovered = self._state[i] == _HALF_OPEN
             changed = self._state[i] != _CLOSED
             if recovered:
                 self.recoveries += 1
             self._state[i] = _CLOSED
+            url = self.peer_urls[i]
         if changed:
             tracer = _trace.get_tracer()
             if tracer.enabled:
                 tracer.instant(
                     "breaker:close", "peer",
-                    {"peer": self.peer_urls[i], "recovered": recovered},
+                    {"peer": url, "recovered": recovered},
                 )
 
-    def _trip(self, i: int) -> None:
+    def _trip(self, i: int, src=None) -> None:
         """Peer ``i`` failed at the transport level: open its circuit."""
         with self._lock:
+            if src is not None:
+                j = self._resolve_locked(i, src)
+                if j is None:
+                    return
+                i = j
             self.errors += 1
             self._state[i] = _OPEN
             self._down_until[i] = self._clock() + self.cooldown_s
+            url = self.peer_urls[i]
         tracer = _trace.get_tracer()
         if tracer.enabled:
             tracer.instant(
                 "breaker:open", "peer",
-                {"peer": self.peer_urls[i], "cooldown_s": self.cooldown_s},
+                {"peer": url, "cooldown_s": self.cooldown_s},
             )
 
-    def _try_each(self, op, what: str) -> bytes:
+    def _candidates_locked(self, key: str | None) -> list[int]:
+        """Probe order for one request: ring owner + replicas when placed,
+        rotating full scan otherwise."""
         n = len(self._sources)
+        if n == 0:
+            return []
+        if self._ring is not None and key is not None:
+            want = 1 + max(0, self.replicas)
+            return [
+                self._urls_index[u]
+                for u in self._ring.owners(key, want)
+                if u in self._urls_index
+            ]
+        start = next(self._rr) % n
+        return [(start + k) % n for k in range(n)]
+
+    def _try_each(self, op, what: str, key: str | None = None) -> bytes:
         with self._lock:
-            start = next(self._rr) % n
             now = self._clock()
-            eligible = []
+            eligible = []  # (index, source) — identity survives list shifts
             admitted: set[int] = set()  # promoted to half-open, not yet probed
-            for k in range(n):
-                i = (start + k) % n
+            for i in self._candidates_locked(key):
                 state = self._state[i]
                 if state == _CLOSED:
-                    eligible.append(i)
+                    eligible.append((i, self._sources[i]))
                 elif state == _OPEN and self._down_until[i] <= now:
                     # cooldown expired: let exactly THIS request through as
                     # the half-open probe; concurrent requests keep skipping
                     # until the probe settles the circuit one way or the other
                     self._state[i] = _HALF_OPEN
                     admitted.add(i)
-                    eligible.append(i)
+                    eligible.append((i, self._sources[i]))
                 # _HALF_OPEN (someone else's probe in flight) or a still-
                 # cooling _OPEN peer: skip outright, no timeout paid
         try:
-            for i in eligible:
+            for i, src in eligible:
                 if i in admitted:
                     # the probe is actually going out: from here its outcome
                     # (settle or trip) owns the circuit transition
@@ -398,14 +589,14 @@ class PeerShardSource:
                     tracer = _trace.get_tracer()
                     if tracer.enabled:
                         tracer.instant(
-                            "breaker:probe", "peer", {"peer": self.peer_urls[i]}
+                            "breaker:probe", "peer", {"peer": src.root_url}
                         )
                 try:
-                    data = op(self._sources[i])
+                    data = op(src)
                 except FileNotFoundError:
                     # structured miss: the transport is fine, the peer just
                     # doesn't hold it — a healthy answer for the breaker
-                    self._settle(i)
+                    self._settle(i, src)
                     continue
                 except (
                     SourceUnavailable,
@@ -419,9 +610,9 @@ class PeerShardSource:
                 ):
                     # dead/flaky/stale peer: open its circuit so its timeout
                     # stops taxing every fetch; the origin tier covers it
-                    self._trip(i)
+                    self._trip(i, src)
                     continue
-                self._settle(i)
+                self._settle(i, src)
                 with self._lock:
                     self.hits += 1
                     self.bytes_fetched += len(data)
@@ -433,16 +624,115 @@ class PeerShardSource:
             # the peer would sit in HALF_OPEN forever and never recover.
             if admitted:
                 with self._lock:
-                    for i in admitted:
-                        if self._state[i] == _HALF_OPEN:
-                            self._state[i] = _OPEN
+                    for i, src in eligible:
+                        if i in admitted:
+                            j = self._resolve_locked(i, src)
+                            if j is not None and self._state[j] == _HALF_OPEN:
+                                self._state[j] = _OPEN
         with self._lock:
             self.misses += 1
         raise PeerMiss(f"no peer could serve {what}")
 
+    # -- membership hooks (driven by membership.FleetMember) ----------------
+    def _rebuild_ring_locked(self) -> None:
+        self._urls_index = {u: i for i, u in enumerate(self.peer_urls)}
+        if self._ring is not None:
+            moved = self._ring.rebuild(self.peer_urls)
+            self.ring_remaps += moved
+            self.membership_changes += 1
+
+    def add_peer(self, url: str) -> bool:
+        """Admit a new live peer (no-op if already present)."""
+        url = url.rstrip("/")
+        src = None
+        with self._lock:
+            if url in self._urls_index:
+                return False
+            src = HttpShardSource(url, timeout=self._timeout, headers=self._headers)
+            self._sources.append(src)
+            self.peer_urls.append(src.root_url)
+            self._state.append(_CLOSED)
+            self._down_until.append(0.0)
+            self._rebuild_ring_locked()
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            tracer.instant("fleet:join", "peer", {"peer": url})
+        return True
+
+    def remove_peer(self, url: str) -> bool:
+        """Drop a departed peer; its ring arcs move to the survivors."""
+        url = url.rstrip("/")
+        with self._lock:
+            i = self._urls_index.get(url)
+            if i is None:
+                return False
+            src = self._sources.pop(i)
+            self.peer_urls.pop(i)
+            self._state.pop(i)
+            self._down_until.pop(i)
+            self._rebuild_ring_locked()
+        src.close()
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            tracer.instant("fleet:leave", "peer", {"peer": url})
+        return True
+
+    def mark_suspect(self, url: str) -> None:
+        """Membership says this peer missed heartbeats: bench it NOW
+        instead of paying a request-time timeout to find out.  A peer
+        already OPEN (or probing) keeps its existing cooldown untouched —
+        the registry's verdict must never *extend* a request-path bench
+        (no double-benching)."""
+        url = url.rstrip("/")
+        with self._lock:
+            i = self._urls_index.get(url)
+            if i is None or self._state[i] != _CLOSED:
+                return
+            self._state[i] = _OPEN
+            self._down_until[i] = self._clock() + self.cooldown_s
+            self.suspected += 1
+        tracer = _trace.get_tracer()
+        if tracer.enabled:
+            tracer.instant("breaker:suspect", "peer", {"peer": url})
+
+    def mark_live(self, url: str) -> None:
+        """Membership says a suspect peer heartbeats again: rewind its
+        cooldown so the NEXT request admits exactly one half-open probe.
+        Deliberately does NOT force-close the circuit — the data path, not
+        the control plane, gets the final say on usability."""
+        url = url.rstrip("/")
+        with self._lock:
+            i = self._urls_index.get(url)
+            if i is None or self._state[i] != _OPEN:
+                return
+            self._down_until[i] = min(self._down_until[i], self._clock())
+
+    def sync_membership(self, live_urls, suspect_urls=()) -> None:
+        """Reconcile the peer set with a registry view: add newcomers,
+        drop unknowns, bench suspects.  ``live_urls`` is the full member
+        list (including suspects); ``suspect_urls`` flags the subset to
+        bench preemptively."""
+        want = {u.rstrip("/") for u in live_urls}
+        with self._lock:
+            have = set(self._urls_index)
+        for url in want - have:
+            self.add_peer(url)
+        for url in have - want:
+            self.remove_peer(url)
+        for url in suspect_urls:
+            self.mark_suspect(url)
+
+    def shrink_replication(self) -> None:
+        """Graceful-degradation hook (``core.health.shrink_replication``):
+        serve from the ring owner only — replica probes are optional work
+        worth shedding when the consumer is already behind.  One-way for
+        this source's lifetime; a no-op under round-robin placement."""
+        with self._lock:
+            self.replicas = 0
+
     # -- RemoteShardSource protocol ----------------------------------------
     def fetch(self, name: str) -> bytes:
-        return self._try_each(lambda s: s.fetch(name), name)
+        return self._try_each(lambda s: s.fetch(name), name, key=name)
 
     def fetch_range(self, name: str, start: int, length: int) -> bytes:
         def op(src):
@@ -453,7 +743,7 @@ class PeerShardSource:
                 # body is in hand, serve the slice — still a peer hit
                 return bytes(memoryview(e.body)[start : start + length])
 
-        data = self._try_each(op, f"{name}[{start}:+{length}]")
+        data = self._try_each(op, f"{name}[{start}:+{length}]", key=name)
         if len(data) != length:
             # a torn peer copy must read as a miss, not corrupt the range
             raise PeerMiss(f"peer returned {len(data)} bytes for {name}+{length}")
@@ -462,6 +752,7 @@ class PeerShardSource:
     # -- visibility / lifecycle --------------------------------------------
     def stats(self) -> dict[str, float]:
         with self._lock:
+            down = sum(1 for s in self._state if s != _CLOSED)
             return {
                 "hits": self.hits,
                 "misses": self.misses,
@@ -472,7 +763,13 @@ class PeerShardSource:
                 "peers": len(self._sources),
                 # a peer is down until a half-open probe actually closes its
                 # circuit — an expired cooldown alone proves nothing
-                "peers_down": sum(1 for s in self._state if s != _CLOSED),
+                "peers_down": down,
+                "peers_live": len(self._sources) - down,
+                "peers_suspect": down,
+                "suspected": self.suspected,
+                "ring_remaps": self.ring_remaps,
+                "membership_changes": self.membership_changes,
+                "replicas": self.replicas,
             }
 
     def close(self) -> None:
@@ -560,6 +857,11 @@ class TieredSource:
     def peers_disabled(self) -> bool:
         with self._lock:
             return self._peers_disabled
+
+    def shrink_replication(self) -> None:
+        """Degradation rung below ``disable_peers``: keep the peer tier but
+        serve each shard from its ring owner only (skip replica probes)."""
+        self.peers.shrink_replication()
 
     # -- internals ----------------------------------------------------------
     def _record_peer_win(self, data: bytes) -> None:
@@ -733,6 +1035,9 @@ class TieredSource:
         out["peers_down"] = peer_stats.get("peers_down", 0)
         out["peer_probes"] = peer_stats.get("probes", 0)
         out["peer_recoveries"] = peer_stats.get("recoveries", 0)
+        out["peers_live"] = peer_stats.get("peers_live", 0)
+        out["peers_suspect"] = peer_stats.get("peers_suspect", 0)
+        out["ring_remaps"] = peer_stats.get("ring_remaps", 0)
         return out
 
     def close(self) -> None:

@@ -99,10 +99,12 @@ from __future__ import annotations
 
 import bisect
 import functools
+import json
 import logging
 import os
 import pathlib
 import random
+import struct
 import threading
 import time
 import zlib
@@ -510,6 +512,29 @@ class SparseShardReader:
                 return None
             return self._find_locked(start, length)
 
+    # -- warm-restart persistence ------------------------------------------
+    def spans_snapshot(self) -> list[tuple[int, bytes]]:
+        """Consistent ``(start, payload)`` snapshot of the resident spans —
+        what the prefetcher's warm-restart sidecar persists.  Spans are
+        immutable ``bytes``, so the copy is reference-cheap."""
+        with self._lock:
+            return list(zip(self._starts, self._spans))
+
+    def restore_spans(self, spans) -> int:
+        """Re-insert persisted ``(start, payload)`` spans (a restart's warm
+        resume); returns resident bytes added.  Goes through the normal
+        nesting-free insert, so overlapping/stale sidecar spans degrade to
+        their net coverage instead of double-counting."""
+        grown = 0
+        with self._lock:
+            if self._closed:
+                return 0
+            for start, data in spans:
+                grown += self._insert_locked(int(start), bytes(data))
+        if grown and self._on_grow is not None:
+            self._on_grow(grown)
+        return grown
+
     def close(self) -> None:
         with self._lock:
             self._closed = True
@@ -518,6 +543,12 @@ class SparseShardReader:
             self._starts = []
             self._spans = []
             self._bytes_held = 0
+
+
+#: warm-restart sidecar magic (8 bytes) — versioned like the shard magic
+_WARM_MAGIC = b"RPWARM01"
+_WARM_DIR = ".warm"
+_WARM_MANIFEST = "manifest.json"
 
 
 class ShardPrefetcher:
@@ -549,12 +580,19 @@ class ShardPrefetcher:
         promote_threshold: float | None = 0.5,
         coalesce_gap: int = 1 << 16,
         verify_on_install: bool = True,
+        persist_state: bool = False,
     ):
         if max_bytes < 1:
             raise ValueError("max_bytes must be >= 1")
         self.source = source
         self.cache_dir = pathlib.Path(cache_dir)
         self.cache_dir.mkdir(parents=True, exist_ok=True)
+        #: warm restart: persist the cache manifest + sparse-span sidecars
+        #: under ``cache_dir/.warm`` on close() (crash-safe fsync+rename)
+        #: and re-open resident entries on construction instead of
+        #: re-fetching them.  Needs a STABLE cache_dir across runs.
+        self.persist_state = persist_state
+        self._state_dir = self.cache_dir / _WARM_DIR
         self.max_bytes = max_bytes
         self.max_inflight = max_inflight
         has_range = callable(getattr(source, "fetch_range", None))
@@ -607,6 +645,16 @@ class ShardPrefetcher:
         self.index_fetches = 0
         self.range_fetches = 0
         self.fetch_time = 0.0
+        #: bytes re-opened from a previous run's persisted state instead of
+        #: re-fetched (full cache files + sparse sidecar spans)
+        self.warm_restart_bytes_reused = 0
+        if self.persist_state:
+            try:
+                self._restore_state()
+            except Exception:
+                # a damaged warm state must never block a cold start
+                logger.warning("warm-restart state unusable; starting cold",
+                               exc_info=True)
 
     # -- manifest -----------------------------------------------------------
     def fetch_manifest(self) -> bytes:
@@ -1132,6 +1180,183 @@ class ShardPrefetcher:
             entry = self._cached.get(name)
             return entry[0] if entry is not None else None
 
+    # -- warm restart --------------------------------------------------------
+    # A restarted rank re-fetching shards it already paid for is the
+    # ROADMAP carry-over this closes: full entries are already durable
+    # cache files (fsync+rename at _persist), so the manifest only has to
+    # name them; sparse entries additionally persist their resident spans
+    # to a ``.warm/<name>.spans`` sidecar.  Sidecar layout::
+    #
+    #     RPWARM01 | u32 meta_len | meta JSON | header | index | spans | u32 crc
+    #
+    # with the crc32 over everything between magic and trailer — a torn
+    # sidecar (crash mid-rename is already impossible; crash mid-*write*
+    # leaves a .part file we never read) or a hand-damaged one fails the
+    # crc and is skipped, never trusted.
+
+    def _write_atomic(self, path: pathlib.Path, data: bytes) -> None:
+        """The PR-3 crash-safety pattern: write + fsync a unique temp, then
+        atomically rename over the target."""
+        tmp = path.with_suffix(f"{path.suffix}.{threading.get_ident():x}.part")
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        tmp.replace(path)
+
+    @staticmethod
+    def _encode_sparse(reader: SparseShardReader) -> bytes | None:
+        spans = reader.spans_snapshot()
+        try:
+            header = bytes(reader.index.header_bytes())
+            index_bytes = bytes(reader.index.index_bytes())
+        except Exception:
+            return None
+        meta = {
+            "name": reader.name,
+            "fields": list(reader.fields) if reader.fields is not None else None,
+            "index_len": len(index_bytes),
+            "spans": [[int(s), len(d)] for s, d in spans],
+        }
+        meta_blob = json.dumps(meta).encode()
+        parts = [struct.pack("<I", len(meta_blob)), meta_blob, header, index_bytes]
+        parts.extend(bytes(d) for _, d in spans)
+        payload = b"".join(parts)
+        return _WARM_MAGIC + payload + struct.pack("<I", zlib.crc32(payload))
+
+    def _restore_sparse(self, name: str, blob: bytes) -> SparseShardReader:
+        if len(blob) < len(_WARM_MAGIC) + 8 or not blob.startswith(_WARM_MAGIC):
+            raise ValueError(f"{name}: not a warm-restart sidecar")
+        payload = blob[len(_WARM_MAGIC) : -4]
+        (crc,) = struct.unpack("<I", blob[-4:])
+        if zlib.crc32(payload) != crc:
+            raise ValueError(f"{name}: sidecar crc mismatch (torn write?)")
+        (meta_len,) = struct.unpack_from("<I", payload, 0)
+        off = 4
+        meta = json.loads(payload[off : off + meta_len])
+        off += meta_len
+        if meta.get("name") != name:
+            raise ValueError(f"{name}: sidecar names {meta.get('name')!r}")
+        header = payload[off : off + HEADER_SIZE]
+        off += HEADER_SIZE
+        index_len = int(meta["index_len"])
+        index_bytes = payload[off : off + index_len]
+        off += index_len
+        version, _n, _index_off, _payload_off = parse_shard_header(header, name)
+        if version >= FORMAT_VERSION_V2:
+            idx = ShardIndexV2.parse(header, index_bytes, name)
+        else:
+            idx = ShardIndex.parse(header, index_bytes, name)
+        fields = tuple(meta["fields"]) if meta.get("fields") else None
+        reader = SparseShardReader(
+            name,
+            idx,
+            functools.partial(self._range_fetch, name),
+            coalesce_gap=self.coalesce_gap,
+            fields=fields,
+        )
+        spans: list[tuple[int, bytes]] = []
+        for start, ln in meta.get("spans", ()):
+            spans.append((int(start), payload[off : off + int(ln)]))
+            off += int(ln)
+        if off != len(payload):
+            raise ValueError(f"{name}: sidecar length mismatch")
+        reader.restore_spans(spans)
+        with self._lock:
+            self._indexes.setdefault(name, idx)
+        return reader
+
+    def save_state(self) -> int:
+        """Persist the cache manifest + sparse sidecars under
+        ``cache_dir/.warm``; returns the number of entries saved.  Called
+        automatically from ``close()`` when ``persist_state=True``; safe to
+        call mid-run for checkpoint-style durability."""
+        self._state_dir.mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            snapshot = [(name, r) for name, (r, _) in self._cached.items()]
+        entries: list[dict] = []
+        kept: set[str] = set()
+        for name, reader in snapshot:  # LRU order, oldest first
+            if isinstance(reader, MappedShardReader):
+                # the cache file IS the durable state; just index it
+                if (self.cache_dir / name).exists():
+                    entries.append({"name": name, "kind": "full"})
+            elif isinstance(reader, SparseShardReader):
+                blob = self._encode_sparse(reader)
+                if blob is None:
+                    continue
+                side = self._state_dir / f"{name}.spans"
+                self._write_atomic(side, blob)
+                kept.add(side.name)
+                entries.append({"name": name, "kind": "sparse"})
+        manifest = {
+            "version": 1,
+            "verified": bool(self.verify_on_install),
+            "entries": entries,
+        }
+        self._write_atomic(
+            self._state_dir / _WARM_MANIFEST,
+            json.dumps(manifest, indent=1).encode(),
+        )
+        # prune sidecars for entries that no longer exist (evicted/promoted)
+        for p in self._state_dir.glob("*.spans"):
+            if p.name not in kept:
+                p.unlink(missing_ok=True)
+        return len(entries)
+
+    def _restore_state(self) -> None:
+        """Re-open the previous run's resident entries (constructor path —
+        single-threaded, cache empty).  Every entry is best-effort: a
+        missing file, torn sidecar, or corrupt shard is skipped and simply
+        re-fetched on demand like any cold shard."""
+        manifest_path = self._state_dir / _WARM_MANIFEST
+        try:
+            manifest = json.loads(manifest_path.read_text())
+        except (OSError, ValueError):
+            return
+        if manifest.get("version") != 1:
+            return
+        prior_verified = bool(manifest.get("verified"))
+        reused = 0
+        for entry in manifest.get("entries", ()):  # oldest-first keeps LRU
+            name, kind = entry.get("name"), entry.get("kind")
+            if not name:
+                continue
+            try:
+                validate_shard_name(name)
+                if kind == "full":
+                    reader = open_shard_reader(self.cache_dir / name)
+                    if self.verify_on_install and not prior_verified:
+                        bad = reader.verify_all()
+                        if bad:
+                            logger.warning(
+                                "shard %s: %d corrupt sample(s) at warm restart",
+                                name, bad,
+                            )
+                            with self._lock:
+                                self.corrupt_samples += bad
+                elif kind == "sparse":
+                    side = self._state_dir / f"{name}.spans"
+                    reader = self._restore_sparse(name, side.read_bytes())
+                else:
+                    continue
+            except Exception:
+                continue
+            nbytes = reader.nbytes
+            self._install(name, reader)
+            with self._lock:
+                installed = self._cached.get(name)
+                if installed is not None and installed[0] is reader:
+                    reused += nbytes
+        if reused:
+            with self._lock:
+                self.warm_restart_bytes_reused += reused
+            tracer = _trace.get_tracer()
+            if tracer.enabled:
+                tracer.instant(
+                    "cache:warm-restart", "shard", {"bytes_reused": reused}
+                )
+
     # -- visibility / lifecycle --------------------------------------------
     @property
     def prefetch_depth(self) -> int:
@@ -1157,6 +1382,7 @@ class ShardPrefetcher:
                 "range_fetches": self.range_fetches,
                 "promotions": self.promotions,
                 "corrupt_samples": self.corrupt_samples,
+                "warm_restart_bytes_reused": self.warm_restart_bytes_reused,
                 "sparse_shards": sum(
                     1
                     for r, _ in self._cached.values()
@@ -1182,6 +1408,15 @@ class ShardPrefetcher:
         # cancelling them here would make that thread's set_result() blow
         # up with InvalidStateError, so they are left to complete.
         self._pool.shutdown(wait=True, cancel_futures=True)
+        if self.persist_state:
+            # after the pool drains (cache content settled), before readers
+            # close (sparse snapshots need their spans still resident)
+            try:
+                self.save_state()
+            except Exception:
+                logger.warning(
+                    "failed to persist warm-restart state", exc_info=True
+                )
         with self._lock:
             for reader, _ in self._cached.values():
                 reader.close()

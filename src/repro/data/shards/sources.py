@@ -49,7 +49,17 @@ import urllib.parse
 
 class SourceUnavailable(OSError):
     """A fetch failed in a way that may succeed on retry (5xx, dead socket,
-    timeout).  Distinct from ``FileNotFoundError``, which is permanent."""
+    timeout).  Distinct from ``FileNotFoundError``, which is permanent.
+
+    ``retry_after`` carries the server's ``Retry-After`` hint (seconds)
+    when one was sent — admission-controlled 429s and load-shedding 503s
+    use it to tell clients exactly how long to back off.  ``None`` means
+    the server offered no hint and ordinary backoff applies.
+    """
+
+    def __init__(self, *args, retry_after: float | None = None):
+        super().__init__(*args)
+        self.retry_after = retry_after
 
 
 class RangeNotSupported(Exception):
@@ -190,6 +200,20 @@ class HttpShardSource:
             return resp, body
         raise AssertionError("unreachable")
 
+    @staticmethod
+    def _retry_after(resp) -> float | None:
+        """Parse a numeric ``Retry-After`` on throttling responses (429 /
+        503); anything unparsable is treated as absent."""
+        if resp.status not in (429, 503):
+            return None
+        raw = resp.headers.get("Retry-After")
+        if raw is None:
+            return None
+        try:
+            return max(0.0, float(raw))
+        except ValueError:
+            return None
+
     # -- RemoteShardSource protocol ----------------------------------------
     def fetch(self, name: str) -> bytes:
         resp, body = self._request(name, {})
@@ -197,7 +221,8 @@ class HttpShardSource:
             raise FileNotFoundError(f"{self.root_url}/{name}: 404")
         if resp.status != 200:
             raise SourceUnavailable(
-                f"{self.root_url}/{name}: HTTP {resp.status} {resp.reason}"
+                f"{self.root_url}/{name}: HTTP {resp.status} {resp.reason}",
+                retry_after=self._retry_after(resp),
             )
         with self._lock:
             self.fetches += 1
@@ -232,7 +257,8 @@ class HttpShardSource:
             )
         else:
             raise SourceUnavailable(
-                f"{self.root_url}/{name}: HTTP {resp.status} {resp.reason}"
+                f"{self.root_url}/{name}: HTTP {resp.status} {resp.reason}",
+                retry_after=self._retry_after(resp),
             )
         with self._lock:
             self.range_fetches += 1
@@ -285,6 +311,18 @@ class RetryingSource:
     never changes what the prefetcher's protocol sniffing sees.
     ``RangeNotSupported`` is neither an error nor retryable (the body
     already arrived) — it propagates untouched.
+
+    Two admission/deadline knobs (elastic-fleet PR):
+
+    * ``max_elapsed_s`` — a **total** budget per logical call, attempts +
+      sleeps included.  A dead origin then fails loudly in bounded time
+      instead of silently burning the full retry ladder per fetch: when
+      the next backoff sleep would cross the budget, the last error is
+      re-raised immediately (counted in ``deadline_exhausted``).
+    * a server's ``Retry-After`` hint (``SourceUnavailable.retry_after``,
+      set on 429/503) **overrides** exponential backoff when it is
+      longer — quota throttling waits exactly as told rather than
+      hammering a server that already said when to come back.
     """
 
     def __init__(
@@ -299,9 +337,13 @@ class RetryingSource:
         no_retry: tuple = (FileNotFoundError,),
         sleep=time.sleep,
         rng: random.Random | None = None,
+        max_elapsed_s: float | None = None,
+        clock=time.monotonic,
     ):
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if max_elapsed_s is not None and max_elapsed_s <= 0:
+            raise ValueError("max_elapsed_s must be > 0 seconds")
         self.inner = inner
         self.max_retries = max_retries
         self.base_delay_s = base_delay_s
@@ -309,11 +351,15 @@ class RetryingSource:
         self.jitter = jitter
         self.retry_on = retry_on
         self.no_retry = no_retry
+        self.max_elapsed_s = max_elapsed_s
+        self._clock = clock
         self._sleep = sleep
         self._rng = rng or random.Random()
         self._lock = threading.Lock()
         self.errors = 0
         self.retries = 0
+        self.deadline_exhausted = 0  # calls cut short by max_elapsed_s
+        self.throttled = 0  # sleeps stretched by a Retry-After hint
         # expose fetch_range only when the inner source supports it, so
         # `hasattr(source, "fetch_range")` keeps answering for the wrapped
         # stack exactly what it would for the bare backend
@@ -322,6 +368,7 @@ class RetryingSource:
 
     def _call(self, fn, args):
         delay = self.base_delay_s
+        t0 = self._clock()
         for attempt in range(self.max_retries + 1):
             try:
                 return fn(*args)
@@ -329,17 +376,32 @@ class RetryingSource:
                 with self._lock:
                     self.errors += 1
                 raise
-            except self.retry_on:
+            except self.retry_on as e:
                 with self._lock:
                     self.errors += 1
                 if attempt == self.max_retries:
                     raise
+                sleep_s = min(delay, self.max_delay_s) * (
+                    1.0 + self.jitter * self._rng.random()
+                )
+                hint = getattr(e, "retry_after", None)
+                if hint is not None and hint > sleep_s:
+                    # the server said exactly when to come back: honor it
+                    sleep_s = hint
+                    with self._lock:
+                        self.throttled += 1
+                if (
+                    self.max_elapsed_s is not None
+                    and (self._clock() - t0) + sleep_s > self.max_elapsed_s
+                ):
+                    # the budget cannot cover another attempt: fail loudly
+                    # NOW instead of sleeping past the deadline
+                    with self._lock:
+                        self.deadline_exhausted += 1
+                    raise
                 with self._lock:
                     self.retries += 1
-                self._sleep(
-                    min(delay, self.max_delay_s)
-                    * (1.0 + self.jitter * self._rng.random())
-                )
+                self._sleep(sleep_s)
                 delay *= 2
         raise AssertionError("unreachable")
 
@@ -361,6 +423,8 @@ class RetryingSource:
         with self._lock:
             out["errors"] = self.errors
             out["retries"] = self.retries
+            out["deadline_exhausted"] = self.deadline_exhausted
+            out["throttled"] = self.throttled
         return out
 
     def close(self) -> None:

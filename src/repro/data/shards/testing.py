@@ -43,6 +43,14 @@ Telemetry: pass ``metrics=`` (a ``core.metrics.MetricsExporter``) to mount
 ``GET /metrics`` on the same port — Prometheus text scrapes ride the shard
 port, and deliberately bypass the request counters and chaos faults so a
 scrape never perturbs a test's assertions or consumes a fault budget.
+
+Admission control: pass ``admission=`` (a
+``membership.AdmissionController``) to gate requests the way the
+production peer tier does — a request over the max-inflight cap, or a
+body that would bust its tenant's (``X-Tenant`` header) token-bucket
+quota, answers a structured ``429`` + ``Retry-After`` instead of data.
+The origin fixture gets this so the admission path can be exercised and
+benchmarked without a peer fleet.
 """
 
 from __future__ import annotations
@@ -58,6 +66,7 @@ import time
 import urllib.parse
 
 from ...core.metrics import CONTENT_TYPE_LATEST as _METRICS_CONTENT_TYPE
+from .membership import TENANT_HEADER
 
 _RANGE_RE = re.compile(r"bytes=(\d+)-(\d+)?$")
 
@@ -128,6 +137,34 @@ class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
                 {"Content-Type": _METRICS_CONTENT_TYPE},
             )
             return
+        adm = srv.admission
+        if adm is not None and not adm.start_request():
+            # over the inflight cap: structured throttle, never a hang
+            self._send(
+                429, b"at capacity", {"Retry-After": f"{adm.retry_wait_s:.3f}"}
+            )
+            return
+        try:
+            self._serve_checked()
+        finally:
+            if adm is not None:
+                adm.end_request()
+
+    def _admit(self, nbytes: int) -> bool:
+        """Tenant quota gate just before a body send; False means a 429 +
+        Retry-After already went out."""
+        adm = self.server.admission
+        if adm is None:
+            return True
+        tenant = self.headers.get(TENANT_HEADER, "default")
+        wait = adm.admit(tenant, nbytes)
+        if wait is None:
+            return True
+        self._send(429, b"over quota", {"Retry-After": f"{wait:.3f}"})
+        return False
+
+    def _serve_checked(self) -> None:
+        srv = self.server
         with srv.lock:
             srv.requests += 1
             fail = srv.fail_next > 0
@@ -176,11 +213,15 @@ class _ShardRequestHandler(http.server.BaseHTTPRequestHandler):
                 end = min(end, len(data) - 1)
                 body = data[start : end + 1]
                 extra = {"Content-Range": f"bytes {start}-{end}/{len(data)}"}
+                if not self._admit(len(body)):
+                    return
                 if truncate:
                     self._send_truncated(206, body, extra)
                 else:
                     self._send(206, body, extra)
                 return
+        if not self._admit(len(data)):
+            return
         if truncate:
             self._send_truncated(200, data, None)
         else:
@@ -202,11 +243,14 @@ class ShardHTTPServer(http.server.ThreadingHTTPServer):
         support_ranges: bool = True,
         chaos_seed: int = 0,
         metrics=None,
+        admission=None,
     ):
         self.root = pathlib.Path(root).resolve()
         self.support_ranges = support_ranges
         # optional core.metrics.MetricsExporter mounted at GET /metrics
         self.metrics = metrics
+        # optional membership.AdmissionController gating every request
+        self.admission = admission
         self.lock = threading.Lock()
         self.requests = 0
         self.bytes_served = 0
@@ -246,12 +290,13 @@ def serve_shards(
     support_ranges: bool = True,
     chaos_seed: int = 0,
     metrics=None,
+    admission=None,
 ):
     """Context manager: serve ``root`` on a loopback port; yields the server
     (use ``server.url`` as an ``HttpShardSource`` root)."""
     server = ShardHTTPServer(
         root, support_ranges=support_ranges, chaos_seed=chaos_seed,
-        metrics=metrics,
+        metrics=metrics, admission=admission,
     )
     thread = threading.Thread(
         target=server.serve_forever, name="shard-http", daemon=True
